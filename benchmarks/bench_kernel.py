@@ -1,0 +1,44 @@
+"""Paper Fig. 8/13/14 analog: the Pallas kernel on the TPU roofline.
+
+No TPU in this container, so kernel quality is assessed structurally:
+traffic per iteration from the analytic model validated against
+cost_analysis of the interpret-mode jnp semantics, projected onto v5e
+(819 GB/s HBM): projected_time = bytes / BW. Block-shape sweep reports the
+VMEM working set per grid step (the quantity that must stay under ~16 MB
+double-buffered) — the TPU analog of the paper's Tx/Ny table.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from benchmarks.common import emit
+
+HBM_BW = 819e9
+SIZES = [(4096, 4096), (10240, 10240), (20480, 20480)]
+
+
+def run():
+    for M, N in SIZES:
+        el = M * N
+        for name, passes_r, passes_w, dtype_b in [
+            ("pot_baseline", 4, 2, 4),
+            ("mapuot_fused", 1, 1, 4),
+            ("mapuot_fused_bf16", 1, 1, 2),
+            ("uv_fused", 1, 0, 4),
+            ("uv_fused_bf16", 1, 0, 2),
+        ]:
+            traffic = (passes_r + passes_w) * el * dtype_b
+            t = traffic / HBM_BW
+            base = 6 * el * 4 / HBM_BW
+            emit(f"kernel_{name}_{M}x{N}", t * 1e6,
+                 f"v5e_projected_speedup={base / t:.2f}x_"
+                 f"traffic={traffic / 1e9:.2f}GB")
+
+    # block_m sweep (paper Fig. 8 analog): VMEM working set per grid step
+    M, N = 10240, 10240
+    for bm in (8, 32, 128, 256, 512):
+        vmem = 2 * bm * N * 4 + 2 * N * 4  # in+out tile (dbl-buf) + vectors
+        note = "fits" if vmem < 64 * 2**20 else "OVERFLOWS"
+        emit(f"kernel_blocksweep_bm{bm}_{M}x{N}", vmem / 1024,
+             f"vmem_KiB_per_step_{note}_auto={ops.pick_block_m(M, N)}")

@@ -1,0 +1,55 @@
+"""Paper Fig. 11 analog: memory traffic (the cache-miss proxy on TPU).
+
+cost_analysis 'bytes accessed' of one compiled iteration, baseline vs
+MAP-UOT vs u/v-fused — the architectural quantity the paper's cache-miss
+reductions come from. Also checks the analytic model (6MN/2MN/1MN elements).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import UOTConfig
+from repro.core.problem import rescale_factors
+from repro.core.sinkhorn_fused import fused_iteration
+from repro.core.sinkhorn_uv import uv_fused_iteration
+from benchmarks.common import make_problem, emit
+
+SIZES = [(1024, 1024), (4096, 4096), (10240, 10240)]
+
+
+def _bytes(fn, *args):
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    return float(c.get("bytes accessed", 0.0))
+
+
+def run():
+    fi = 0.95
+    for M, N in SIZES:
+        K, a, b = make_problem(M, N)
+        colsum = K.sum(0)
+
+        def baseline_iter(A, a, b):
+            A = A * rescale_factors(b, A.sum(0), fi)[None, :]
+            A = A * rescale_factors(a, A.sum(1), fi)[:, None]
+            return A
+
+        def fused_iter(A, colsum, a, b):
+            return fused_iteration(A, colsum, a, b, fi)[:2]
+
+        def uv_iter(K, v, a, b):
+            return uv_fused_iteration(K, v, a, b, fi)
+
+        v = jnp.ones((N,), jnp.float32)
+        b_base = _bytes(baseline_iter, K, a, b)
+        b_fused = _bytes(fused_iter, K, colsum, a, b)
+        b_uv = _bytes(uv_iter, K, v, a, b)
+        ideal_base = 6 * M * N * 4
+        ideal_fused = 2 * M * N * 4
+        emit(f"traffic_baseline_{M}x{N}", b_base / 1e3,
+             f"bytes={b_base:.3g}_model={ideal_base:.3g}")
+        emit(f"traffic_mapuot_{M}x{N}", b_fused / 1e3,
+             f"bytes={b_fused:.3g}_model={ideal_fused:.3g}_"
+             f"reduction={b_base / b_fused:.2f}x")
+        emit(f"traffic_uvfused_{M}x{N}", b_uv / 1e3,
+             f"bytes={b_uv:.3g}_reduction={b_base / b_uv:.2f}x")

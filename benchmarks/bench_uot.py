@@ -1,0 +1,34 @@
+"""Paper Fig. 9/10 analog: UOT solver wall time, fused vs 4-pass baseline.
+
+This container is a single CPU core, so wall-clock here measures the XLA:CPU
+execution of both schedules (the paper's single-threaded Figure 9 setting);
+the TPU projection lives in bench_kernel (roofline-model based).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import (UOTConfig, sinkhorn_uot_baseline, sinkhorn_uot_fused,
+                        sinkhorn_uot_uv_fused)
+from benchmarks.common import make_problem, time_fn, emit
+
+SIZES = [(1024, 1024), (2048, 2048), (4096, 4096), (1024, 8192)]
+ITERS = 20
+
+
+def run():
+    cfg = UOTConfig(reg=0.05, reg_m=1.0, num_iters=ITERS)
+    for M, N in SIZES:
+        K, a, b = make_problem(M, N)
+        base = jax.jit(lambda K, a, b: sinkhorn_uot_baseline(K, a, b, cfg)[0])
+        fused = jax.jit(lambda K, a, b: sinkhorn_uot_fused(K, a, b, cfg)[0])
+        uv = jax.jit(lambda K, a, b: sinkhorn_uot_uv_fused(K, a, b, cfg)[0])
+        t_base = time_fn(base, K, a, b)
+        t_fused = time_fn(fused, K, a, b)
+        t_uv = time_fn(uv, K, a, b)
+        emit(f"uot_baseline_{M}x{N}", t_base / ITERS * 1e6,
+             f"iters={ITERS}")
+        emit(f"uot_mapuot_{M}x{N}", t_fused / ITERS * 1e6,
+             f"speedup={t_base / t_fused:.2f}x_vs_POT")
+        emit(f"uot_uvfused_{M}x{N}", t_uv / ITERS * 1e6,
+             f"speedup={t_base / t_uv:.2f}x_vs_POT(beyond-paper)")

@@ -1,0 +1,34 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_problem(M, N, reg=0.05, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    C = rng.uniform(0, 1, size=(M, N)).astype(np.float32)
+    a = rng.uniform(0.5, 1.5, size=M).astype(np.float32)
+    b = rng.uniform(0.5, 1.5, size=N).astype(np.float32)
+    a, b = a / a.sum(), b / b.sum() * 1.2
+    K = np.exp(-C / reg) * (a[:, None] * b[None, :])
+    return (jnp.asarray(K, dtype), jnp.asarray(a), jnp.asarray(b))
+
+
+def time_fn(fn, *args, warmup=1, iters=3):
+    """Median wall time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+  bench_uot          -> Fig 9/10 (CPU single/multi-thread performance)
+  bench_traffic      -> Fig 11  (cache misses -> HBM traffic)
+  bench_kernel       -> Fig 8/13/14 (GPU tiling/perf/throughput -> TPU roofline)
+  bench_memory       -> Fig 15  (peak memory consumption)
+  bench_distributed  -> Fig 16  (Tianhe-1 scaling -> pod scaling)
+  bench_application  -> Fig 17  (color-transfer application)
+  bench_moe_router   -> beyond-paper (Sinkhorn-UOT MoE routing)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_uot, bench_traffic, bench_kernel,
+                            bench_memory, bench_distributed,
+                            bench_application, bench_moe_router)
+    mods = [bench_uot, bench_traffic, bench_kernel, bench_memory,
+            bench_distributed, bench_application, bench_moe_router]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in mods:
+        try:
+            mod.run()
+        except Exception:
+            failed += 1
+            print(f"{mod.__name__},-1,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: solve an unbalanced optimal transport problem with MAP-UOT.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (UOTConfig, gibbs_kernel, marginal_error,
+                        sinkhorn_uot_baseline, sinkhorn_uot_fused)
+from repro.core.applications import pairwise_sq_dists
+from repro.kernels import ops
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # two point clouds with unequal masses -> a genuinely unbalanced problem
+    X = rng.normal(size=(512, 2)).astype(np.float32)
+    Y = rng.normal(size=(384, 2)).astype(np.float32) + 1.0
+    a = jnp.full((512,), 1.0 / 512)
+    b = jnp.full((384,), 1.3 / 384)
+
+    C = pairwise_sq_dists(jnp.asarray(X), jnp.asarray(Y))
+    C = C / C.max()
+    cfg = UOTConfig(reg=0.05, reg_m=1.0, num_iters=200)
+    A0 = gibbs_kernel(C, cfg.reg) * (a[:, None] * b[None, :])
+
+    # 1) POT-style 4-pass baseline
+    P_base, _ = sinkhorn_uot_baseline(A0, a, b, cfg)
+    # 2) MAP-UOT fused (paper Algorithm 1) — identical iterates, 3x less HBM
+    P_fused, stats = sinkhorn_uot_fused(A0, a, b, cfg)
+    # 3) the Pallas TPU kernel (interpret mode on CPU)
+    P_kernel, _ = ops.solve_fused(A0, a, b, cfg)
+
+    print("max |baseline - fused|:", float(jnp.abs(P_base - P_fused).max()))
+    print("max |fused - kernel|  :", float(jnp.abs(P_fused - P_kernel).max()))
+    print("coupling mass:", float(P_fused.sum()),
+          " (marginal masses: 1.0 / 1.3)")
+    print("transport cost <C,P>:", float((C * P_fused).sum()))
+    print("balanced-sense marginal error:",
+          float(marginal_error(P_fused, a, b)))
+
+
+if __name__ == "__main__":
+    main()

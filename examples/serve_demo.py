@@ -1,0 +1,37 @@
+"""Batched serving demo: prefill + continuous greedy decode with KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.model import build_model
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_arch("granite-3-2b"),
+        num_layers=4, d_model=256, num_heads=8, num_kv_heads=4, head_dim=32,
+        d_ff=512, vocab_size=2048, loss_chunks=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    engine = ServeEngine(model, params, batch_size=4, cache_len=128)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+               for _ in range(4)]
+    outs = engine.generate(prompts, max_new_tokens=24)
+    for i, o in enumerate(outs):
+        print(f"request {i}: prompt[:6]={prompts[i][:6].tolist()} "
+              f"-> generated {o[:12].tolist()}...")
+
+    tps = engine.throughput_probe(steps=16, prompt_len=16)
+    print(f"\ndecode throughput (batch=4, CPU): {tps:.1f} tokens/s")
+
+
+if __name__ == "__main__":
+    main()

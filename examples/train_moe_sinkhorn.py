@@ -1,0 +1,58 @@
+"""End-to-end driver: train a ~100M-param MoE LM with the Sinkhorn-UOT
+router for a few hundred steps on CPU, with checkpointing + fault-tolerant
+trainer. The paper's technique (MAP-UOT fused iteration) runs INSIDE the
+router of every MoE layer.
+
+Run:  PYTHONPATH=src python examples/train_moe_sinkhorn.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.models.model import build_model
+from repro.optim import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--router", default="sinkhorn",
+                    choices=["sinkhorn", "topk"])
+    ap.add_argument("--ckpt", default="/tmp/repro_moe_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-param olmoe-family config (same block structure, reduced dims)
+    cfg = dataclasses.replace(
+        get_arch("olmoe-1b-7b"),
+        num_layers=4, d_model=256, num_heads=8, num_kv_heads=8, head_dim=32,
+        d_ff=512, num_experts=8, top_k=2, vocab_size=2048,
+        router=args.router, capacity_factor=2.0, loss_chunks=2,
+        gla_chunk=32)
+    model = build_model(cfg)
+    n = cfg.param_count()
+    print(f"model: olmoe-family, {n / 1e6:.1f}M params, router={cfg.router}")
+
+    pipe = SyntheticTokenPipeline(cfg, seq_len=128, global_batch=8)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                         ckpt_dir=args.ckpt, warmup=20, log_every=20)
+    trainer = Trainer(model, pipe, OptConfig(lr=3e-4), tcfg)
+    state = trainer.run(jax.random.PRNGKey(0))
+
+    log = trainer.metrics_log
+    print(f"\nstep  loss    aux     lr_scale  sec")
+    for rec in log:
+        print(f"{rec['step']:4d}  {rec['loss']:.4f}  {rec['aux']:.4f}  "
+          f"{rec['lr_scale']:.3f}     {rec['sec']:.2f}")
+    first, last = log[0]["loss"], log[-1]["loss"]
+    print(f"\nloss {first:.4f} -> {last:.4f} "
+          f"({'DECREASED' if last < first else 'did not decrease'}) "
+          f"over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

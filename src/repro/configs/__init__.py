@@ -1,0 +1,6 @@
+"""Architecture configs (assigned pool) + shape cells + registry."""
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shapes_for
+from repro.configs.registry import ARCHS, get_arch, smoke_config, SMOKE_SHAPE
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shapes_for", "ARCHS",
+           "get_arch", "smoke_config", "SMOKE_SHAPE"]

@@ -1,0 +1,131 @@
+"""Model / shape configuration dataclasses."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    router: str = "topk"        # topk | sinkhorn  (sinkhorn = paper's UOT)
+    capacity_factor: float = 1.25
+    sinkhorn_iters: int = 4
+    sinkhorn_fi: float = 0.7
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64      # mamba2 head dim
+    slstm_every: int = 0        # xlstm: every k-th layer is sLSTM (0 = none)
+    attn_every: int = 0         # zamba2: shared attn applied every k layers
+    gla_chunk: int = 64
+
+    # --- modality (vlm / audio) ---
+    num_codebooks: int = 0      # musicgen output heads
+    num_image_tokens: int = 0   # llava: prefix positions fed by image embeds
+
+    # --- attention impl (hillclimb lever; see EXPERIMENTS.md section Perf) ---
+    attn_impl: str = "naive"     # naive (materialized scores) | flash
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+
+    # --- common ---
+    mlp_gated: bool = True       # SwiGLU (3 matmuls) vs GELU MLP (2 matmuls)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    sliding_window: int = 0     # used by hybrid attn blocks at 500k
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots (save matmul outputs)
+    loss_matmul_dtype: str = "f32"  # f32 | bf16 (head matmul; lse stays f32)
+    scan_layers: bool = True
+    loss_chunks: int = 8
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def ssm_heads(self) -> int:
+        # mamba2 d_inner = 2 * d_model, split into heads of ssm_head_dim
+        return (2 * self.d_model) // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once)."""
+        d, ff, L = self.d_model, self.d_ff, self.num_layers
+        H, kvH, hd = self.num_heads, self.num_kv_heads, self.hd
+        emb = self.padded_vocab * d
+        head = d * self.padded_vocab * max(1, self.num_codebooks or 1)
+        per_layer = 0
+        mlp_mats = 3 if self.mlp_gated else 2
+        if self.family in ("dense", "moe", "vlm", "audio"):
+            attn = d * H * hd + 2 * d * kvH * hd + H * hd * d
+            if self.family == "moe":
+                ffp = self.num_experts * 3 * d * ff + d * self.num_experts
+            else:
+                ffp = mlp_mats * d * ff
+            per_layer = attn + ffp + 2 * d
+            total = emb + head + L * per_layer
+        elif self.family == "ssm":   # xlstm: q,k,v,gate,out projections
+            m = 5 * d * H * hd + 2 * d * H + d
+            total = emb + head + L * m
+        elif self.family == "hybrid":  # zamba2
+            di = 2 * d
+            mamba = d * di * 2 + d * (di + 2 * self.ssm_state) + di * d
+            n_attn = L // max(self.attn_every, 1)
+            attn = d * H * hd + 2 * d * kvH * hd + H * hd * d + 3 * d * ff
+            total = emb + head + L * mamba + attn  # attn params SHARED
+        else:
+            total = emb + head
+        return int(total)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+# long_500k requires sub-quadratic decode; only SSM/hybrid archs run it
+# (DESIGN.md section 6).
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def shapes_for(cfg: ModelConfig) -> Tuple[str, ...]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in SUBQUADRATIC_FAMILIES:
+        names.append("long_500k")
+    return tuple(names)

@@ -1,0 +1,13 @@
+"""granite-34b — dense code model, MQA (kv=1).
+[arXiv:2405.04324; hf]
+
+GPT-BigCode lineage: d_ff = 4*d with an ungated GELU MLP (2 matmuls) —
+that is what lands the model at its 34B nameplate (SwiGLU at this d_ff
+would be 47B).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b", family="dense", num_layers=88, d_model=6144,
+    num_heads=48, num_kv_heads=1, d_ff=24576, vocab_size=49152,
+    mlp_gated=False)

@@ -1,0 +1,8 @@
+"""llava-next-34b — VLM backbone (anyres frontend stubbed).
+[hf:llava-hf/llava-v1.6-34b-hf; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="vlm", num_layers=60, d_model=7168,
+    num_heads=56, num_kv_heads=8, d_ff=20480, vocab_size=64000,
+    num_image_tokens=1152)

@@ -1,0 +1,13 @@
+"""olmoe-1b-7b — MoE, 64 experts top-8.
+[arXiv:2409.02060; hf]
+
+router="sinkhorn" turns on the paper-technique integration (MAP-UOT fused
+iterations balance the token->expert assignment); "topk" matches the
+published checkpoint behaviour.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe", num_layers=16, d_model=2048,
+    num_heads=16, num_kv_heads=16, d_ff=1024, vocab_size=50304,
+    num_experts=64, top_k=8, router="sinkhorn")

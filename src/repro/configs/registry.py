@@ -1,0 +1,60 @@
+"""Architecture registry: the 10 assigned configs + reduced smoke variants.
+
+One module per architecture under ``repro.configs`` holds the exact assigned
+dims (sources cited there); ``--arch <id>`` resolves here.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig, shapes_for
+from repro.configs.granite_34b import CONFIG as GRANITE_34B
+from repro.configs.phi4_mini_3_8b import CONFIG as PHI4_MINI_3_8B
+from repro.configs.smollm_360m import CONFIG as SMOLLM_360M
+from repro.configs.granite_3_2b import CONFIG as GRANITE_3_2B
+from repro.configs.olmoe_1b_7b import CONFIG as OLMOE_1B_7B
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as MOONSHOT_V1_16B
+from repro.configs.xlstm_350m import CONFIG as XLSTM_350M
+from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
+from repro.configs.llava_next_34b import CONFIG as LLAVA_NEXT_34B
+from repro.configs.musicgen_medium import CONFIG as MUSICGEN_MEDIUM
+
+ARCHS: dict[str, ModelConfig] = {c.name: c for c in [
+    GRANITE_34B, PHI4_MINI_3_8B, SMOLLM_360M, GRANITE_3_2B, OLMOE_1B_7B,
+    MOONSHOT_V1_16B, XLSTM_350M, ZAMBA2_7B, LLAVA_NEXT_34B, MUSICGEN_MEDIUM,
+]}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    reduced = dict(
+        num_layers=max(2, (cfg.attn_every or 2)),
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=512,
+        head_dim=16,
+        gla_chunk=8,
+        loss_chunks=2,
+    )
+    if cfg.family == "moe":
+        # ample capacity so smoke tests are drop-free (deterministic refs)
+        reduced.update(num_experts=4, top_k=2, capacity_factor=4.0)
+    if cfg.family == "ssm":
+        reduced.update(slstm_every=2, num_layers=4)
+    if cfg.family == "hybrid":
+        reduced.update(attn_every=2, num_layers=5, ssm_state=8,
+                       ssm_head_dim=16)
+    if cfg.family == "vlm":
+        reduced.update(num_image_tokens=8)
+    return dataclasses.replace(cfg, **reduced)
+
+
+SMOKE_SHAPE = ShapeConfig("smoke", "train", 32, 2)

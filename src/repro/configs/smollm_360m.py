@@ -1,0 +1,7 @@
+"""smollm-360m — small llama-arch dense model.
+[hf:HuggingFaceTB/SmolLM-360M; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m", family="dense", num_layers=32, d_model=960,
+    num_heads=15, num_kv_heads=5, d_ff=2560, vocab_size=49152)

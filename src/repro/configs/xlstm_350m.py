@@ -1,0 +1,7 @@
+"""xlstm-350m — mLSTM + sLSTM blocks (7:1), d_ff=0.
+[arXiv:2405.04517; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m", family="ssm", num_layers=24, d_model=1024,
+    num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=50304, slstm_every=8)

@@ -1,0 +1,12 @@
+"""zamba2-7b — Mamba2 backbone + shared attention block.
+[arXiv:2411.15242; unverified]
+
+Adaptation (DESIGN.md section 6): shared attn applied every 6 mamba layers;
+sliding_window bounds its KV at the 500k decode cell.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid", num_layers=81, d_model=3584,
+    num_heads=32, num_kv_heads=32, d_ff=14336, vocab_size=32000,
+    ssm_state=64, ssm_head_dim=64, attn_every=6, sliding_window=4096)

@@ -1,0 +1,61 @@
+"""End-to-end UOT applications (paper Section 5.5: domain adaptation).
+
+``color_transfer`` reproduces the paper's end-to-end benchmark: normalize the
+color palette of a source image toward a target image by solving UOT between
+the two color clouds and applying the barycentric map. Images are synthetic
+here (no dataset in the container) but the compute path is the real one and
+its runtime is dominated by the UOT solve, matching the paper's Figure 17.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import UOTConfig, gibbs_kernel
+from repro.core.sinkhorn_fused import sinkhorn_uot_fused
+from repro.core.sinkhorn_baseline import sinkhorn_uot_baseline
+
+
+def pairwise_sq_dists(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """||x_i - y_j||^2 cost matrix, shape (M, N)."""
+    x2 = jnp.sum(X * X, axis=1)[:, None]
+    y2 = jnp.sum(Y * Y, axis=1)[None, :]
+    return jnp.maximum(x2 + y2 - 2.0 * (X @ Y.T), 0.0)
+
+
+def color_transfer(src_colors: jax.Array, dst_colors: jax.Array,
+                   cfg: UOTConfig | None = None, fused: bool = True):
+    """UOT color transfer between two (n, 3) color clouds.
+
+    Returns (mapped_src_colors, coupling). Uniform marginals; cost is
+    squared Euclidean in RGB; the barycentric projection maps each source
+    color to the coupling-weighted mean of target colors.
+    """
+    cfg = cfg or UOTConfig(reg=0.05, reg_m=10.0, num_iters=200)
+    M, N = src_colors.shape[0], dst_colors.shape[0]
+    a = jnp.full((M,), 1.0 / M)
+    b = jnp.full((N,), 1.0 / N)
+    C = pairwise_sq_dists(src_colors, dst_colors)
+    C = C / jnp.max(C)
+    A0 = gibbs_kernel(C, cfg.reg)
+    # Scale so initial mass matches marginal mass (standard POT practice).
+    A0 = A0 * (a[:, None] * b[None, :])
+    solver = sinkhorn_uot_fused if fused else sinkhorn_uot_baseline
+    P, _ = solver(A0, a, b, cfg)
+    rowsum = jnp.maximum(P.sum(axis=1, keepdims=True), 1e-30)
+    mapped = (P @ dst_colors) / rowsum
+    return mapped, P
+
+
+def wasserstein_distance(X: jax.Array, Y: jax.Array, a=None, b=None,
+                         cfg: UOTConfig | None = None):
+    """Entropic UOT 'distance' <C, P*> between point clouds (eval metric)."""
+    cfg = cfg or UOTConfig(reg=0.05, reg_m=1.0, num_iters=200)
+    M, N = X.shape[0], Y.shape[0]
+    a = jnp.full((M,), 1.0 / M) if a is None else a
+    b = jnp.full((N,), 1.0 / N) if b is None else b
+    C = pairwise_sq_dists(X, Y)
+    scale = jnp.max(C)
+    A0 = gibbs_kernel(C / scale, cfg.reg) * (a[:, None] * b[None, :])
+    P, _ = sinkhorn_uot_fused(A0, a, b, cfg)
+    return jnp.sum(P * C), P

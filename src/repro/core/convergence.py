@@ -1,0 +1,23 @@
+"""Convergence / diagnostic metrics for UOT solves."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def marginal_error(P: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """L1 marginal violation (balanced-sense diagnostic)."""
+    return jnp.sum(jnp.abs(P.sum(1) - a)) + jnp.sum(jnp.abs(P.sum(0) - b))
+
+
+def mass(P: jax.Array) -> jax.Array:
+    return jnp.sum(P)
+
+
+def factor_drift(target: jax.Array, sums: jax.Array, fi: float) -> jax.Array:
+    """max |(target/sums)^fi - 1| — the rescale-factor drift used as the
+    stopping criterion by the scaling-form solvers (a factor of exactly 1
+    means that rescale is a no-op, i.e. converged)."""
+    safe = jnp.where(sums > 0, sums, 1.0)
+    ratio = jnp.where(sums > 0, target / safe, 1.0)
+    return jnp.max(jnp.abs(jnp.power(ratio, fi) - 1.0))

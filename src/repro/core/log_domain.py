@@ -1,0 +1,54 @@
+"""Log-domain stabilized UOT solver (potentials space).
+
+For small ``reg`` the Gibbs kernel underflows in fp32; the standard fix is
+to iterate on dual potentials f, g:
+
+    f = fi * eps * (log a - logsumexp((g - C) / eps, axis=1))
+    g = fi * eps * (log b - logsumexp((f - C^T) / eps ... , axis=0))
+
+with eps = reg and fi = reg_m / (reg_m + reg). Coupling:
+P = exp((f[:,None] + g[None,:] - C) / eps).
+
+This path exists for numerical robustness (serving, tiny-eps analysis); the
+memory-optimized paths operate in linear space like the paper.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def sinkhorn_uot_log(C: jax.Array, a: jax.Array, b: jax.Array, cfg):
+    """Log-domain UOT. Returns (P, (f, g), stats)."""
+    eps = cfg.reg
+    fi = cfg.fi
+    M, N = C.shape
+    loga = jnp.log(jnp.maximum(a, 1e-38))
+    logb = jnp.log(jnp.maximum(b, 1e-38))
+    f0 = jnp.zeros((M,), jnp.float32)
+    g0 = jnp.zeros((N,), jnp.float32)
+
+    def body(carry):
+        f, g, it, _ = carry
+        f_new = fi * eps * (loga - logsumexp((g[None, :] - C) / eps, axis=1))
+        g_new = fi * eps * (logb - logsumexp((f_new[:, None] - C) / eps, axis=0))
+        err = jnp.max(jnp.abs(f_new - f))
+        return f_new, g_new, it + 1, err
+
+    if cfg.tol is None:
+        f, g, iters, err = jax.lax.fori_loop(
+            0, cfg.num_iters, lambda _, c: body(c),
+            (f0, g0, jnp.int32(0), jnp.float32(jnp.inf)))
+    else:
+        def cond(carry):
+            _, _, it, err = carry
+            return jnp.logical_and(it < cfg.num_iters, err > cfg.tol)
+        f, g, iters, err = jax.lax.while_loop(
+            cond, body, (f0, g0, jnp.int32(0), jnp.float32(jnp.inf)))
+
+    P = jnp.exp((f[:, None] + g[None, :] - C) / eps).astype(cfg.dtype)
+    return P, (f, g), {"iters": iters, "err": err}

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokenPipeline, make_batch_specs
+
+__all__ = ["SyntheticTokenPipeline", "make_batch_specs"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the MAP-UOT hot path.
+
+- ``uot_fused``: full fused iteration (col rescale + row rescale + colsum
+  accumulation) — one HBM read + one write per iteration. The paper's kernel.
+- ``uot_halfpass``: two half-fused passes with 2-D tiling for very wide
+  matrices (the paper's GPU part-2/part-4 split).
+- ``uot_uv_fused``: beyond-paper read-only pass in u/v-potential space.
+- ``ops``: padding/block-size/interpret handling + assembled solvers.
+- ``ref``: pure-jnp oracles.
+
+All kernels validate on CPU via ``interpret=True``; block shapes are
+(8k, 128m)-aligned for the TPU VPU.
+"""
+from repro.kernels import ops, ref, uot_fused, uot_halfpass, uot_uv_fused
+
+__all__ = ["ops", "ref", "uot_fused", "uot_halfpass", "uot_uv_fused"]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _safe_pow_ref(target, sums, fi: float):
+    safe = jnp.where(sums > 0, sums, 1.0)
+    ratio = jnp.where(sums > 0, target / safe, 1.0)
+    if fi == 1.0:
+        return ratio
+    return jnp.power(ratio, fi)
+
+
+def fused_iteration_ref(A, factor_col, a, *, fi: float):
+    """Oracle for kernels.uot_fused.fused_iteration."""
+    A = A.astype(jnp.float32)
+    A = A * factor_col.astype(jnp.float32)[None, :]
+    rowsum = A.sum(axis=1)
+    frow = _safe_pow_ref(a.astype(jnp.float32), rowsum, fi)
+    A = A * frow[:, None]
+    return A, A.sum(axis=0)
+
+
+def colsum_ref(A):
+    return A.astype(jnp.float32).sum(axis=0)
+
+
+def scale_rows_accum_cols_ref(A, frow):
+    out = A.astype(jnp.float32) * frow.astype(jnp.float32)[:, None]
+    return out, out.sum(axis=0)
+
+
+def scale_cols_accum_rows_ref(A, fcol):
+    out = A.astype(jnp.float32) * fcol.astype(jnp.float32)[None, :]
+    return out, out.sum(axis=1)
+
+
+def uv_iteration_ref(K, v, a, *, fi: float):
+    """Oracle for kernels.uot_uv_fused.uv_iteration."""
+    K = K.astype(jnp.float32)
+    Kv = K @ v.astype(jnp.float32)
+    u = _safe_pow_ref(a.astype(jnp.float32), Kv, fi)
+    return u, K.T @ u
+
+
+def materialize_coupling_ref(K, u, v):
+    return (u.astype(jnp.float32)[:, None] * K.astype(jnp.float32)
+            * v.astype(jnp.float32)[None, :])

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init). Everything below is ordinary launch code.
+
+Per cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. eval_shapes the train state / serving params / decode cache
+     (ShapeDtypeStruct only — nothing is allocated);
+  3. jit's the step with in/out shardings from repro.parallel.sharding,
+     .lower(...).compile() — success proves the sharding config is coherent
+     (no shape mismatches, no unsupported collectives, partitionable);
+  4. records memory_analysis + cost_analysis + parsed collective bytes to
+     results/dryrun/<cell>.json (incremental: done cells are skipped).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single,multi [--out results/dryrun] [--force]
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_arch, shapes_for  # noqa: E402
+from repro.data.pipeline import make_batch_specs  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.model import build_model, cast_floats  # noqa: E402
+from repro.optim.adamw import OptConfig  # noqa: E402
+from repro.parallel import sharding as shd  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+from repro.optim.adamw import adamw_init  # noqa: E402
+
+
+def _named(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _analytic_bytes_per_dev(shapes, specs, mesh) -> int:
+    """Sharded storage bytes per device for a (shapes, specs) pytree pair."""
+    axis = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(s, spec):
+        n = int(np.prod(s.shape)) if s.shape else 1
+        denom = 1
+        for p in spec:
+            if p is None:
+                continue
+            for ax in (p if isinstance(p, tuple) else (p,)):
+                denom *= axis[ax]
+        return n * s.dtype.itemsize // max(denom, 1)
+
+    return sum(jax.tree.leaves(jax.tree.map(
+        one, shapes, specs, is_leaf=lambda x: isinstance(x, P))))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: pathlib.Path,
+             force: bool = False, act_spec: str = "default",
+             scan_layers: bool = False, overrides: dict | None = None,
+             serve_fsdp: bool = True, suffix: str = "") -> dict:
+    cell_id = f"{arch}__{shape_name}__{mesh_kind}"
+    if suffix:
+        cell_id = f"{cell_id}__{suffix}"
+    out_path = out_dir / f"{cell_id}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    # Unrolled layers by default: XLA's cost_analysis counts while-loop
+    # bodies ONCE, so the scanned form undercounts FLOPs/bytes/collectives
+    # by ~the layer count. Unrolling gives faithful roofline numbers (and is
+    # a stricter compile test); --scan restores the compact form.
+    cfg = dataclasses.replace(get_arch(arch), scan_layers=scan_layers,
+                              **(overrides or {}))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(mesh.devices.shape))
+    model = build_model(cfg)
+    rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+           "mesh": mesh_kind, "devices": n_dev, "status": "error",
+           "overrides": overrides or {}, "serve_fsdp": serve_fsdp}
+    t0 = time.time()
+    try:
+        params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        batch_shapes = make_batch_specs(cfg, shape)
+        # serve paths may drop FSDP (weights replicated over the data axis,
+        # TP-sharded only) — the serving-vs-training sharding hillclimb.
+        pspecs = shd.param_specs(cfg, params_shapes, mesh, fsdp=serve_fsdp)
+        bspecs = shd.batch_specs(cfg, batch_shapes, mesh)
+
+        dp = ("pod", "data") if mesh_kind == "multi" else ("data",)
+        act = None
+        if act_spec == "sp":
+            act = {"carry": P(dp, "model", None)}
+        elif act_spec == "cp":
+            # context-parallel attention: q-sequence over 'model'
+            act = {"attn_q": P(dp, None, "model", None)}
+
+        if shape.kind == "train":
+            step = make_train_step(model, OptConfig())
+            state_shapes = {
+                "params": params_shapes,
+                "opt": jax.eval_shape(adamw_init, params_shapes),
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            sspecs = shd.state_specs(cfg, state_shapes, mesh)
+            with mesh:
+                with shd.activation_ctx(act):
+                    lowered = jax.jit(
+                        step,
+                        in_shardings=(_named(mesh, sspecs),
+                                      _named(mesh, bspecs)),
+                        out_shardings=(_named(mesh, sspecs), None),
+                    ).lower(state_shapes, batch_shapes)
+                compiled = lowered.compile()
+            state_bytes = _analytic_bytes_per_dev(state_shapes, sspecs, mesh)
+        elif shape.kind == "prefill":
+            serve_shapes = jax.eval_shape(
+                lambda p: cast_floats(p, jnp.bfloat16), params_shapes)
+
+            def prefill_fn(p, b):
+                return model.prefill(p, b, cache_len=shape.seq_len)
+
+            with mesh:
+                with shd.activation_ctx(act):
+                    lowered = jax.jit(
+                        prefill_fn,
+                        in_shardings=(_named(mesh, pspecs),
+                                      _named(mesh, bspecs)),
+                    ).lower(serve_shapes, batch_shapes)
+                compiled = lowered.compile()
+            state_bytes = _analytic_bytes_per_dev(serve_shapes, pspecs, mesh)
+        else:  # decode
+            serve_shapes = jax.eval_shape(
+                lambda p: cast_floats(p, jnp.bfloat16), params_shapes)
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cspecs = shd.cache_specs(cfg, cache_shapes, mesh)
+
+            def decode_fn(p, cache, toks, idx):
+                return model.decode_step(p, cache, toks, idx)
+
+            tok_shape = batch_shapes["tokens"]
+            tok_spec = bspecs["tokens"]
+            with mesh:
+                lowered = jax.jit(
+                    decode_fn,
+                    in_shardings=(_named(mesh, pspecs), _named(mesh, cspecs),
+                                  NamedSharding(mesh, tok_spec), None),
+                    out_shardings=(None, _named(mesh, cspecs)),
+                ).lower(serve_shapes, cache_shapes, tok_shape,
+                        jax.ShapeDtypeStruct((), jnp.int32))
+                compiled = lowered.compile()
+            state_bytes = (_analytic_bytes_per_dev(serve_shapes, pspecs, mesh)
+                           + _analytic_bytes_per_dev(cache_shapes, cspecs,
+                                                     mesh))
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {k: int(getattr(mem, k)) for k in dir(mem)
+                     if k.endswith("size_in_bytes")} if mem else {}
+        except Exception:
+            mem_d = {}
+        hlo = compiled.as_text()
+        rr = roofline.analyze(cost, hlo, cfg, shape, num_devices=n_dev)
+        rec.update(status="ok",
+                   compile_s=round(time.time() - t0, 1),
+                   state_bytes_per_dev=int(state_bytes),
+                   memory_analysis=mem_d,
+                   roofline=rr,
+                   act_spec=act_spec)
+    except Exception as e:  # noqa: BLE001 — record, continue sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:],
+                   compile_s=round(time.time() - t0, 1))
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1, default=str))
+    status = rec["status"]
+    print(f"[{status:5s}] {cell_id}  ({rec['compile_s']}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--act-spec", default="default", choices=["default", "sp"])
+    ap.add_argument("--scan", action="store_true",
+                    help="scan-over-layers (fast compile, undercounted cost)")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    archs = sorted(ARCHS) if args.arch == "all" else args.arch.split(",")
+    meshes = args.mesh.split(",")
+
+    n_ok = n_err = 0
+    for arch in archs:
+        cfg = get_arch(arch)
+        cell_shapes = (shapes_for(cfg) if args.shape == "all"
+                       else args.shape.split(","))
+        for shape_name in cell_shapes:
+            if shape_name not in shapes_for(cfg):
+                print(f"[skip ] {arch}__{shape_name} (not in this arch's "
+                      "shape set; see DESIGN.md section 6)")
+                continue
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape_name, mesh_kind, out_dir,
+                               force=args.force, act_spec=args.act_spec,
+                               scan_layers=args.scan)
+                n_ok += rec["status"] == "ok"
+                n_err += rec["status"] != "ok"
+    print(f"done: {n_ok} ok, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

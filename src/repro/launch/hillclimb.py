@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Perf hillclimb: lower chosen (arch x shape) cells with variant configs and
+record the roofline deltas (EXPERIMENTS.md section Perf).
+
+The three chosen pairs (from the baseline table):
+  1. smollm-360m / train_4k    — worst roofline fraction (memory-bound on
+     materialized attention scores).
+  2. granite-3-2b / decode_32k — most collective-bound (training shardings
+     reused for serving FSDP-gathers the weights every token).
+  3. olmoe-1b-7b / train_4k    — paper-representative (Sinkhorn-UOT router
+     runs the MAP-UOT fused iteration inside every MoE layer).
+
+Usage: PYTHONPATH=src python -m repro.launch.hillclimb [--only smollm|granite|olmoe]
+"""
+import argparse      # noqa: E402
+import pathlib       # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = pathlib.Path("results/hillclimb")
+
+VARIANTS = {
+    "smollm": [
+        # (suffix, overrides, serve_fsdp, act_spec)
+        ("flash", {"attn_impl": "flash"}, True, "default"),
+        ("flash_cp", {"attn_impl": "flash"}, True, "cp"),
+        ("flash_cp_dots",
+         {"attn_impl": "flash", "remat_policy": "dots"}, True, "cp"),
+        ("flash_cp_dots_bf16loss",
+         {"attn_impl": "flash", "remat_policy": "dots",
+          "loss_matmul_dtype": "bf16"}, True, "cp"),
+    ],
+    "granite": [
+        ("nofsdp", {}, False, "default"),
+        ("nofsdp_bf16loss", {"loss_matmul_dtype": "bf16"}, False, "default"),
+    ],
+    "olmoe": [
+        ("topk", {"router": "topk"}, True, "default"),
+        ("flash_dots",
+         {"attn_impl": "flash", "remat_policy": "dots"}, True, "default"),
+        ("flash_dots_cap1",
+         {"attn_impl": "flash", "remat_policy": "dots",
+          "capacity_factor": 1.0}, True, "default"),
+    ],
+}
+
+CELLS = {
+    "smollm": ("smollm-360m", "train_4k"),
+    "granite": ("granite-3-2b", "decode_32k"),
+    "olmoe": ("olmoe-1b-7b", "train_4k"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    for key, (arch, shape) in CELLS.items():
+        if args.only and key != args.only:
+            continue
+        # ensure the unrolled baseline exists in results/dryrun
+        run_cell(arch, shape, "single", pathlib.Path("results/dryrun"),
+                 scan_layers=False)
+        for suffix, overrides, serve_fsdp, act_spec in VARIANTS[key]:
+            rec = run_cell(arch, shape, "single", OUT, force=args.force,
+                           scan_layers=False, overrides=overrides,
+                           serve_fsdp=serve_fsdp, suffix=suffix,
+                           act_spec=act_spec)
+            rr = rec.get("roofline", {})
+            if rec["status"] == "ok":
+                print(f"    -> {suffix}: comp={rr['t_comp_s']:.3f} "
+                      f"mem={rr['t_mem_s']:.3f} coll={rr['t_coll_s']:.3f} "
+                      f"bottleneck={rr['bottleneck']} "
+                      f"mfu_bound={rr.get('mfu_bound', 0):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh builders (functions — importing never touches jax device
+state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    ``data`` doubles as the FSDP axis; ``pod`` is pure DP across the DCI
+    (nothing in the sharding rules names the pod count — scaling to N pods
+    is a shape change here only).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,87 @@
+"""Generate EXPERIMENTS.md tables from results/dryrun*/ JSON records.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--dir results]
+Prints markdown to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def load(dirpath):
+    recs = {}
+    d = pathlib.Path(dirpath)
+    if not d.exists():
+        return recs
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        recs[r["cell"]] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def fmt_t(t):
+    if t >= 1:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t * 1e3:.1f}ms"
+    return f"{t * 1e6:.0f}us"
+
+
+def dryrun_table(scan_recs):
+    lines = ["| cell | mesh | devices | status | compile (s) | "
+             "state GiB/dev | collective ops |",
+             "|---|---|---|---|---|---|---|"]
+    for cell, r in sorted(scan_recs.items()):
+        coll = r.get("roofline", {}).get("collectives", {}).get("counts", {})
+        coll_s = " ".join(f"{k}:{v}" for k, v in sorted(coll.items())) or "-"
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {r['mesh']} | {r['devices']} "
+            f"| {r['status']} | {r.get('compile_s', '-')} "
+            f"| {fmt_bytes(r.get('state_bytes_per_dev'))} | {coll_s} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = ["| arch | shape | method | T_comp | T_mem | T_coll | "
+             "bottleneck | useful-FLOPs ratio | MFU bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for cell, r in sorted(recs.items()):
+        if r["status"] != "ok" or "roofline" not in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | ERROR: "
+                         f"{r.get('error', '?')[:60]} | | | | | |")
+            continue
+        rr = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('method', 'unrolled')} "
+            f"| {fmt_t(rr['t_comp_s'])} | {fmt_t(rr['t_mem_s'])} "
+            f"| {fmt_t(rr['t_coll_s'])} | {rr['bottleneck']} "
+            f"| {rr.get('useful_flops_ratio', 0):.3f} "
+            f"| {rr.get('mfu_bound', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results")
+    args = ap.parse_args()
+    base = pathlib.Path(args.dir)
+
+    scan = load(base / "dryrun_scan")
+    roof = load(base / "dryrun")
+
+    print("## Dry-run (compile proof, scanned form)\n")
+    print(dryrun_table(scan))
+    print("\n## Roofline (single-pod, unrolled/extrapolated cost)\n")
+    print(roofline_table(roof))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo substrate: dense GQA transformers, MoE (with Sinkhorn-UOT
+router), xLSTM, Mamba2 hybrids, VLM/audio backbones — pure functional JAX
+(param pytrees + apply fns), scan-over-layers + remat for compile scale."""

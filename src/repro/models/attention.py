@@ -1,0 +1,289 @@
+"""GQA attention: train / prefill / decode (KV cache), sliding window."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, normal_init
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e9
+
+
+def attention_init(key, d_model, num_heads, num_kv_heads, head_dim,
+                   dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "w_q": normal_init(kq, (d_model, num_heads * head_dim), dtype=dtype),
+        "w_k": normal_init(kk, (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "w_v": normal_init(kv, (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "w_o": normal_init(ko, (num_heads * head_dim, d_model), dtype=dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    B, T, _ = x.shape
+    return x.reshape(B, T, n, hd)
+
+
+def _repeat_kv(k, groups):
+    # (B, S, kvH, hd) -> (B, S, H, hd) by repeating each kv head
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _causal_mask(Tq, Tk, q_offset, window: int = 0):
+    """(Tq, Tk) additive mask. q position = q_offset + i; window 0 = full."""
+    qpos = q_offset + jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    ok = kpos <= qpos
+    if window:
+        ok = jnp.logical_and(ok, kpos > qpos - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_apply(params, x, *, num_heads, num_kv_heads, head_dim,
+                    rope_theta=10000.0, window: int = 0, positions=None,
+                    impl: str = "naive", q_chunk: int = 512,
+                    kv_chunk: int = 1024, unroll: bool = False):
+    """Full-sequence causal attention (training / prefill compute).
+
+    impl="naive": einsum path, materializes (B, H, T, T) scores — the
+    straightforward baseline (and what XLA does without a fused kernel).
+    impl="flash": chunked online-softmax (FlashAttention schedule in pure
+    jnp) — temporaries are (B, H, q_chunk, kv_chunk); the memory roofline
+    term drops by ~T/kv_chunk. ``unroll`` unrolls the chunk loops with
+    causal culling (used by the dry-run for faithful cost_analysis).
+    """
+    B, T, D = x.shape
+    q = _split_heads(x @ params["w_q"], num_heads, head_dim)
+    k = _split_heads(x @ params["w_k"], num_kv_heads, head_dim)
+    v = _split_heads(x @ params["w_v"], num_kv_heads, head_dim)
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    # GQA via grouped einsums — KV heads are NEVER repeated/materialized
+    # (for MQA archs like granite-34b the repeat would be a 48x KV blowup).
+    groups = num_heads // num_kv_heads
+
+    if impl == "flash":
+        out = _flash_attention(q, k, v, head_dim=head_dim, window=window,
+                               q_chunk=min(q_chunk, T),
+                               kv_chunk=min(kv_chunk, T), unroll=unroll,
+                               groups=groups)
+    else:
+        q5 = q.reshape(B, T, num_kv_heads, groups, head_dim)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", q5, k).astype(jnp.float32)
+        scores = scores / jnp.sqrt(head_dim).astype(jnp.float32)
+        scores = scores + _causal_mask(T, T, 0, window)[None, None, None]
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    out = out.reshape(B, T, num_heads * head_dim)
+    return out @ params["w_o"], (k, v)
+
+
+def _flash_attention(q, k, v, *, head_dim, window, q_chunk, kv_chunk,
+                     unroll, groups=1):
+    """Chunked online-softmax causal GQA attention (KV heads not repeated).
+
+    q: (B, T, H, hd); k,v: (B, T, kvH, hd) with H = kvH * groups."""
+    B, T, H, hd = q.shape
+    kvH = k.shape[2]
+    assert T % q_chunk == 0 and T % kv_chunk == 0, (T, q_chunk, kv_chunk)
+    nq, nk = T // q_chunk, T // kv_chunk
+    scale = 1.0 / jnp.sqrt(head_dim)
+    qt = q.transpose(0, 2, 1, 3)            # (B, H, T, hd)
+    # context parallelism: optionally shard the q sequence dim over 'model'
+    # (KV replicated) — the TP fallback when heads don't divide the axis.
+    qt = constrain(qt, "attn_q")
+    qt = qt.reshape(B, kvH, groups, T, hd)  # (B, kvH, g, T, hd)
+    kt = k.transpose(0, 2, 1, 3)            # (B, kvH, T, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    def kv_step(qi, q_blk, carry, ki):
+        acc, m, l = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(kt, ki * kv_chunk, kv_chunk, 2)
+        v_blk = jax.lax.dynamic_slice_in_dim(vt, ki * kv_chunk, kv_chunk, 2)
+        s = jnp.einsum("bkgqd,bksd->bkgqs", q_blk, k_blk).astype(jnp.float32)
+        s = s * scale
+        qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+        kpos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        ok = kpos <= qpos
+        if window:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bksd->bkgqd", p.astype(v_blk.dtype), v_blk).astype(jnp.float32)
+        return acc, m_new, l
+
+    def q_block(qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(qt, qi * q_chunk, q_chunk, 3)
+        acc0 = jnp.zeros((B, kvH, groups, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((B, kvH, groups, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, kvH, groups, q_chunk), jnp.float32)
+        # causal culling: kv chunks strictly above the diagonal are skipped
+        hi = ((qi + 1) * q_chunk + kv_chunk - 1) // kv_chunk
+        if unroll:
+            carry = (acc0, m0, l0)
+            for ki in range(min(hi, nk)):
+                carry = kv_step(qi, q_blk, carry, ki)
+            acc, m, l = carry
+        else:
+            def body(carry, ki):
+                return kv_step(qi, q_blk, carry, ki), None
+            (acc, m, l), _ = jax.lax.scan(
+                body, (acc0, m0, l0), jnp.arange(min(hi, nk)))
+        return (acc / jnp.maximum(l, 1e-30)[..., None])
+
+    out = jnp.concatenate([q_block(qi) for qi in range(nq)], axis=3)
+    out = out.reshape(B, H, T, hd)
+    out = constrain(out, "attn_q")
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, T, H, hd)
+
+
+def attention_prefill(params, x, cache_len, **kw):
+    """Prefill: run full attention and emit a right-padded KV cache."""
+    num_kv_heads = kw["num_kv_heads"]
+    head_dim = kw["head_dim"]
+    B, T, _ = x.shape
+    k = _split_heads(x @ params["w_k"], num_kv_heads, head_dim)
+    v = _split_heads(x @ params["w_v"], num_kv_heads, head_dim)
+    positions = jnp.arange(T)[None, :]
+    k = apply_rope(k, positions, kw.get("rope_theta", 10000.0))
+    out, _ = attention_apply(params, x, **kw)
+    pad = cache_len - T
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, {"k": kc, "v": vc}
+
+
+def attention_prefill_windowed(params, x, *, window, num_heads, num_kv_heads,
+                               head_dim, rope_theta=10000.0, impl="naive",
+                               q_chunk=512, kv_chunk=1024, unroll=False):
+    """Sliding-window prefill emitting a RING-BUFFER KV cache of size window.
+
+    Absolute position p is stored at slot p % window; only the last
+    min(T, window) positions survive (older ones are out of the window by
+    construction). Keys are stored post-RoPE (absolute positions).
+    """
+    B, T, _ = x.shape
+    out, _ = attention_apply(params, x, num_heads=num_heads,
+                             num_kv_heads=num_kv_heads, head_dim=head_dim,
+                             rope_theta=rope_theta, window=window, impl=impl,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk,
+                             unroll=unroll)
+    k = _split_heads(x @ params["w_k"], num_kv_heads, head_dim)
+    v = _split_heads(x @ params["w_v"], num_kv_heads, head_dim)
+    k = apply_rope(k, jnp.arange(T)[None, :], rope_theta)
+
+    W = window
+    keep = min(T, W)
+    k_tail, v_tail = k[:, T - keep:], v[:, T - keep:]
+    slots = (jnp.arange(T - keep, T) % W)
+    kc = jnp.zeros((B, W, num_kv_heads, head_dim), k.dtype).at[:, slots].set(k_tail)
+    vc = jnp.zeros((B, W, num_kv_heads, head_dim), v.dtype).at[:, slots].set(v_tail)
+    return out, {"k": kc, "v": vc}
+
+
+def _scatter_cache_update(cache_t, new, slot):
+    """Write ``new`` (B, 1, kvH, hd) at sequence position ``slot``.
+
+    Implemented as a one-hot select instead of dynamic_update_slice: a
+    runtime-indexed DUS on a sequence-SHARDED dim is unpartitionable (XLA
+    SPMD falls back to gathering the whole cache on every step — measured
+    43 GB/token of all-gather on granite-3-2b decode); the select is
+    elementwise over the sharded dim and keeps the cache fully local.
+    """
+    S = cache_t.shape[1]
+    hit = (jnp.arange(S, dtype=jnp.int32) == slot)[None, :, None, None]
+    return jnp.where(hit, new.astype(cache_t.dtype), cache_t)
+
+
+def attention_decode_windowed(params, x, cache, cache_index, *, window,
+                              num_heads, num_kv_heads, head_dim,
+                              rope_theta=10000.0):
+    """Single-token decode against a ring-buffer cache of size window.
+
+    Slot s holds absolute position p = cache_index - ((cache_index - s) mod
+    window) after this token is written; entries with p < 0 are masked.
+    """
+    B, T, D = x.shape
+    assert T == 1
+    W = cache["k"].shape[1]
+    q = _split_heads(x @ params["w_q"], num_heads, head_dim)
+    k_new = _split_heads(x @ params["w_k"], num_kv_heads, head_dim)
+    v_new = _split_heads(x @ params["w_v"], num_kv_heads, head_dim)
+    pos = jnp.full((B, 1), cache_index, jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+
+    slot = jnp.mod(cache_index, W)
+    k = _scatter_cache_update(cache["k"], k_new, slot)
+    v = _scatter_cache_update(cache["v"], v_new, slot)
+
+    s = jnp.arange(W)[None, None, None, :]
+    p = cache_index - jnp.mod(cache_index - s, W)
+    out = _grouped_decode_attention(q, k, v, p >= 0, num_heads, num_kv_heads,
+                                    head_dim)
+    out = out @ params["w_o"]
+    return out, {"k": k, "v": v}
+
+
+def _grouped_decode_attention(q, k, v, valid, num_heads, num_kv_heads,
+                              head_dim):
+    """GQA decode attention WITHOUT repeating KV heads.
+
+    Repeating kvH -> H forces XLA to reshard a sequence-sharded cache onto
+    heads (a full-cache regather per layer per token). Keeping the kvH dim
+    in the einsum lets the softmax/contraction run on the sequence-sharded
+    cache (distributed flash-decoding; XLA inserts only the small psum).
+
+    q: (B, 1, H, hd); k,v: (B, S, kvH, hd); valid: bool (1,1,1,S)-broadcast.
+    Returns (B, 1, H*hd).
+    """
+    B = q.shape[0]
+    groups = num_heads // num_kv_heads
+    q5 = q.reshape(B, 1, num_kv_heads, groups, head_dim)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q5, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(head_dim).astype(jnp.float32)
+    scores = jnp.where(valid, scores, NEG_INF)          # (B,kvH,g,1,S)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, 1, num_heads * head_dim)
+
+
+def attention_decode(params, x, cache, cache_index, *, num_heads,
+                     num_kv_heads, head_dim, rope_theta=10000.0,
+                     window: int = 0):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, D); cache: {"k","v"} of (B, S, kvH, hd); cache_index: scalar
+    int32 — number of valid tokens already in the cache.
+    Returns (out (B, 1, D), updated cache).
+    """
+    B, T, D = x.shape
+    assert T == 1
+    S = cache["k"].shape[1]
+    q = _split_heads(x @ params["w_q"], num_heads, head_dim)
+    k_new = _split_heads(x @ params["w_k"], num_kv_heads, head_dim)
+    v_new = _split_heads(x @ params["w_v"], num_kv_heads, head_dim)
+    pos = jnp.full((B, 1), cache_index, jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+
+    k = _scatter_cache_update(cache["k"], k_new, cache_index)
+    v = _scatter_cache_update(cache["v"], v_new, cache_index)
+
+    kpos = jnp.arange(S)[None, None, None, :]
+    ok = kpos <= cache_index
+    if window:
+        ok = jnp.logical_and(ok, kpos > cache_index - window)
+    out = _grouped_decode_attention(q, k, v, ok, num_heads, num_kv_heads,
+                                    head_dim)
+    out = out @ params["w_o"]
+    return out, {"k": k, "v": v}

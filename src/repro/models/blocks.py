@@ -1,0 +1,163 @@
+"""Residual blocks: init + apply for each block type (dense/moe/ssm/hybrid)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba2 as mb
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+
+
+# --- dense / moe transformer block -----------------------------------------
+
+def dense_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model),
+        "attn": attn.attention_init(k1, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.hd),
+        "norm2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated),
+    }
+
+
+def moe_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model),
+        "attn": attn.attention_init(k1, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.hd),
+        "norm2": L.rmsnorm_init(cfg.d_model),
+        "moe": moe_mod.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.num_experts),
+    }
+
+
+def _attn_kw(cfg, window=None, full=True):
+    kw = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+              head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+              window=cfg.sliding_window if window is None else window)
+    if full:  # full-sequence paths also choose the attention impl
+        kw.update(impl=cfg.attn_impl, q_chunk=cfg.attn_q_chunk,
+                  kv_chunk=cfg.attn_kv_chunk, unroll=not cfg.scan_layers)
+    return kw
+
+
+def dense_block_apply(params, x, cfg):
+    h, _ = attn.attention_apply(params["attn"],
+                                L.rmsnorm(params["norm1"], x, cfg.norm_eps),
+                                **_attn_kw(cfg, window=0))
+    x = x + h
+    x = x + L.mlp_apply(params["mlp"],
+                        L.rmsnorm(params["norm2"], x, cfg.norm_eps))
+    return x, jnp.float32(0.0)
+
+
+def moe_block_apply(params, x, cfg):
+    h, _ = attn.attention_apply(params["attn"],
+                                L.rmsnorm(params["norm1"], x, cfg.norm_eps),
+                                **_attn_kw(cfg, window=0))
+    x = x + h
+    h, aux = moe_mod.moe_apply(
+        params["moe"], L.rmsnorm(params["norm2"], x, cfg.norm_eps),
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        router=cfg.router, sinkhorn_iters=cfg.sinkhorn_iters,
+        sinkhorn_fi=cfg.sinkhorn_fi)
+    return x + h, aux
+
+
+def dense_block_decode(params, x, cache, index, cfg, window=0):
+    h, cache = attn.attention_decode(
+        params["attn"], L.rmsnorm(params["norm1"], x, cfg.norm_eps),
+        cache, index, **_attn_kw(cfg, window=window, full=False))
+    x = x + h
+    x = x + L.mlp_apply(params["mlp"],
+                        L.rmsnorm(params["norm2"], x, cfg.norm_eps))
+    return x, cache
+
+
+def moe_block_decode(params, x, cache, index, cfg):
+    h, cache = attn.attention_decode(
+        params["attn"], L.rmsnorm(params["norm1"], x, cfg.norm_eps),
+        cache, index, **_attn_kw(cfg, window=0, full=False))
+    x = x + h
+    # Decode always routes by plain top-k gates: Sinkhorn balancing is a
+    # population-level construct (the plan depends on the whole token batch)
+    # and is a training/prefill-time concern; single-token decode with it
+    # would make logits depend on unrelated requests in the batch.
+    h, _ = moe_mod.moe_apply(
+        params["moe"], L.rmsnorm(params["norm2"], x, cfg.norm_eps),
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        router="topk")
+    return x + h, cache
+
+
+# --- xlstm blocks ------------------------------------------------------------
+
+def mlstm_block_init(key, cfg):
+    return {"norm": L.rmsnorm_init(cfg.d_model),
+            "mlstm": xl.mlstm_init(key, cfg.d_model, cfg.num_heads, cfg.hd)}
+
+
+def slstm_block_init(key, cfg):
+    return {"norm": L.rmsnorm_init(cfg.d_model),
+            "slstm": xl.slstm_init(key, cfg.d_model, cfg.num_heads, cfg.hd)}
+
+
+def mlstm_block_apply(params, x, cfg, state=None):
+    h, state = xl.mlstm_apply(params["mlstm"],
+                              L.rmsnorm(params["norm"], x, cfg.norm_eps),
+                              num_heads=cfg.num_heads, head_dim=cfg.hd,
+                              chunk=cfg.gla_chunk, state=state)
+    return x + h, state
+
+
+def slstm_block_apply(params, x, cfg, state=None):
+    h, state = xl.slstm_apply(params["slstm"],
+                              L.rmsnorm(params["norm"], x, cfg.norm_eps),
+                              num_heads=cfg.num_heads, head_dim=cfg.hd,
+                              state=state)
+    return x + h, state
+
+
+def mlstm_block_decode(params, x, state, cfg):
+    h, state = xl.mlstm_decode(params["mlstm"],
+                               L.rmsnorm(params["norm"], x, cfg.norm_eps),
+                               state, num_heads=cfg.num_heads, head_dim=cfg.hd)
+    return x + h, state
+
+
+def slstm_block_decode(params, x, state, cfg):
+    h, state = xl.slstm_decode(params["slstm"],
+                               L.rmsnorm(params["norm"], x, cfg.norm_eps),
+                               state, num_heads=cfg.num_heads, head_dim=cfg.hd)
+    return x + h, state
+
+
+# --- mamba2 block (zamba2 hybrid) -------------------------------------------
+
+def mamba_block_init(key, cfg):
+    return {"norm": L.rmsnorm_init(cfg.d_model),
+            "mamba": mb.mamba2_init(key, cfg.d_model, cfg.ssm_state,
+                                    cfg.ssm_heads, cfg.ssm_head_dim)}
+
+
+def mamba_block_apply(params, x, cfg, state=None):
+    h, state = mb.mamba2_apply(params["mamba"],
+                               L.rmsnorm(params["norm"], x, cfg.norm_eps),
+                               num_heads=cfg.ssm_heads,
+                               head_dim=cfg.ssm_head_dim,
+                               d_state=cfg.ssm_state, chunk=cfg.gla_chunk,
+                               state=state)
+    return x + h, state
+
+
+def mamba_block_decode(params, x, state, cfg):
+    h, state = mb.mamba2_decode(params["mamba"],
+                                L.rmsnorm(params["norm"], x, cfg.norm_eps),
+                                state, num_heads=cfg.ssm_heads,
+                                head_dim=cfg.ssm_head_dim,
+                                d_state=cfg.ssm_state)
+    return x + h, state

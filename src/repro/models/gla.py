@@ -1,0 +1,147 @@
+"""Chunked gated linear attention (GLA) core.
+
+One well-tested primitive serves both SSM-family archs:
+  * mLSTM (xlstm)  — q/k/v heads, scalar sigmoid forget+input gates,
+    normalizer state n (out = q.S / max(|q.n|, 1)).
+  * Mamba2 (zamba2) — q=C, k=B, v=dt*x, decay=exp(-dt*A), no normalizer.
+
+Recurrence per head (state S: (dk, dv), normalizer n: (dk,)):
+    S_t = g_t * S_{t-1} + i_t * k_t (x) v_t
+    n_t = g_t * n_{t-1} + i_t * k_t
+    y_t = q_t @ S_t            [/ max(|q_t . n_t|, 1) if use_norm]
+
+Training uses the chunkwise parallel form (intra-chunk quadratic +
+inter-chunk state passing) — O(T/L) sequential steps, MXU-friendly (L x L)
+and (dk x dv) matmuls; decode is the O(1)-per-token recurrent step, which is
+what makes the `long_500k` cells constant-memory for SSM archs.
+
+Gates are sigmoid-bounded so all within-chunk exponentials are of
+non-positive numbers (numerically safe without a max-stabilizer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(q, k, v, log_g, log_i, *, chunk: int, use_norm: bool,
+                S0=None, n0=None):
+    """q,k: (B, T, H, dk); v: (B, T, H, dv); log_g, log_i: (B, T, H) <= 0.
+
+    Returns (y (B, T, H, dv), S_T (B, H, dk, dv), n_T (B, H, dk)).
+    """
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    T0 = T
+    pad = (-T) % chunk
+    if pad:
+        # pad with inert steps: i=0 (no state write), g=1 (no decay) — the
+        # carried state and the real positions' outputs are unaffected.
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_g = zpad(log_g)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e9)
+        T = T + pad
+    nC = T // chunk
+    f32 = jnp.float32
+
+    # (B, H, nC, L, d)
+    def to_chunks(x, d):
+        return x.transpose(0, 2, 1, 3).reshape(B, H, nC, chunk, d)
+
+    qc = to_chunks(q.astype(f32), dk)
+    kc = to_chunks(k.astype(f32), dk)
+    vc = to_chunks(v.astype(f32), dv)
+    lg = log_g.astype(f32).transpose(0, 2, 1).reshape(B, H, nC, chunk)
+    li = log_i.astype(f32).transpose(0, 2, 1).reshape(B, H, nC, chunk)
+
+    cum = jnp.cumsum(lg, axis=-1)                       # inclusive decay
+    # intra-chunk pairwise weights w[t, s] = exp(cum_t - cum_s + li_s), s <= t
+    wts = cum[..., :, None] - cum[..., None, :] + li[..., None, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    wts = jnp.where(mask, jnp.exp(wts), 0.0)            # (B,H,nC,L,L)
+    # carry-in decays / chunk-end weights
+    dq = jnp.exp(cum)                                   # (B,H,nC,L)
+    tail = jnp.exp(cum[..., -1:] - cum + li)            # weight into S_new
+    gall = jnp.exp(cum[..., -1])                        # chunk total decay
+
+    scores = jnp.einsum("bhctd,bhcsd->bhcts", qc, kc)   # (B,H,nC,L,L)
+    sw = scores * wts
+
+    S0 = jnp.zeros((B, H, dk, dv), f32) if S0 is None else S0.astype(f32)
+    n0 = jnp.zeros((B, H, dk), f32) if n0 is None else n0.astype(f32)
+
+    def body(carry, inp):
+        S, n = carry
+        q_, k_, v_, sw_, dq_, tail_, g_ = inp
+        # inter-chunk: decayed contribution of carried state
+        inter = jnp.einsum("bhtd,bhde->bhte", q_, S) * dq_[..., None]
+        intra = jnp.einsum("bhts,bhse->bhte", sw_, v_)
+        y = inter + intra
+        if use_norm:
+            qn_inter = jnp.einsum("bhtd,bhd->bht", q_, n) * dq_
+            qn_intra = jnp.sum(sw_, axis=-1)  # == (scores*w) @ 1 when k.q? no:
+            # normalizer uses k only: q.n_t = sum_s w_ts (q_t.k_s) -> that IS
+            # sw row-sum ONLY if scores were q.k — they are. Reuse sw.
+            qn = qn_inter + qn_intra
+            y = y / jnp.maximum(jnp.abs(qn)[..., None], 1.0)
+        S = (g_[..., None, None] * S
+             + jnp.einsum("bht,bhtd,bhte->bhde", tail_, k_, v_))
+        n = g_[..., None] * n + jnp.einsum("bht,bhtd->bhd", tail_, k_)
+        return (S, n), y
+
+    # scan over chunks (axis 2)
+    xs = (qc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+          vc.transpose(2, 0, 1, 3, 4), sw.transpose(2, 0, 1, 3, 4),
+          dq.transpose(2, 0, 1, 3), tail.transpose(2, 0, 1, 3),
+          gall.transpose(2, 0, 1))
+    (S, n), ys = jax.lax.scan(body, (S0, n0), xs)
+    # ys: (nC, B, H, L, dv) -> (B, nC*L, H, dv)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, dv)
+    return y[:, :T0].astype(v.dtype), S, n
+
+
+def serial_gla(q, k, v, log_g, log_i, *, use_norm: bool, S0=None, n0=None):
+    """Step-by-step oracle for chunked_gla (tests only)."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    S = jnp.zeros((B, H, dk, dv), f32) if S0 is None else S0.astype(f32)
+    n = jnp.zeros((B, H, dk), f32) if n0 is None else n0.astype(f32)
+
+    def step(carry, inp):
+        S, n = carry
+        q_, k_, v_, g_, i_ = inp  # (B,H,d...) , gates (B,H)
+        S = g_[..., None, None] * S + i_[..., None, None] * (
+            k_[..., :, None] * v_[..., None, :])
+        n = g_[..., None] * n + i_[..., None] * k_
+        y = jnp.einsum("bhd,bhde->bhe", q_, S)
+        if use_norm:
+            qn = jnp.einsum("bhd,bhd->bh", q_, n)
+            y = y / jnp.maximum(jnp.abs(qn)[..., None], 1.0)
+        return (S, n), y
+
+    xs = (q.astype(f32).transpose(1, 0, 2, 3), k.astype(f32).transpose(1, 0, 2, 3),
+          v.astype(f32).transpose(1, 0, 2, 3),
+          jnp.exp(log_g.astype(f32)).transpose(1, 0, 2),
+          jnp.exp(log_i.astype(f32)).transpose(1, 0, 2))
+    (S, n), ys = jax.lax.scan(step, (S, n), xs)
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype), S, n
+
+
+def gla_decode_step(q, k, v, log_g, log_i, S, n, *, use_norm: bool):
+    """One recurrent step. q,k: (B,H,dk); v: (B,H,dv); gates (B,H)."""
+    f32 = jnp.float32
+    g = jnp.exp(log_g.astype(f32))
+    i = jnp.exp(log_i.astype(f32))
+    S = g[..., None, None] * S + i[..., None, None] * (
+        k.astype(f32)[..., :, None] * v.astype(f32)[..., None, :])
+    n = g[..., None] * n + i[..., None] * k.astype(f32)
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(f32), S)
+    if use_norm:
+        qn = jnp.einsum("bhd,bhd->bh", q.astype(f32), n)
+        y = y / jnp.maximum(jnp.abs(qn)[..., None], 1.0)
+    return y.astype(v.dtype), S, n

@@ -1,0 +1,136 @@
+"""Shared neural-net layers (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, dtype=jnp.float32, gated=True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": normal_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": normal_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = normal_init(k1, (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp_apply(params, x):
+    up = x @ params["w_up"]
+    if "w_gate" in params:            # SwiGLU
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    else:                             # ungated GELU MLP (GPT-BigCode style)
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + output head (padded vocab; see configs.base)
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, padded_vocab, d_model, dtype=jnp.float32):
+    return {"table": normal_init(key, (padded_vocab, d_model), dtype=dtype)}
+
+
+def embed(params, token_ids):
+    return jnp.take(params["table"], token_ids, axis=0)
+
+
+def output_head_init(key, d_model, padded_vocab, dtype=jnp.float32):
+    return {"w_out": normal_init(key, (d_model, padded_vocab), dtype=dtype)}
+
+
+def output_logits(params, x, real_vocab: int):
+    """Logits over the padded vocab with padding positions masked to -1e9."""
+    logits = x @ params["w_out"]
+    pv = logits.shape[-1]
+    if pv > real_vocab:
+        mask = jnp.where(jnp.arange(pv) < real_vocab, 0.0, -1e9)
+        logits = logits + mask.astype(logits.dtype)
+    return logits
+
+
+def chunked_softmax_xent(params, x, labels, real_vocab: int,
+                         num_chunks: int = 8, label_mask=None,
+                         matmul_f32: bool = True):
+    """Cross-entropy without materializing full (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk computes its logits, its
+    logsumexp, and the label logit, then discards the logits. Memory is
+    O(B * S/num_chunks * V) instead of O(B * S * V).
+    """
+    B, S, D = x.shape
+    assert S % num_chunks == 0, (S, num_chunks)
+    cs = S // num_chunks
+    xc = x.reshape(B, num_chunks, cs, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, num_chunks, cs).transpose(1, 0, 2)
+    if label_mask is None:
+        mc = jnp.ones((num_chunks, B, cs), jnp.float32)
+    else:
+        mc = label_mask.reshape(B, num_chunks, cs).transpose(1, 0, 2)
+
+    # remat: without it the scan's backward saves every chunk's logits —
+    # exactly the (B, S, V) buffer this chunking exists to avoid.
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, inp):
+        tot, cnt = carry
+        xb, lb, mb = inp
+        xb = xb.astype(jnp.float32) if matmul_f32 else xb
+        logits = output_logits(params, xb, real_vocab).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        nll = (lse - lab) * mb
+        return (tot + nll.sum(), cnt + mb.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,112 @@
+"""Mamba2 (SSD) block [arXiv:2405.21060] on the shared chunked-GLA core.
+
+Mapping onto the GLA recurrence (state S: (d_state, head_dim) per head):
+    decay g_t = exp(-dt_t * exp(A_log))    (scalar per head per step)
+    k_t  = B_t      (d_state, shared across heads: n_groups=1)
+    v_t  = dt_t * x_t                      (head inputs, ZOH-discretized)
+    q_t  = C_t      (d_state)
+    y_t  = q_t @ S_t + D * x_t             (skip connection)
+Plus the Mamba front-end: causal depthwise conv (width 4) + SiLU on the
+x/B/C stream, and an output SiLU gate z. Decode carries (conv tail, S).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gla import chunked_gla, gla_decode_step
+from repro.models.layers import normal_init
+
+CONV_W = 4
+
+
+def mamba2_init(key, d_model, d_state, num_heads, head_dim,
+                dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d_inner = num_heads * head_dim
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "w_z": normal_init(ks[0], (d_model, d_inner), dtype=dtype),
+        "w_xbc": normal_init(ks[1], (d_model, conv_dim), dtype=dtype),
+        "conv_k": normal_init(ks[2], (CONV_W, conv_dim), scale=0.5,
+                              dtype=jnp.float32),
+        "w_dt": normal_init(ks[3], (d_model, num_heads), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((num_heads,), jnp.float32),
+        "A_log": jnp.zeros((num_heads,), jnp.float32),
+        "D": jnp.ones((num_heads,), jnp.float32),
+        "w_o": normal_init(ks[4], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _causal_conv(xbc, conv_k, tail=None):
+    """Depthwise causal conv, width CONV_W. xbc: (B, T, C).
+
+    tail: (B, CONV_W-1, C) previous inputs for decode continuity (or zeros).
+    Returns (y, new_tail)."""
+    B, T, C = xbc.shape
+    if tail is None:
+        tail = jnp.zeros((B, CONV_W - 1, C), xbc.dtype)
+    xp = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)  # (B,T+3,C)
+    y = sum(xp[:, i:i + T, :] * conv_k[i][None, None, :]
+            for i in range(CONV_W))
+    new_tail = xp[:, T:T + CONV_W - 1, :]
+    return y, new_tail
+
+
+def _front(params, x, num_heads, head_dim, d_state, conv_tail=None):
+    B, T, _ = x.shape
+    d_inner = num_heads * head_dim
+    z = x @ params["w_z"]
+    xbc = x @ params["w_xbc"]
+    xbc, new_tail = _causal_conv(xbc, params["conv_k"], conv_tail)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner].reshape(B, T, num_heads, head_dim)
+    Bm = xbc[..., d_inner:d_inner + d_state]            # (B, T, d_state)
+    Cm = xbc[..., d_inner + d_state:]
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ params["w_dt"]
+                         + params["dt_bias"])           # (B, T, H)
+    log_g = -dt * jnp.exp(params["A_log"])              # <= 0
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, T, num_heads, d_state))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, T, num_heads, d_state))
+    v = xs * dt[..., None].astype(xs.dtype)
+    return z, xs, q, k, v, log_g, new_tail
+
+
+def mamba2_apply(params, x, *, num_heads, head_dim, d_state, chunk=64,
+                 state=None):
+    """x: (B, T, d) -> (y, (S, conv_tail))."""
+    B, T, D = x.shape
+    S0, tail0 = (None, None) if state is None else state
+    z, xs, q, k, v, log_g, tail = _front(params, x, num_heads, head_dim,
+                                         d_state, tail0)
+    log_i = jnp.zeros_like(log_g)  # input weight folded into v (dt * x)
+    y, S, _ = chunked_gla(q, k, v, log_g, log_i, chunk=min(chunk, T),
+                          use_norm=False, S0=S0)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(B, T, num_heads * head_dim)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_o"], (S, tail)
+
+
+def mamba2_decode(params, x, state, *, num_heads, head_dim, d_state):
+    """x: (B, 1, d); state = (S, conv_tail). O(1) per token."""
+    B = x.shape[0]
+    S, tail = state
+    z, xs, q, k, v, log_g, tail = _front(params, x, num_heads, head_dim,
+                                         d_state, tail)
+    y, S, _ = gla_decode_step(q[:, 0], k[:, 0], v[:, 0], log_g[:, 0],
+                              jnp.zeros_like(log_g[:, 0]), S,
+                              jnp.zeros((B, num_heads, d_state), jnp.float32),
+                              use_norm=False)
+    y = y + params["D"][None, :, None].astype(y.dtype) * xs[:, 0]
+    y = y.reshape(B, 1, num_heads * head_dim)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_o"], (S, tail)
+
+
+def mamba2_state_init(batch, num_heads, head_dim, d_state, d_model=None,
+                      dtype=jnp.float32):
+    d_inner = num_heads * head_dim
+    conv_dim = d_inner + 2 * d_state
+    return (jnp.zeros((batch, num_heads, d_state, head_dim), dtype),
+            jnp.zeros((batch, CONV_W - 1, conv_dim), dtype))

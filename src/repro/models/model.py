@@ -1,0 +1,502 @@
+"""Model assembly: stacks blocks per family, scan-over-layers + remat.
+
+Public surface:
+    m = build_model(cfg)
+    params = m.init(key)                      # fp32 master pytree
+    loss, metrics = m.forward(params, batch)  # train-mode full-seq
+    last_logits, cache = m.prefill(params, batch)
+    logits, cache = m.decode_step(params, cache, tokens, index)
+    cache = m.init_cache(batch, cache_len)    # zeros (dry-run shardable)
+
+Batch layouts (all int32 tokens):
+    dense/moe/ssm/hybrid: {"tokens": (B,S), "labels": (B,S)}
+    vlm:   {"tokens": (B,S_txt), "image_embeds": (B,n_img,d), "labels": ...}
+    audio: {"tokens": (B,K,S), "labels": (B,K,S)}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import mamba2 as mb
+from repro.models import moe as moe_mod
+from repro.parallel.sharding import constrain
+
+PyTree = Any
+
+
+def _stack_init(block_init, cfg, key, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block_init(k, cfg))(keys)
+
+
+def cast_floats(tree, dtype):
+    """Cast all floating leaves (master params are fp32; compute in bf16)."""
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(cast, tree)
+
+
+_REMAT_POLICIES = {
+    "nothing": lambda: jax.checkpoint_policies.nothing_saveable,
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat:
+        policy = _REMAT_POLICIES[cfg.remat_policy]()
+        return jax.checkpoint(fn, policy=policy)
+    return fn
+
+
+def _index_tree(tree, i):
+    return jax.tree.map(lambda p: p[i], tree)
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _scan_or_unroll(body, carry, xs, cfg, length=None):
+    """lax.scan when cfg.scan_layers (compact HLO, fast compile) else an
+    unrolled python loop (accurate cost_analysis — XLA counts while bodies
+    once). Semantics identical; body must be (carry, x) -> (carry, y)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = None if xs is None else _index_tree(xs, i)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        return carry, _stack_trees(ys)
+    return carry, None
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params = {"embed": L.embedding_init(ks[0], cfg.padded_vocab, cfg.d_model),
+                  "final_norm": L.rmsnorm_init(cfg.d_model)}
+        if cfg.family == "audio":
+            heads = jax.vmap(
+                lambda k: L.output_head_init(k, cfg.d_model, cfg.padded_vocab)
+            )(jax.random.split(ks[1], cfg.num_codebooks))
+            params["head"] = heads          # (K, d, V)
+        else:
+            params["head"] = L.output_head_init(ks[1], cfg.d_model,
+                                                cfg.padded_vocab)
+
+        fam = cfg.family
+        if fam in ("dense", "vlm", "audio"):
+            params["layers"] = _stack_init(B.dense_block_init, cfg, ks[2],
+                                           cfg.num_layers)
+        elif fam == "moe":
+            params["layers"] = _stack_init(B.moe_block_init, cfg, ks[2],
+                                           cfg.num_layers)
+        elif fam == "ssm":
+            cyc = cfg.num_layers // cfg.slstm_every
+            m = cfg.slstm_every - 1
+            k_m, k_s = jax.random.split(ks[2])
+            params["mlstm"] = jax.vmap(
+                lambda kk: _stack_init(B.mlstm_block_init, cfg, kk, m)
+            )(jax.random.split(k_m, cyc))                      # (cyc, m, ...)
+            params["slstm"] = _stack_init(B.slstm_block_init, cfg, k_s, cyc)
+        elif fam == "hybrid":
+            cyc = cfg.num_layers // cfg.attn_every
+            tail = cfg.num_layers - cyc * cfg.attn_every
+            k_m, k_t, k_a = jax.random.split(ks[2], 3)
+            params["mamba"] = jax.vmap(
+                lambda kk: _stack_init(B.mamba_block_init, cfg, kk,
+                                       cfg.attn_every)
+            )(jax.random.split(k_m, cyc))                      # (cyc, 6, ...)
+            if tail:
+                params["mamba_tail"] = _stack_init(B.mamba_block_init, cfg,
+                                                   k_t, tail)
+            params["shared_attn"] = B.dense_block_init(k_a, cfg)  # SHARED
+        else:
+            raise ValueError(fam)
+        return params
+
+    # ------------------------------------------------------------- embedding
+
+    def _embed_batch(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            tok = L.embed(params["embed"], batch["tokens"])
+            img = batch["image_embeds"].astype(tok.dtype)
+            return jnp.concatenate([img, tok], axis=1)
+        if cfg.family == "audio":
+            # sum the K codebook embeddings (shared table)
+            embs = L.embed(params["embed"], batch["tokens"])  # (B,K,S,d)
+            return embs.sum(axis=1)
+        return L.embed(params["embed"], batch["tokens"])
+
+    # ----------------------------------------------------------------- stack
+
+    def _run_stack(self, params, x):
+        """Full-sequence stack. Returns (x, aux_loss)."""
+        cfg = self.cfg
+        fam = cfg.family
+        x = x.astype(self.compute_dtype)
+
+        if fam in ("dense", "vlm", "audio", "moe"):
+            apply = B.moe_block_apply if fam == "moe" else B.dense_block_apply
+
+            def body(h, layer_params):
+                h, aux = apply(layer_params, h, cfg)
+                return constrain(h, "carry"), aux
+
+            x, auxs = _scan_or_unroll(_maybe_remat(body, cfg), x,
+                                      params["layers"], cfg)
+            return x, auxs.mean()
+
+        if fam == "ssm":
+            def cycle(h, cyc_params):
+                ml, sl = cyc_params
+
+                def inner(h2, mp):
+                    h2, _ = B.mlstm_block_apply(mp, h2, cfg)
+                    return h2, None
+
+                h, _ = _scan_or_unroll(inner, h, ml, cfg)
+                h, _ = B.slstm_block_apply(sl, h, cfg)
+                return constrain(h, "carry"), None
+
+            x, _ = _scan_or_unroll(_maybe_remat(cycle, cfg), x,
+                                   (params["mlstm"], params["slstm"]), cfg)
+            return x, jnp.float32(0.0)
+
+        if fam == "hybrid":
+            shared = params["shared_attn"]
+
+            def cycle(h, cyc_params):
+                def inner(h2, mp):
+                    h2, _ = B.mamba_block_apply(mp, h2, cfg)
+                    return h2, None
+
+                h, _ = _scan_or_unroll(inner, h, cyc_params, cfg)
+                h, _ = B.dense_block_apply(shared, h, cfg)
+                return constrain(h, "carry"), None
+
+            x, _ = _scan_or_unroll(_maybe_remat(cycle, cfg), x,
+                                   params["mamba"], cfg)
+            if "mamba_tail" in params:
+                def tail(h, mp):
+                    h, _ = B.mamba_block_apply(mp, h, cfg)
+                    return h, None
+                x, _ = _scan_or_unroll(_maybe_remat(tail, cfg), x,
+                                       params["mamba_tail"], cfg)
+            return x, jnp.float32(0.0)
+
+        raise ValueError(fam)
+
+    # --------------------------------------------------------------- forward
+
+    def forward(self, params, batch):
+        """Training loss (chunked xent, never materializes full logits)."""
+        cfg = self.cfg
+        params = cast_floats(params, self.compute_dtype)
+        x = self._embed_batch(params, batch)
+        x, aux = self._run_stack(params, x)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+        if cfg.family == "vlm":
+            n_img = batch["image_embeds"].shape[1]
+            x = x[:, n_img:, :]
+
+        if cfg.family == "audio":
+            loss = self._audio_loss(params, x, batch["labels"])
+        else:
+            loss = L.chunked_softmax_xent(params["head"], x, batch["labels"],
+                                          cfg.vocab_size,
+                                          num_chunks=cfg.loss_chunks,
+                                          matmul_f32=(cfg.loss_matmul_dtype
+                                                      == "f32"))
+        metrics = {"xent": loss, "aux": aux}
+        if cfg.family == "moe":
+            loss = loss + 0.01 * aux
+        return loss, metrics
+
+    def _audio_loss(self, params, x, labels):
+        """Per-codebook softmax xent, chunked over sequence."""
+        cfg = self.cfg
+        Bsz, S, D = x.shape
+        K = cfg.num_codebooks
+        nc = cfg.loss_chunks
+        cs = S // nc
+        xc = x.reshape(Bsz, nc, cs, D).transpose(1, 0, 2, 3)
+        lc = labels.transpose(0, 2, 1).reshape(Bsz, nc, cs, K).transpose(1, 0, 2, 3)
+
+        w = params["head"]["w_out"]  # (K, d, V)
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def body(tot, inp):
+            xb, lb = inp
+            logits = jnp.einsum("bsd,kdv->bskv", xb.astype(jnp.float32),
+                                w.astype(jnp.float32))
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            lab = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+            return tot + (lse - lab).sum(), None
+
+        tot, _ = jax.lax.scan(body, jnp.float32(0.0), (xc, lc))
+        return tot / (Bsz * S * K)
+
+    # --------------------------------------------------------------- prefill
+
+    def prefill(self, params, batch, cache_len: int):
+        """Run the full prompt, return (last-position logits, decode cache)."""
+        cfg = self.cfg
+        params = cast_floats(params, self.compute_dtype)
+        x = self._embed_batch(params, batch)
+        x = x.astype(self.compute_dtype)
+        fam = cfg.family
+
+        if fam in ("dense", "moe", "vlm", "audio"):
+            apply_pref = functools.partial(self._prefill_block,
+                                           cache_len=cache_len)
+            x, caches = _scan_or_unroll(_maybe_remat(apply_pref, cfg), x,
+                                        params["layers"], cfg)
+            cache = caches
+        elif fam == "ssm":
+            def cycle(h, cyc_params):
+                ml, sl = cyc_params
+
+                def inner(h2, mp):
+                    h2, st = B.mlstm_block_apply(mp, h2, cfg)
+                    return h2, st
+
+                h, m_states = _scan_or_unroll(inner, h, ml, cfg)
+                h, s_state = B.slstm_block_apply(sl, h, cfg)
+                return h, (m_states, s_state)
+
+            x, cache = _scan_or_unroll(_maybe_remat(cycle, cfg), x,
+                                       (params["mlstm"], params["slstm"]),
+                                       cfg)
+        elif fam == "hybrid":
+            shared = params["shared_attn"]
+            W = cfg.sliding_window
+
+            def cycle(h, cyc_params):
+                def inner(h2, mp):
+                    h2, st = B.mamba_block_apply(mp, h2, cfg)
+                    return h2, st
+
+                h, m_states = _scan_or_unroll(inner, h, cyc_params, cfg)
+                hn = L.rmsnorm(shared["norm1"], h, cfg.norm_eps)
+                a, kv = attn.attention_prefill_windowed(
+                    shared["attn"], hn, window=W, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                    rope_theta=cfg.rope_theta, impl=cfg.attn_impl,
+                    q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+                    unroll=not cfg.scan_layers)
+                h = h + a
+                h = h + L.mlp_apply(shared["mlp"],
+                                    L.rmsnorm(shared["norm2"], h, cfg.norm_eps))
+                return h, (m_states, kv)
+
+            x, (m_cache, kv_cache) = _scan_or_unroll(
+                _maybe_remat(cycle, cfg), x, params["mamba"], cfg)
+            tail_cache = None
+            if "mamba_tail" in params:
+                def tail(h, mp):
+                    h, st = B.mamba_block_apply(mp, h, cfg)
+                    return h, st
+                x, tail_cache = _scan_or_unroll(_maybe_remat(tail, cfg), x,
+                                                params["mamba_tail"], cfg)
+            cache = (m_cache, kv_cache, tail_cache)
+        else:
+            raise ValueError(fam)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._head_logits(params, x[:, -1:, :])
+        return logits, cache
+
+    def _prefill_block(self, h, layer_params, cache_len):
+        cfg = self.cfg
+        hn = L.rmsnorm(layer_params["norm1"], h, cfg.norm_eps)
+        a, kv = attn.attention_prefill(layer_params["attn"], hn,
+                                       cache_len, num_heads=cfg.num_heads,
+                                       num_kv_heads=cfg.num_kv_heads,
+                                       head_dim=cfg.hd,
+                                       rope_theta=cfg.rope_theta,
+                                       impl=cfg.attn_impl,
+                                       q_chunk=cfg.attn_q_chunk,
+                                       kv_chunk=cfg.attn_kv_chunk,
+                                       unroll=not cfg.scan_layers)
+        h = h + a
+        if cfg.family == "moe":
+            m, _ = moe_mod.moe_apply(
+                layer_params["moe"],
+                L.rmsnorm(layer_params["norm2"], h, cfg.norm_eps),
+                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                router=cfg.router, sinkhorn_iters=cfg.sinkhorn_iters,
+                sinkhorn_fi=cfg.sinkhorn_fi)
+            h = h + m
+        else:
+            h = h + L.mlp_apply(layer_params["mlp"],
+                                L.rmsnorm(layer_params["norm2"], h,
+                                          cfg.norm_eps))
+        return h, kv
+
+    # ----------------------------------------------------------- decode path
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        """Zero decode cache (shape donor for the dry-run)."""
+        cfg = self.cfg
+        dt = self.compute_dtype
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm", "audio"):
+            kv = {"k": jnp.zeros((cfg.num_layers, batch_size, cache_len,
+                                  cfg.num_kv_heads, cfg.hd), dt),
+                  "v": jnp.zeros((cfg.num_layers, batch_size, cache_len,
+                                  cfg.num_kv_heads, cfg.hd), dt)}
+            return kv
+        if fam == "ssm":
+            cyc = cfg.num_layers // cfg.slstm_every
+            m = cfg.slstm_every - 1
+            H, hd = cfg.num_heads, cfg.hd
+            mstate = (jnp.zeros((cyc, m, batch_size, H, hd, hd), jnp.float32),
+                      jnp.zeros((cyc, m, batch_size, H, hd), jnp.float32))
+            z = jnp.zeros((cyc, batch_size, H, hd), jnp.float32)
+            return (mstate, (z, z, z))
+        if fam == "hybrid":
+            cyc = cfg.num_layers // cfg.attn_every
+            tail = cfg.num_layers - cyc * cfg.attn_every
+            H, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            conv_dim = H * hd + 2 * ds
+            W = min(cfg.sliding_window, cache_len)
+
+            def mstates(n1, n2=None):
+                shp = (n1,) if n2 is None else (n1, n2)
+                return (jnp.zeros(shp + (batch_size, H, ds, hd), jnp.float32),
+                        jnp.zeros(shp + (batch_size, mb.CONV_W - 1, conv_dim),
+                                  jnp.float32))
+
+            kv = {"k": jnp.zeros((cyc, batch_size, W, cfg.num_kv_heads,
+                                  cfg.hd), dt),
+                  "v": jnp.zeros((cyc, batch_size, W, cfg.num_kv_heads,
+                                  cfg.hd), dt)}
+            tail_state = mstates(tail) if tail else None
+            return (mstates(cyc, cfg.attn_every), kv, tail_state)
+        raise ValueError(fam)
+
+    def decode_step(self, params, cache, tokens, index):
+        """One token for every sequence. tokens: (B,1) (audio: (B,K,1)).
+
+        index: int32 scalar — tokens already in cache. Returns
+        (logits (B,1,V) [audio: (B,K,1,V)], new cache).
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        params = cast_floats(params, self.compute_dtype)
+        if fam == "audio":
+            x = L.embed(params["embed"], tokens).sum(axis=1)
+        else:
+            x = L.embed(params["embed"], tokens)
+        x = x.astype(self.compute_dtype)
+
+        if fam in ("dense", "moe", "vlm", "audio"):
+            decode = (B.moe_block_decode if fam == "moe"
+                      else B.dense_block_decode)
+
+            def body(h, inp):
+                lp, kv = inp
+                h, kv = decode(lp, h, kv, index, cfg)
+                return h, kv
+
+            x, cache = _scan_or_unroll(body, x, (params["layers"], cache),
+                                       cfg)
+        elif fam == "ssm":
+            (m_states, s_states) = cache
+
+            def cycle(h, inp):
+                (ml, sl), (mstate, sstate) = inp
+
+                def inner(h2, inp2):
+                    mp, st = inp2
+                    h2, st = B.mlstm_block_decode(mp, h2, st, cfg)
+                    return h2, st
+
+                h, mstate = _scan_or_unroll(inner, h, (ml, mstate), cfg)
+                h, sstate = B.slstm_block_decode(sl, h, sstate, cfg)
+                return h, (mstate, sstate)
+
+            x, cache = _scan_or_unroll(
+                cycle, x, ((params["mlstm"], params["slstm"]),
+                           (tuple(m_states), tuple(s_states))), cfg)
+        elif fam == "hybrid":
+            m_cache, kv_cache, tail_cache = cache
+            shared = params["shared_attn"]
+            W = kv_cache["k"].shape[2]
+
+            def cycle(h, inp):
+                cyc_params, (mstate, kv) = inp
+
+                def inner(h2, inp2):
+                    mp, st = inp2
+                    h2, st = B.mamba_block_decode(mp, h2, st, cfg)
+                    return h2, st
+
+                h, mstate = _scan_or_unroll(inner, h, (cyc_params, mstate),
+                                            cfg)
+                hn = L.rmsnorm(shared["norm1"], h, cfg.norm_eps)
+                a, kv = attn.attention_decode_windowed(
+                    shared["attn"], hn, kv, index, window=W,
+                    num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.hd, rope_theta=cfg.rope_theta)
+                h = h + a
+                h = h + L.mlp_apply(shared["mlp"],
+                                    L.rmsnorm(shared["norm2"], h,
+                                              cfg.norm_eps))
+                return h, (mstate, kv)
+
+            x, (m_cache, kv_cache) = _scan_or_unroll(
+                cycle, x, (params["mamba"], (tuple(m_cache), kv_cache)), cfg)
+            if tail_cache is not None:
+                def tail(h, inp):
+                    mp, st = inp
+                    h, st = B.mamba_block_decode(mp, h, st, cfg)
+                    return h, st
+                x, tail_cache = _scan_or_unroll(
+                    tail, x, (params["mamba_tail"], tuple(tail_cache)), cfg)
+            cache = (m_cache, kv_cache, tail_cache)
+        else:
+            raise ValueError(fam)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._head_logits(params, x)
+        return logits, cache
+
+    def _head_logits(self, params, x):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            w = params["head"]["w_out"]  # (K, d, V)
+            logits = jnp.einsum("bsd,kdv->bksv", x.astype(jnp.float32),
+                                w.astype(jnp.float32))
+            return logits
+        return L.output_logits(params["head"], x.astype(jnp.float32),
+                               cfg.vocab_size)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts layer with top-k or Sinkhorn/UOT routing.
+
+The ``sinkhorn`` router is the framework integration point for the paper:
+expert assignment is an unbalanced optimal transport problem between tokens
+(row marginal: each token carries top_k units of mass) and experts (column
+marginal: equal capacity). A few MAP-UOT fused iterations
+(repro.core.sinkhorn_fused.fused_iteration — single-pass schedule) balance
+the routing matrix; the unbalanced relaxation (fi < 1) tolerates residual
+imbalance instead of forcing hard balance like BASE layers. Gradients flow
+through the softmax gates (straight-through on the plan), the standard
+Sinkhorn-router trick.
+
+Dispatch is capacity-based sort-scatter (MegaBlocks/MaxText style): tokens
+are ranked within their expert via argsort, dropped beyond capacity,
+scattered into an (E, C, d) buffer, processed with batched expert matmuls
+(MXU-friendly, EP-shardable on the "model" axis), and combined back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import rescale_factors
+from repro.core.sinkhorn_fused import fused_iteration
+from repro.models.layers import normal_init
+
+
+def moe_init(key, d_model, d_ff, num_experts, dtype=jnp.float32):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "w_router": normal_init(kr, (d_model, num_experts), dtype=jnp.float32),
+        "w_gate": normal_init(kg, (num_experts, d_model, d_ff), dtype=dtype),
+        "w_up": normal_init(ku, (num_experts, d_model, d_ff), dtype=dtype),
+        "w_down": normal_init(kd, (num_experts, d_ff, d_model), dtype=dtype),
+    }
+
+
+def _positions_within_expert(flat_e, num_experts):
+    """Rank of each assignment within its expert (sort-based, O(n log n))."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    idx = jnp.arange(n)
+    is_start = jnp.concatenate([jnp.array([True]), sorted_e[1:] != sorted_e[:-1]])
+    group_start = jax.lax.associative_scan(jnp.maximum,
+                                           jnp.where(is_start, idx, 0))
+    pos_sorted = idx - group_start
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    return pos
+
+
+def sinkhorn_route(logits, top_k, *, num_iters=4, fi=0.7, temp=1.0,
+                   use_pallas=False):
+    """UOT-balanced routing plan. logits: (T, E). Returns (T, E) plan.
+
+    Row marginal: top_k per token; column marginal: T*top_k/E per expert
+    (uniform capacity). fi < 1 relaxes both — tokens with no confident
+    expert may send less mass, hot experts may keep more than fair share.
+
+    use_pallas: run the MAP-UOT fused Pallas kernel (single HBM pass per
+    iteration) instead of the jnp form — for real-TPU serving/training;
+    interpret-mode on CPU (tests assert equality), OFF in dry-runs (the
+    TPU mosaic lowering does not exist on the CPU backend).
+    """
+    T, E = logits.shape
+    # Gibbs kernel from router affinities (stabilized).
+    A = jnp.exp((logits - jax.lax.stop_gradient(logits.max(-1, keepdims=True)))
+                / temp).astype(jnp.float32)
+    a = jnp.full((T,), float(top_k), jnp.float32)
+    b = jnp.full((E,), 0.0, jnp.float32) + (T * top_k / E)
+
+    if use_pallas:
+        from repro.core.problem import UOTConfig
+        from repro.kernels import ops
+        cfg = UOTConfig(num_iters=num_iters, reg=1.0,
+                        reg_m=fi / (1.0 - fi) if fi < 1 else float("inf"))
+        A_out, _ = ops.solve_fused(A, a, b, cfg)
+        return A_out
+
+    colsum = A.sum(axis=0)
+
+    def body(_, carry):
+        A, colsum = carry
+        fcol = rescale_factors(b, colsum, fi)
+        A = A * fcol[None, :]
+        rowsum = A.sum(axis=1)
+        frow = rescale_factors(a, rowsum, fi)
+        A = A * frow[:, None]
+        return A, A.sum(axis=0)
+
+    A, _ = jax.lax.fori_loop(0, num_iters, body, (A, colsum))
+    return A
+
+
+def route(params, x_tok, *, top_k, router="topk", sinkhorn_iters=4,
+          sinkhorn_fi=0.7):
+    """Select experts. x_tok: (T, d). Returns (weights (T,k), ids (T,k), aux).
+
+    aux = Switch-style load-balance loss (fraction_e * mean_gate_e * E).
+    """
+    logits = (x_tok.astype(jnp.float32) @ params["w_router"])
+    gates = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    T, E = gates.shape
+
+    if router == "sinkhorn":
+        plan = sinkhorn_route(logits, top_k, num_iters=sinkhorn_iters,
+                              fi=sinkhorn_fi)
+        # plan picks the experts (stop-grad); gates carry the gradient.
+        sel = jax.lax.stop_gradient(plan)
+    elif router == "topk":
+        sel = gates
+    else:
+        raise ValueError(router)
+
+    _, ids = jax.lax.top_k(sel, top_k)                           # (T, k)
+    w = jnp.take_along_axis(gates, ids, axis=1)
+    w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)      # renormalize
+
+    # load-balance aux loss over the *chosen* assignment
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)           # (T, k, E)
+    frac = onehot.sum(axis=(0, 1)) / (T * top_k)
+    mean_gate = gates.mean(axis=0)
+    aux = E * jnp.sum(frac * mean_gate)
+    return w.astype(x_tok.dtype), ids, aux
+
+
+def moe_apply(params, x, *, top_k, capacity_factor=1.25, router="topk",
+              sinkhorn_iters=4, sinkhorn_fi=0.7, dbg=False):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    E = params["w_router"].shape[1]
+    x_tok = x.reshape(T, D)
+
+    w, ids, aux = route(params, x_tok, top_k=top_k, router=router,
+                        sinkhorn_iters=sinkhorn_iters, sinkhorn_fi=sinkhorn_fi)
+
+    C = int(max(1, round(T * top_k * capacity_factor / E)))
+    flat_e = ids.reshape(-1)                                     # (T*k,)
+    pos = _positions_within_expert(flat_e, E)                    # (T*k,)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)              # dump slot
+
+    # dispatch: (E*C+1, d) buffer, slot-unique scatter
+    xk = jnp.repeat(x_tok, top_k, axis=0)                        # (T*k, d)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(xk)
+    ebuf = buf[:E * C].reshape(E, C, D)
+
+    # expert SwiGLU (batched over experts -> EP shardable)
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ebuf, params["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", ebuf, params["w_up"])
+    eout = jnp.einsum("ecf,efd->ecd", gate * up, params["w_down"])
+
+    # combine: gather back + weighted sum over the k assignments
+    flat_out = jnp.concatenate(
+        [eout.reshape(E * C, D), jnp.zeros((1, D), eout.dtype)], axis=0)
+    tok_out = flat_out[slot].reshape(T, top_k, D)
+    y = jnp.einsum("tk,tkd->td", w.astype(jnp.float32),
+                   tok_out.astype(jnp.float32)).astype(x.dtype)
+    out = y.reshape(B, S, D)
+    if dbg:
+        return out, aux, {"ids": ids, "w": w, "keep": keep.reshape(T, top_k)}
+    return out, aux
+
+
+def moe_apply_dense_ref(params, x, *, top_k, router="topk",
+                        sinkhorn_iters=4, sinkhorn_fi=0.7):
+    """No-capacity dense reference (loops over experts) for tests."""
+    B, S, D = x.shape
+    T = B * S
+    x_tok = x.reshape(T, D)
+    w, ids, aux = route(params, x_tok, top_k=top_k, router=router,
+                        sinkhorn_iters=sinkhorn_iters, sinkhorn_fi=sinkhorn_fi)
+    E = params["w_router"].shape[1]
+    y = jnp.zeros((T, D), jnp.float32)
+    for e in range(E):
+        gate = jax.nn.silu(x_tok @ params["w_gate"][e])
+        up = x_tok @ params["w_up"][e]
+        out_e = (gate * up) @ params["w_down"][e]
+        m = (ids == e).astype(jnp.float32) * w.astype(jnp.float32)  # (T, k)
+        y = y + m.sum(axis=1)[:, None] * out_e.astype(jnp.float32)
+    return y.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,141 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, time-recurrent). [arXiv:2405.04517]
+
+Adaptations recorded in DESIGN.md: gates are sigmoid-bounded (the paper's
+exp input gate + max-stabilizer is replaced by the numerically-safe bounded
+form; the memory/update structure — matrix memory C, normalizer n, output
+q.C/max(|q.n|,1) — is faithful). mLSTM uses the shared chunked-GLA core.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gla import chunked_gla, gla_decode_step
+from repro.models.layers import normal_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model, num_heads, head_dim, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    H, hd = num_heads, head_dim
+    return {
+        "w_q": normal_init(ks[0], (d_model, H * hd), dtype=dtype),
+        "w_k": normal_init(ks[1], (d_model, H * hd), dtype=dtype),
+        "w_v": normal_init(ks[2], (d_model, H * hd), dtype=dtype),
+        "w_f": normal_init(ks[3], (d_model, H), dtype=jnp.float32),
+        "w_i": normal_init(ks[4], (d_model, H), dtype=jnp.float32),
+        "w_gate": normal_init(ks[5], (d_model, H * hd), dtype=dtype),
+        "w_o": normal_init(jax.random.fold_in(key, 7), (H * hd, d_model),
+                           dtype=dtype),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),  # init forget ~ open
+    }
+
+
+def _qkv_gates(params, x, num_heads, head_dim):
+    B, T, _ = x.shape
+    H, hd = num_heads, head_dim
+    q = (x @ params["w_q"]).reshape(B, T, H, hd) / jnp.sqrt(hd).astype(x.dtype)
+    k = (x @ params["w_k"]).reshape(B, T, H, hd)
+    v = (x @ params["w_v"]).reshape(B, T, H, hd)
+    log_f = jax.nn.log_sigmoid(
+        x.astype(jnp.float32) @ params["w_f"] + params["f_bias"])
+    log_i = jax.nn.log_sigmoid(x.astype(jnp.float32) @ params["w_i"])
+    return q, k, v, log_f, log_i
+
+
+def mlstm_apply(params, x, *, num_heads, head_dim, chunk=64, state=None):
+    """x: (B, T, d). Returns (y, (S, n)) — state for seq continuation."""
+    B, T, D = x.shape
+    q, k, v, log_f, log_i = _qkv_gates(params, x, num_heads, head_dim)
+    S0, n0 = (None, None) if state is None else state
+    y, S, n = chunked_gla(q, k, v, log_f, log_i, chunk=min(chunk, T),
+                          use_norm=True, S0=S0, n0=n0)
+    y = y.reshape(B, T, num_heads * head_dim)
+    y = y * jax.nn.silu(x @ params["w_gate"])
+    return y @ params["w_o"], (S, n)
+
+
+def mlstm_decode(params, x, state, *, num_heads, head_dim):
+    """x: (B, 1, d); state = (S, n). O(1) per token."""
+    B, _, D = x.shape
+    q, k, v, log_f, log_i = _qkv_gates(params, x, num_heads, head_dim)
+    S, n = state
+    y, S, n = gla_decode_step(q[:, 0], k[:, 0], v[:, 0], log_f[:, 0],
+                              log_i[:, 0], S, n, use_norm=True)
+    y = y.reshape(B, 1, num_heads * head_dim)
+    y = y * jax.nn.silu(x @ params["w_gate"])
+    return y @ params["w_o"], (S, n)
+
+
+def mlstm_state_init(batch, num_heads, head_dim, dtype=jnp.float32):
+    return (jnp.zeros((batch, num_heads, head_dim, head_dim), dtype),
+            jnp.zeros((batch, num_heads, head_dim), dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (true recurrence, block-diagonal per-head recurrent weights)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model, num_heads, head_dim, dtype=jnp.float32):
+    ks = jax.random.split(key, 10)
+    H, hd = num_heads, head_dim
+    p = {"w_o": normal_init(ks[8], (H * hd, d_model), dtype=dtype),
+         "f_bias": jnp.full((H, hd), 3.0, jnp.float32)}
+    for i, name in enumerate(("z", "i", "f", "o")):
+        p[f"w_{name}"] = normal_init(ks[i], (d_model, H * hd), dtype=dtype)
+        p[f"r_{name}"] = normal_init(ks[4 + i], (H, hd, hd), scale=0.01,
+                                     dtype=jnp.float32)
+    return p
+
+
+def slstm_step(params, x_t, state, num_heads, head_dim):
+    """One time step. x_t: (B, d); state = (c, n, h) each (B, H, hd)."""
+    c, n, h = state
+    B = x_t.shape[0]
+    H, hd = num_heads, head_dim
+
+    def gate(name):
+        wx = (x_t @ params[f"w_{name}"]).reshape(B, H, hd).astype(jnp.float32)
+        rh = jnp.einsum("bhd,hde->bhe", h, params[f"r_{name}"])
+        return wx + rh
+
+    z = jnp.tanh(gate("z"))
+    i = jax.nn.sigmoid(gate("i"))
+    f = jax.nn.sigmoid(gate("f") + params["f_bias"])
+    o = jax.nn.sigmoid(gate("o"))
+    c = f * c + i * z
+    n = f * n + i
+    h = o * (c / jnp.maximum(n, 1.0))
+    return (c, n, h)
+
+
+def slstm_apply(params, x, *, num_heads, head_dim, state=None):
+    """x: (B, T, d) — lax.scan over time (inherently sequential)."""
+    B, T, D = x.shape
+    H, hd = num_heads, head_dim
+    if state is None:
+        state = slstm_state_init(B, H, hd)
+
+    def body(carry, x_t):
+        carry = slstm_step(params, x_t, carry, H, hd)
+        return carry, carry[2]  # emit h
+
+    state, hs = jax.lax.scan(body, state, x.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, T, H * hd).astype(x.dtype)
+    return y @ params["w_o"], state
+
+
+def slstm_decode(params, x, state, *, num_heads, head_dim):
+    B = x.shape[0]
+    state = slstm_step(params, x[:, 0], state, num_heads, head_dim)
+    y = state[2].reshape(B, 1, num_heads * head_dim).astype(x.dtype)
+    return y @ params["w_o"], state
+
+
+def slstm_state_init(batch, num_heads, head_dim):
+    z = jnp.zeros((batch, num_heads, head_dim), jnp.float32)
+    return (z, z, z)

@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (
+    state_specs, param_specs, batch_specs, cache_specs, activation_ctx)
+
+__all__ = ["state_specs", "param_specs", "batch_specs", "cache_specs",
+           "activation_ctx"]

@@ -1,0 +1,201 @@
+"""Sharding rules: DP x FSDP x TP (+ EP for MoE, SP for long context).
+
+Axis roles (mesh axes named in launch.mesh):
+  * ``data``  — batch data parallelism AND FSDP (ZeRO-3-style parameter /
+    optimizer-state sharding: per-layer all-gather inside the scan, grads
+    reduce-scattered back — the standard scan+FSDP pattern).
+  * ``model`` — tensor parallelism (Megatron col/row pairs), expert
+    parallelism for MoE (experts over ``model``), and KV-cache / sequence
+    sharding for serving shapes.
+  * ``pod``   — outermost data parallelism across pods (gradient all-reduce
+    crosses the DCI; FSDP gathers stay INTRA-pod by construction).
+
+Rules are name+shape based: a tensor is sharded on an axis only when the
+dim divides the axis size — so the same rule table serves every arch (e.g.
+smollm's 15 heads simply skip head sharding while its d_ff shards).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (regex on the flattened path, TP dim, FSDP dim) — dims index the
+# *effective* (unstacked) shape; negative = none.
+_RULES: list[tuple[str, int, int]] = [
+    (r"attn/w_[qkv]$", 1, 0),
+    (r"attn/w_o$", 0, 1),
+    (r"mlp/w_(gate|up)$", 1, 0),
+    (r"mlp/w_down$", 0, 1),
+    (r"moe/w_(gate|up|down)$", 0, 1),     # dim0 = experts -> EP
+    (r"moe/w_router$", -1, -1),
+    (r"embed/table$", 1, 0),              # d over TP, vocab over FSDP
+    (r"head/w_out$", 1, 0),               # vocab-parallel head
+    (r"mlstm/w_[qkv]$", 1, 0),
+    (r"mlstm/w_gate$", 1, 0),
+    (r"mlstm/w_o$", 0, 1),
+    (r"mlstm/w_[fi]$", -1, 0),
+    (r"slstm/w_[zifo]$", 1, 0),
+    (r"slstm/r_[zifo]$", -1, -1),
+    (r"slstm/w_o$", 0, 1),
+    (r"mamba/w_(z|xbc)$", 1, 0),
+    (r"mamba/w_o$", 0, 1),
+    (r"mamba/conv_k$", 1, -1),
+    (r"mamba/w_dt$", -1, 0),
+]
+
+# leading stacked-layer dims by top-level param group (never sharded)
+_STACK_DIMS = {"layers": 1, "mlstm": 2, "slstm": 1, "mamba": 2,
+               "mamba_tail": 1, "shared_attn": 0}
+
+
+def _path_str(path) -> str:
+    return "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+
+
+def _leaf_spec(path, leaf, mesh_axes: dict[str, int], cfg,
+               fsdp: bool) -> P:
+    """mesh_axes: {"data": 16, "model": 16, ...}."""
+    pstr = _path_str(path)
+    shape = leaf.shape
+    top = pstr.split("/")[0]
+    nstack = _STACK_DIMS.get(top, 0)
+    if top == "head" and cfg is not None and cfg.family == "audio":
+        nstack = 1  # (K, d, V) codebook-stacked head
+    eff = shape[nstack:]
+    spec: list[Any] = [None] * len(shape)
+
+    tp_size = mesh_axes.get("model", 1)
+    fsdp_size = mesh_axes.get("data", 1)
+
+    for pat, tp_dim, fsdp_dim in _RULES:
+        if re.search(pat, pstr):
+            if tp_dim >= 0 and tp_dim < len(eff) and \
+                    eff[tp_dim] % tp_size == 0 and tp_size > 1:
+                spec[nstack + tp_dim] = "model"
+            if fsdp and fsdp_dim >= 0 and fsdp_dim < len(eff) and \
+                    eff[fsdp_dim] % fsdp_size == 0 and fsdp_size > 1 and \
+                    int(np.prod(eff)) >= (1 << 20) and \
+                    spec[nstack + fsdp_dim] is None:
+                spec[nstack + fsdp_dim] = "data"
+            break
+    return P(*spec)
+
+
+def param_specs(cfg, params_shapes, mesh: Mesh, fsdp: bool = True):
+    """PartitionSpec pytree for a param(-shaped) tree.
+
+    params_shapes: pytree of ShapeDtypeStruct (jax.eval_shape of init).
+    """
+    mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, mesh_axes, cfg, fsdp),
+        params_shapes)
+
+
+def state_specs(cfg, state_shapes, mesh: Mesh, fsdp: bool = True):
+    """Specs for the full TrainState {params, opt{m,v,count}, step}."""
+    pspecs = param_specs(cfg, state_shapes["params"], mesh, fsdp)
+    return {"params": pspecs,
+            "opt": {"m": pspecs, "v": jax.tree.map(lambda s: s, pspecs),
+                    "count": P()},
+            "step": P()}
+
+
+def _dp_axes(mesh: Mesh):
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def batch_specs(cfg, batch_shapes, mesh: Mesh):
+    """Shard every batch input's leading (batch) dim over the DP axes."""
+    dp = _dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(path, leaf):
+        b = leaf.shape[0]
+        lead = dp if b % dp_size == 0 else None
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def cache_specs(cfg, cache_shapes, mesh: Mesh):
+    """Decode-cache sharding.
+
+    KV caches (layer-stacked: (L, B, S, kvH, hd)): batch over DP when
+    divisible; kv-heads over ``model`` when divisible, else the cache
+    SEQUENCE dim over ``model`` (MQA long-context: flash-decoding-style
+    sharded softmax, XLA partitions the logsumexp).
+    SSM states ((..., B, H, ...)): heads over ``model`` when divisible.
+    """
+    dp = _dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    tp = mesh.shape.get("model", 1)
+
+    def spec(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        s: list[Any] = [None] * len(shape)
+        if re.search(r"(^|/)(k|v)$", pstr) and len(shape) == 5:
+            # (L, B, S, kvH, hd)
+            if shape[1] % dp_size == 0:
+                s[1] = dp
+            if shape[3] % tp == 0 and tp > 1:
+                s[3] = "model"
+            elif shape[2] % tp == 0 and tp > 1:
+                s[2] = "model"
+            return P(*s)
+        # SSM / recurrent states: (..., B, H, ...) — find the batch dim by
+        # matching known layouts: mlstm (cyc,m,B,H,hd,hd)/(cyc,m,B,H,hd);
+        # slstm (cyc,B,H,hd); mamba (cyc,m,B,H,ds,hd); conv (cyc,m,B,W,C).
+        for i, d in enumerate(shape):
+            if d % dp_size == 0 and d > 1 and dp_size > 1:
+                s[i] = dp
+                # try heads on the next dim
+                if i + 1 < len(shape) and shape[i + 1] % tp == 0 and tp > 1:
+                    s[i + 1] = "model"
+                return P(*s)
+        # batch may be 1 (long_500k): shard a head-like dim over model only
+        for i, d in enumerate(shape[2:], start=2):
+            if d % tp == 0 and tp > 1 and d >= tp:
+                s[i] = "model"
+                return P(*s)
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (used by the model via constrain())
+# ---------------------------------------------------------------------------
+
+_ACT: dict[str, P] | None = None
+
+
+@contextlib.contextmanager
+def activation_ctx(specs: dict[str, P] | None):
+    """Install activation PartitionSpecs for model-internal constraints.
+
+    Keys: "carry" — the (B, S, d) residual stream at block boundaries
+    (the remat-saved tensor; e.g. P(("data",), "model", None) = Megatron-SP
+    sequence sharding).
+    """
+    global _ACT
+    prev = _ACT
+    _ACT = specs
+    try:
+        yield
+    finally:
+        _ACT = prev
+
+
+def constrain(x, name: str):
+    if _ACT is not None and name in _ACT:
+        return jax.lax.with_sharding_constraint(x, _ACT[name])
+    return x

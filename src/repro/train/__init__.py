@@ -1,0 +1,4 @@
+from repro.train.train_step import make_train_step, TrainState
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["make_train_step", "TrainState", "Trainer", "TrainerConfig"]

@@ -1,0 +1,137 @@
+"""Checkpointing: atomic, resumable, shard-aware, numpy-backed.
+
+Design points for cluster scale (orbax is unavailable offline; the layout
+mirrors what a real deployment needs):
+  * **Atomic**: written to ``<dir>/tmp.<step>`` then os.rename'd — a crash
+    mid-write never corrupts the latest checkpoint.
+  * **Async**: ``save_async`` snapshots to host RAM (device_get) and writes
+    on a daemon thread so the train loop is blocked only for the D2H copy.
+  * **Self-describing**: the pytree structure is stored as a flattened
+    key-path -> tensor mapping (npz) + a JSON manifest with step/config —
+    restore works without the original object.
+  * **Elastic**: tensors are stored unsharded (gathered); ``restore`` can
+    re-place them onto ANY mesh via jax.device_put with new shardings —
+    scale-up/scale-down restarts just work (tested).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        key = re.sub(r"[\[\]'\.]", "", key)
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None):
+    """Blocking save. Returns the checkpoint path."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"tmp.{step}"
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp.mkdir(exist_ok=True)
+
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(tmp / "state.npz", **arrays)
+    manifest = {"step": int(step), "keys": sorted(arrays.keys()),
+                "extra": extra or {}}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir)
+    return str(final)
+
+
+_KEEP = 3
+
+
+def _gc(ckpt_dir: pathlib.Path, keep: int = _KEEP):
+    ckpts = sorted(ckpt_dir.glob("step_*"))
+    for old in ckpts[:-keep]:
+        import shutil
+        shutil.rmtree(old, ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot on the caller thread (D2H), write on a daemon thread."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+        self.last_path: str | None = None
+
+    def save(self, ckpt_dir: str, step: int, tree, extra=None):
+        arrays_tree = jax.tree.map(lambda v: np.asarray(jax.device_get(v)),
+                                   tree)
+        self.wait()
+
+        def _write():
+            self.last_path = save(ckpt_dir, step, arrays_tree, extra)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    d = pathlib.Path(ckpt_dir)
+    if not d.exists():
+        return None
+    ckpts = sorted(d.glob("step_*"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].name.split("_")[1])
+
+
+def restore(ckpt_dir: str, like_tree, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``like_tree``.
+
+    shardings: optional matching pytree of NamedSharding — tensors are
+    device_put directly to their (possibly different-mesh) placement.
+    Returns (tree, step).
+    """
+    d = pathlib.Path(ckpt_dir)
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = d / f"step_{step:08d}"
+    data = np.load(path / "state.npz")
+
+    flat_like = _flatten_with_paths(like_tree)
+    if set(flat_like.keys()) != set(data.files):
+        missing = set(flat_like) - set(data.files)
+        extra = set(data.files) - set(flat_like)
+        raise ValueError(f"checkpoint/tree mismatch: missing={missing} "
+                         f"extra={extra}")
+
+    flat_shard = (_flatten_with_paths(shardings)
+                  if shardings is not None else {})
+
+    leaves_like, tdef = jax.tree_util.tree_flatten(like_tree)
+    paths = list(_flatten_with_paths(like_tree).keys())
+    out = []
+    for key, leaf in zip(paths, leaves_like):
+        arr = data[key]
+        if flat_shard:
+            arr = jax.device_put(arr, flat_shard[key])
+        out.append(arr)
+    return tdef.unflatten(out), step

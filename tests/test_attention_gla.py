@@ -1,0 +1,121 @@
+"""Attention variants + GLA core: detailed unit/property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    attention_init, attention_apply, attention_decode,
+    attention_prefill_windowed, attention_decode_windowed)
+from repro.models.gla import chunked_gla, serial_gla
+
+KW = dict(num_heads=4, num_kv_heads=2, head_dim=16)
+
+
+def setup(T=48, B=2, D=64, seed=0):
+    p = attention_init(jax.random.PRNGKey(seed), D, 4, 2, 16)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(seed + 1), (B, T, D))
+    return p, x
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("qc,kc", [(8, 8), (16, 48), (48, 16), (12, 24)])
+    def test_chunk_shapes(self, qc, kc):
+        p, x = setup()
+        o1, _ = attention_apply(p, x, **KW, impl="naive")
+        o2, _ = attention_apply(p, x, **KW, impl="flash", q_chunk=qc,
+                                kv_chunk=kc)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-5, atol=2e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), win=st.sampled_from([0, 8, 17, 40]))
+    def test_flash_equals_naive_any_window(self, seed, win):
+        p, x = setup(seed=seed % 100)
+        o1, _ = attention_apply(p, x, **KW, impl="naive", window=win)
+        o2, _ = attention_apply(p, x, **KW, impl="flash", q_chunk=16,
+                                kv_chunk=16, window=win, unroll=bool(seed % 2))
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=3e-5, atol=3e-6)
+
+
+class TestWindowedRingCache:
+    def test_ring_decode_matches_full_recompute(self):
+        """Windowed ring-buffer decode == full windowed attention, across a
+        cache wrap-around boundary."""
+        W = 16
+        p, x = setup(T=40)
+        B, T, D = x.shape
+        # prefill 24 tokens, then decode 16 more (wraps the W=16 ring twice)
+        out_p, cache = attention_prefill_windowed(p, x[:, :24], window=W, **KW)
+        outs = []
+        for t in range(24, T):
+            o, cache = attention_decode_windowed(p, x[:, t:t + 1], cache,
+                                                 jnp.int32(t), window=W, **KW)
+            outs.append(o)
+        got = jnp.concatenate(outs, axis=1)
+
+        ref_full, _ = attention_apply(p, x, **KW, window=W)
+        ref = ref_full[:, 24:]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=3e-4, atol=5e-5)
+
+    def test_plain_decode_matches_full(self):
+        p, x = setup(T=32)
+        B, T, D = x.shape
+        S_cache = 64
+        cache = {"k": jnp.zeros((B, S_cache, 2, 16)),
+                 "v": jnp.zeros((B, S_cache, 2, 16))}
+        outs = []
+        for t in range(T):
+            o, cache = attention_decode(p, x[:, t:t + 1], cache, jnp.int32(t),
+                                        **KW)
+            outs.append(o)
+        got = jnp.concatenate(outs, axis=1)
+        ref, _ = attention_apply(p, x, **KW)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=3e-4, atol=5e-5)
+
+
+class TestGLAProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([2, 4, 8, 5]),
+           use_norm=st.booleans())
+    def test_chunked_equals_serial(self, seed, chunk, use_norm):
+        rng = np.random.default_rng(seed)
+        B, T, H, dk, dv = 2, 16, 2, 4, 8
+        q = jnp.asarray(rng.normal(size=(B, T, H, dk)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, T, H, dk)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, T, H, dv)), jnp.float32)
+        lg = jnp.asarray(np.log(rng.uniform(0.5, 1.0, (B, T, H))), jnp.float32)
+        li = jnp.asarray(np.log(rng.uniform(0.05, 1.0, (B, T, H))), jnp.float32)
+        y1, S1, n1 = chunked_gla(q, k, v, lg, li, chunk=chunk,
+                                 use_norm=use_norm)
+        y2, S2, n2 = serial_gla(q, k, v, lg, li, use_norm=use_norm)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(S1), np.asarray(S2),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_state_carry_composes(self):
+        """GLA over [0:T] == GLA over [0:T/2] then [T/2:T] with carried
+        state (the prefill-continuation invariant)."""
+        rng = np.random.default_rng(3)
+        B, T, H, dk, dv = 1, 16, 2, 4, 4
+        mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+        q, k, v = mk(B, T, H, dk), mk(B, T, H, dk), mk(B, T, H, dv)
+        lg = jnp.asarray(np.log(rng.uniform(0.7, 1.0, (B, T, H))), jnp.float32)
+        li = jnp.zeros((B, T, H), jnp.float32)
+        y_full, S_full, _ = chunked_gla(q, k, v, lg, li, chunk=4,
+                                        use_norm=False)
+        h = T // 2
+        y1, S1, n1 = chunked_gla(q[:, :h], k[:, :h], v[:, :h], lg[:, :h],
+                                 li[:, :h], chunk=4, use_norm=False)
+        y2, S2, _ = chunked_gla(q[:, h:], k[:, h:], v[:, h:], lg[:, h:],
+                                li[:, h:], chunk=4, use_norm=False,
+                                S0=S1, n0=n1)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_full), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(S2), np.asarray(S_full),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,25 @@
+"""Elastic scale-down restart: checkpoint on an 8-device mesh, restore and
+continue on a 4-device mesh (different sharding layout)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_elastic_scale_down_restart(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    script = str(ROOT / "tests" / "_elastic_check.py")
+    p1 = subprocess.run([sys.executable, script, "save", str(tmp_path)],
+                        capture_output=True, text=True, env=env, timeout=900)
+    assert p1.returncode == 0, p1.stderr
+    assert "SAVED" in p1.stdout
+    p2 = subprocess.run([sys.executable, script, "restore", str(tmp_path)],
+                        capture_output=True, text=True, env=env, timeout=900)
+    assert p2.returncode == 0, p2.stderr
+    assert "RESTORED_AND_TRAINED" in p2.stdout

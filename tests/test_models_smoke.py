@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-grad step + prefill/decode on CPU; assert shapes and no NaNs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_arch, smoke_config, SMOKE_SHAPE
+from repro.models.model import build_model
+
+
+def make_batch(cfg, key, B=2, S=32):
+    kt, kl, ki = jax.random.split(key, 3)
+    V = cfg.vocab_size
+    if cfg.family == "audio":
+        K = cfg.num_codebooks
+        return {"tokens": jax.random.randint(kt, (B, K, S), 0, V),
+                "labels": jax.random.randint(kl, (B, K, S), 0, V)}
+    if cfg.family == "vlm":
+        n_img = cfg.num_image_tokens
+        S_txt = S - n_img
+        return {"tokens": jax.random.randint(kt, (B, S_txt), 0, V),
+                "labels": jax.random.randint(kl, (B, S_txt), 0, V),
+                "image_embeds": 0.1 * jax.random.normal(
+                    ki, (B, n_img, cfg.d_model))}
+    return {"tokens": jax.random.randint(kt, (B, S), 0, V),
+            "labels": jax.random.randint(kl, (B, S), 0, V)}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestArchSmoke:
+    def _setup(self, arch):
+        cfg = smoke_config(get_arch(arch))
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = make_batch(cfg, jax.random.PRNGKey(1), B=2, S=32)
+        return cfg, m, params, batch
+
+    def test_forward_loss_finite(self, arch):
+        cfg, m, params, batch = self._setup(arch)
+        loss, metrics = jax.jit(m.forward)(params, batch)
+        assert loss.shape == ()
+        assert np.isfinite(float(loss)), (arch, float(loss))
+        # random init: loss should be near log(vocab)
+        assert 0.0 < float(loss) < 3 * np.log(cfg.vocab_size) + 2
+
+    def test_train_grad_step(self, arch):
+        cfg, m, params, batch = self._setup(arch)
+
+        def loss_fn(p):
+            loss, _ = m.forward(p, batch)
+            return loss
+
+        grads = jax.jit(jax.grad(loss_fn))(params)
+        flat = jax.tree.leaves(grads)
+        assert all(bool(jnp.isfinite(g).all()) for g in flat), arch
+        gnorm = float(jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                                   for g in flat)))
+        assert 0 < gnorm < 1e6, (arch, gnorm)
+
+    def test_decode_step(self, arch):
+        cfg, m, params, batch = self._setup(arch)
+        B = 2
+        cache = m.init_cache(B, cache_len=64)
+        if cfg.family == "audio":
+            tok = jnp.zeros((B, cfg.num_codebooks, 1), jnp.int32)
+        else:
+            tok = jnp.zeros((B, 1), jnp.int32)
+        logits, cache2 = jax.jit(m.decode_step)(params, cache, tok,
+                                                jnp.int32(0))
+        if cfg.family == "audio":
+            assert logits.shape == (B, cfg.num_codebooks, 1, cfg.padded_vocab)
+        else:
+            assert logits.shape == (B, 1, cfg.padded_vocab)
+        assert bool(jnp.isfinite(logits).all()), arch
+        # structure preserved
+        assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+    def test_prefill_matches_decode(self, arch):
+        """Prefill then one decode step == running S+1 tokens at once
+        (checks cache correctness end to end)."""
+        cfg, m, params, batch = self._setup(arch)
+        if cfg.family in ("vlm",):
+            pytest.skip("vlm prefill covered by forward; decode tested above")
+        if cfg.family == "moe":
+            # sinkhorn routing is population-dependent; prefill(S) vs
+            # prefill(S+1) legitimately route differently. Compare the
+            # population-independent top-k path.
+            import dataclasses
+            cfg = dataclasses.replace(cfg, router="topk")
+            m = build_model(cfg)
+        B, S = 2, 16
+        key = jax.random.PRNGKey(3)
+        if cfg.family == "audio":
+            toks = jax.random.randint(key, (B, cfg.num_codebooks, S + 1), 0,
+                                      cfg.vocab_size)
+            prompt = {"tokens": toks[..., :S]}
+            next_tok = toks[..., S:S + 1]
+        else:
+            toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+            prompt = {"tokens": toks[:, :S]}
+            next_tok = toks[:, S:S + 1]
+
+        logits_p, cache = jax.jit(
+            lambda p, b: m.prefill(p, b, cache_len=64))(params, prompt)
+        logits_d, _ = jax.jit(m.decode_step)(params, cache, next_tok,
+                                             jnp.int32(S))
+
+        # reference: full forward logits at position S via prefill of S+1
+        full = {"tokens": toks}
+        logits_full, _ = jax.jit(
+            lambda p, b: m.prefill(p, b, cache_len=64))(params, full)
+        np.testing.assert_allclose(
+            np.asarray(logits_d, np.float32).squeeze(),
+            np.asarray(logits_full, np.float32).squeeze(),
+            rtol=2e-2, atol=2e-2)
+
+
+def test_param_counts_match_assignment():
+    """Full configs instantiate analytically near their nameplate sizes."""
+    # Bounds sanity-check the ASSIGNED dims (which are authoritative even
+    # where they disagree with a checkpoint's nameplate: e.g. the assigned
+    # moonshot dims [48L x 64e x d_ff 1408] total ~28B, not 16B; phi4's 3.8B
+    # nameplate assumes tied embeddings over its 200k vocab).
+    expect = {
+        "granite-34b": (30e9, 40e9),
+        "phi4-mini-3.8b": (3.0e9, 4.8e9),
+        "smollm-360m": (0.25e9, 0.5e9),
+        "granite-3-2b": (2.0e9, 3.3e9),
+        "olmoe-1b-7b": (5.5e9, 8e9),
+        "moonshot-v1-16b-a3b": (20e9, 32e9),
+        "xlstm-350m": (0.15e9, 0.55e9),
+        "zamba2-7b": (5.5e9, 9.5e9),
+        "llava-next-34b": (30e9, 40e9),
+        "musicgen-medium": (1.2e9, 2.5e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_arch(name).param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,20 @@
+"""Pipeline parallelism (GPipe over a mesh axis) — subprocess test."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_pipeline_check.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "PIPELINE_CHECK_PASSED" in proc.stdout

@@ -1,0 +1,81 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import UOTConfig, sinkhorn_uot_baseline, sinkhorn_uot_fused
+from repro.kernels import ops, ref
+from repro.kernels.uot_fused import fused_iteration
+
+
+dims = st.integers(min_value=1, max_value=7)
+
+
+def _problem(M, N, seed, mass_ratio):
+    rng = np.random.default_rng(seed)
+    C = rng.uniform(0, 1, size=(M, N)).astype(np.float32)
+    a = rng.uniform(0.5, 1.5, size=M).astype(np.float32)
+    b = rng.uniform(0.5, 1.5, size=N).astype(np.float32)
+    a, b = a / a.sum(), b / b.sum() * mass_ratio
+    K = np.exp(-C / 0.1) * (a[:, None] * b[None, :])
+    return jnp.asarray(K), jnp.asarray(a), jnp.asarray(b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m8=dims, n8=dims, seed=st.integers(0, 2**31 - 1),
+       mass_ratio=st.floats(0.3, 3.0),
+       reg_m=st.floats(0.1, 50.0),
+       iters=st.integers(1, 30))
+def test_fused_equals_baseline_any_problem(m8, n8, seed, mass_ratio, reg_m,
+                                           iters):
+    """Schedule-only claim: MAP-UOT == 4-pass baseline for ALL inputs."""
+    M, N = 8 * m8, 16 * n8
+    K, a, b = _problem(M, N, seed, mass_ratio)
+    cfg = UOTConfig(reg=0.1, reg_m=reg_m, num_iters=iters)
+    A1, _ = sinkhorn_uot_baseline(K, a, b, cfg)
+    A2, _ = sinkhorn_uot_fused(K, a, b, cfg)
+    np.testing.assert_allclose(np.asarray(A1), np.asarray(A2),
+                               rtol=5e-5, atol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       fi=st.floats(0.1, 1.0),
+       bm_log=st.integers(3, 6))
+def test_kernel_matches_oracle_any_input(seed, fi, bm_log):
+    """Pallas fused kernel == oracle for random shapes/factors/exponents."""
+    rng = np.random.default_rng(seed)
+    bm = 2 ** bm_log
+    M = bm * int(rng.integers(1, 5))
+    N = 128 * int(rng.integers(1, 5))
+    A = jnp.asarray(rng.uniform(0.01, 2.0, size=(M, N)), jnp.float32)
+    fcol = jnp.asarray(rng.uniform(0.1, 2.0, size=N), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.1, 2.0, size=M), jnp.float32)
+    out, cs = fused_iteration(A, fcol, a, fi=float(fi), block_m=bm,
+                              interpret=True)
+    out_r, cs_r = ref.fused_iteration_ref(A, fcol, a, fi=float(fi))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), rtol=3e-5)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(cs_r), rtol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       M=st.integers(3, 90), N=st.integers(3, 90))
+def test_padding_invariance(seed, M, N):
+    """ops.solve_fused pads to (bm, 128); result must be pad-independent."""
+    K, a, b = _problem(M, N, seed, 1.2)
+    cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=10)
+    A_core, _ = sinkhorn_uot_fused(K, a, b, cfg)
+    A_kern, _ = ops.solve_fused(K, a, b, cfg, block_m=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(A_kern), np.asarray(A_core),
+                               rtol=5e-5, atol=1e-8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), mass_ratio=st.floats(0.2, 5.0))
+def test_coupling_nonnegative_finite(seed, mass_ratio):
+    K, a, b = _problem(32, 48, seed, mass_ratio)
+    cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=100)
+    A, _ = sinkhorn_uot_fused(K, a, b, cfg)
+    A = np.asarray(A)
+    assert np.all(A >= 0) and np.all(np.isfinite(A))

@@ -1,0 +1,157 @@
+"""Sharding rule table + roofline HLO parser unit tests (no big meshes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.launch import roofline
+from repro.models.model import build_model
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Duck-typed mesh: .axis_names + .devices.shape + .shape mapping."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+        self.shape = dict(zip(names, shape))
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+
+
+def _specs_for(arch):
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return cfg, shapes, shd.param_specs(cfg, shapes, MESH)
+
+
+class TestParamSpecs:
+    def test_dense_tp_pattern(self):
+        cfg, shapes, specs = _specs_for("granite-3-2b")
+        lyr = specs["layers"]
+        # col-parallel qkv / row-parallel o (megatron pair); stacked L dim free
+        assert lyr["attn"]["w_q"] == P(None, "data", "model")
+        assert lyr["attn"]["w_o"] == P(None, "model", "data")
+        assert lyr["mlp"]["w_up"] == P(None, "data", "model")
+        assert lyr["mlp"]["w_down"] == P(None, "model", "data")
+        # vocab-parallel head; d-sharded embedding
+        assert specs["head"]["w_out"] == P("data", "model")
+        assert specs["embed"]["table"] == P("data", "model")
+        # norms replicated
+        assert specs["final_norm"]["scale"] == P(None)
+
+    def test_moe_expert_parallel(self):
+        cfg, shapes, specs = _specs_for("olmoe-1b-7b")
+        moe = specs["layers"]["moe"]
+        # experts over model (EP), d_model FSDP; router replicated
+        assert moe["w_gate"] == P(None, "model", "data", None)
+        assert moe["w_router"] == P(None, None, None)
+
+    def test_indivisible_heads_shard_flat_dim(self):
+        """smollm: 15 heads but H*hd = 960 IS divisible by 16 -> TP shards
+        the flat projection dim (the per-head reshape resharding is XLA's
+        job); tiny tensors (<2^20 elems) skip FSDP."""
+        cfg, shapes, specs = _specs_for("smollm-360m")
+        wq = specs["layers"]["attn"]["w_q"]
+        assert wq[-1] == "model"
+        assert "data" not in wq  # 960*960 < 2^20: no FSDP
+        # d_ff = 2560 divisible -> TP applies on mlp
+        assert specs["layers"]["mlp"]["w_up"][-1] == "model"
+
+    def test_hybrid_and_ssm_specs_exist(self):
+        for arch in ("zamba2-7b", "xlstm-350m"):
+            cfg, shapes, specs = _specs_for(arch)
+            flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+            assert all(isinstance(s, P) for s in flat)
+
+    def test_specs_valid_against_shapes(self):
+        """Every sharded dim must divide evenly (the rule's invariant)."""
+        mesh_axes = {"data": 16, "model": 16}
+        for arch in ("granite-34b", "phi4-mini-3.8b", "moonshot-v1-16b-a3b",
+                     "musicgen-medium", "llava-next-34b"):
+            cfg, shapes, specs = _specs_for(arch)
+
+            def check(s, spec):
+                for dim, p in zip(s.shape, spec):
+                    if p is None:
+                        continue
+                    axes = p if isinstance(p, tuple) else (p,)
+                    k = 1
+                    for ax in axes:
+                        k *= mesh_axes[ax]
+                    assert dim % k == 0, (arch, s.shape, spec)
+
+            jax.tree.map(check, shapes, specs,
+                         is_leaf=lambda x: isinstance(x, P))
+
+
+class TestBatchCacheSpecs:
+    def test_batch_sharded_over_dp(self):
+        cfg = get_arch("granite-3-2b")
+        shapes = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+        specs = shd.batch_specs(cfg, shapes, MESH)
+        assert specs["tokens"] == P(("data",), None)
+
+    def test_batch_of_one_not_sharded(self):
+        cfg = get_arch("zamba2-7b")
+        shapes = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+        specs = shd.batch_specs(cfg, shapes, MESH)
+        assert specs["tokens"] == P(None, None)
+
+    def test_kv_cache_mqa_shards_sequence(self):
+        """granite-34b kv=1: heads can't shard -> sequence dim over model."""
+        cfg = get_arch("granite-34b")
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda: model.init_cache(128, 32768))
+        specs = shd.cache_specs(cfg, shapes, MESH)
+        assert specs["k"] == P(None, ("data",), "model", None, None)
+
+    def test_kv_cache_gqa_shards_heads(self):
+        cfg = get_arch("olmoe-1b-7b")  # kv=16
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda: model.init_cache(128, 32768))
+        specs = shd.cache_specs(cfg, shapes, MESH)
+        assert specs["k"] == P(None, ("data",), None, "model", None)
+
+
+class TestRooflineParser:
+    HLO = """
+  %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[256,512]{1,0} all-gather(%y), dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(%z), dimensions={0}
+  %cp = (f32[8,8]{1,0}, f32[8,8]{1,0}) collective-permute-start(%w)
+  %cpd = f32[8,8]{1,0} collective-permute-done(%cp)
+  %a2a = f32[4,4]{1,0} all-to-all(%v), dimensions={1}
+"""
+
+    def test_collective_bytes(self):
+        out = roofline.collective_bytes(self.HLO)
+        assert out["counts"] == {"all-reduce": 1, "all-gather": 1,
+                                 "reduce-scatter": 1,
+                                 "collective-permute": 1, "all-to-all": 1}
+        b = out["bytes_by_kind"]
+        assert b["all-reduce"] == 2 * 16 * 1024 * 4      # 2x ring
+        assert b["all-gather"] == 256 * 512 * 2
+        assert b["reduce-scatter"] == 64 * 4
+        assert b["all-to-all"] == 4 * 4 * 4
+        assert b["collective-permute"] == 2 * 8 * 8 * 4  # start tuple
+
+    def test_terms_and_bottleneck(self):
+        t = roofline.RooflineTerms(flops=197e12, hbm_bytes=819e9 * 2,
+                                   coll_bytes=50e9 * 0.5)
+        assert abs(t.t_comp - 1.0) < 1e-9
+        assert abs(t.t_mem - 2.0) < 1e-9
+        assert t.bottleneck == "memory"
+        assert t.t_bound == t.t_mem
+
+    def test_model_flops(self):
+        cfg = get_arch("granite-3-2b")
+        shape = type("S", (), {"kind": "train", "global_batch": 256,
+                               "seq_len": 4096})()
+        mf = roofline.model_flops(cfg, shape)
+        assert abs(mf - 6 * cfg.param_count() * 256 * 4096) / mf < 1e-9
