@@ -1,0 +1,73 @@
+"""Batched serving path: one fused launch for B problems vs the alternatives.
+
+Compares, for a stack of B same-shape problems:
+  * ``batched_fused``   — ops.solve_fused_batched, ONE (batch, row_blocks)
+                          grid kernel launch per iteration for the stack.
+  * ``loop_fused``      — Python loop of per-problem ops.solve_fused
+                          (B dispatches + B paddings per solve).
+  * ``vmap_baseline``   — jax.vmap of the 4-pass jnp baseline (XLA batching,
+                          no explicit single-pass schedule).
+  * ``batched_bf16``    — batched_fused with bf16 storage / fp32 accumulation
+                          (half the HBM bytes per iteration).
+
+The ISSUE-1 acceptance bar: batched_fused >= 1.5x loop_fused at B=32,
+256x256 on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import UOTConfig, sinkhorn_uot_baseline
+from repro.kernels import ops
+from benchmarks.common import time_fn, emit
+
+CASES = [(32, 256, 256), (8, 512, 512)]
+ITERS = 20
+
+
+def make_stack(B, M, N, reg=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    C = rng.uniform(0, 1, size=(B, M, N)).astype(np.float32)
+    a = rng.uniform(0.5, 1.5, size=(B, M)).astype(np.float32)
+    b = rng.uniform(0.5, 1.5, size=(B, N)).astype(np.float32)
+    a = a / a.sum(axis=1, keepdims=True)
+    b = b / b.sum(axis=1, keepdims=True) * 1.2
+    K = np.exp(-C / reg) * (a[:, :, None] * b[:, None, :])
+    return jnp.asarray(K), jnp.asarray(a), jnp.asarray(b)
+
+
+def run():
+    cfg = UOTConfig(reg=0.05, reg_m=1.0, num_iters=ITERS)
+    for B, M, N in CASES:
+        K, a, b = make_stack(B, M, N)
+
+        def batched(K, a, b):
+            return ops.solve_fused_batched(K, a, b, cfg)[0]
+
+        def loop(K, a, b):
+            return [ops.solve_fused(K[i], a[i], b[i], cfg)[0]
+                    for i in range(B)]
+
+        vmap_base = jax.jit(jax.vmap(
+            lambda K_, a_, b_: sinkhorn_uot_baseline(K_, a_, b_, cfg)[0]))
+
+        def batched_bf16(K, a, b):
+            return ops.solve_fused_batched(
+                K, a, b, cfg, storage_dtype=jnp.bfloat16)[0]
+
+        t_batched = time_fn(batched, K, a, b)
+        t_loop = time_fn(loop, K, a, b)
+        t_vmap = time_fn(vmap_base, K, a, b)
+        t_bf16 = time_fn(batched_bf16, K, a, b)
+
+        tag = f"B{B}_{M}x{N}"
+        emit(f"batch_loop_fused_{tag}", t_loop / ITERS * 1e6,
+             f"iters={ITERS}")
+        emit(f"batch_fused_{tag}", t_batched / ITERS * 1e6,
+             f"speedup={t_loop / t_batched:.2f}x_vs_loop")
+        emit(f"batch_vmap_baseline_{tag}", t_vmap / ITERS * 1e6,
+             f"speedup={t_vmap / t_batched:.2f}x_slower_than_batched")
+        emit(f"batch_fused_bf16_{tag}", t_bf16 / ITERS * 1e6,
+             f"speedup={t_loop / t_bf16:.2f}x_vs_loop")

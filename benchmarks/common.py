@@ -7,6 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Records of every emit() since the last reset_records(); run.py drains this
+# into per-suite BENCH_<suite>.json files so the perf trajectory accumulates.
+RECORDS: list[dict] = []
+
 
 def make_problem(M, N, reg=0.05, seed=0, dtype=jnp.float32):
     rng = np.random.default_rng(seed)
@@ -32,3 +36,12 @@ def time_fn(fn, *args, warmup=1, iters=3):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
+
+
+def reset_records() -> list[dict]:
+    """Return the accumulated records and start a fresh list."""
+    global RECORDS
+    out, RECORDS = RECORDS, []
+    return out

@@ -1,6 +1,8 @@
 """Benchmark harness: one module per paper table/figure (+ beyond-paper).
 
-Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+Prints ``name,us_per_call,derived`` CSV and writes one ``BENCH_<suite>.json``
+per suite (into --out-dir, default cwd) so the perf trajectory accumulates
+across PRs. Mapping to the paper:
   bench_uot          -> Fig 9/10 (CPU single/multi-thread performance)
   bench_traffic      -> Fig 11  (cache misses -> HBM traffic)
   bench_kernel       -> Fig 8/13/14 (GPU tiling/perf/throughput -> TPU roofline)
@@ -8,26 +10,66 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
   bench_distributed  -> Fig 16  (Tianhe-1 scaling -> pod scaling)
   bench_application  -> Fig 17  (color-transfer application)
   bench_moe_router   -> beyond-paper (Sinkhorn-UOT MoE routing)
+  bench_batch        -> beyond-paper (batched serving: fused stack vs loop)
 """
+import argparse
+import json
+import pathlib
+import platform
 import sys
 import traceback
 
+import jax
 
-def main() -> None:
-    from benchmarks import (bench_uot, bench_traffic, bench_kernel,
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default=".",
+                        help="directory for BENCH_<suite>.json files")
+    parser.add_argument("--suite", action="append", default=None,
+                        help="run only these suites (repeatable), e.g. "
+                             "--suite bench_batch")
+    args = parser.parse_args(argv)
+
+    from benchmarks import (common, bench_uot, bench_traffic, bench_kernel,
                             bench_memory, bench_distributed,
-                            bench_application, bench_moe_router)
+                            bench_application, bench_moe_router, bench_batch)
     mods = [bench_uot, bench_traffic, bench_kernel, bench_memory,
-            bench_distributed, bench_application, bench_moe_router]
+            bench_distributed, bench_application, bench_moe_router,
+            bench_batch]
+    if args.suite:
+        known = {m.__name__.split(".")[-1] for m in mods}
+        unknown = set(args.suite) - known
+        if unknown:
+            parser.error(f"unknown suite(s) {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
+        mods = [m for m in mods if m.__name__.split(".")[-1] in args.suite]
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     failed = 0
     for mod in mods:
+        suite = mod.__name__.split(".")[-1]
+        json_path = out_dir / f"BENCH_{suite}.json"
+        common.reset_records()
         try:
             mod.run()
         except Exception:
             failed += 1
             print(f"{mod.__name__},-1,FAILED", file=sys.stderr)
             traceback.print_exc()
+            # don't let a stale JSON from an earlier run masquerade as
+            # this run's result
+            json_path.unlink(missing_ok=True)
+            continue
+        payload = {
+            "suite": suite,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "records": common.reset_records(),
+        }
+        json_path.write_text(json.dumps(payload, indent=2) + "\n")
     if failed:
         raise SystemExit(1)
 

@@ -1,4 +1,8 @@
-"""Batched serving demo: prefill + continuous greedy decode with KV cache.
+"""Batched serving demo: LLM decode batching + UOT request batching.
+
+Part 1: prefill + continuous greedy decode with KV cache (ServeEngine).
+Part 2: shape-bucketed batch solving of queued UOT problems (UOTBatchEngine)
+        — many requests, one fused kernel launch per shape bucket.
 
 Run:  PYTHONPATH=src python examples/serve_demo.py
 """
@@ -8,8 +12,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
+from repro.core import UOTConfig
 from repro.models.model import build_model
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, UOTBatchEngine
 
 
 def main():
@@ -31,6 +36,22 @@ def main():
 
     tps = engine.throughput_probe(steps=16, prompt_len=16)
     print(f"\ndecode throughput (batch=4, CPU): {tps:.1f} tokens/s")
+
+    # ---- UOT request batching -------------------------------------------
+    uot = UOTBatchEngine(UOTConfig(reg=0.05, reg_m=1.0, num_iters=50),
+                         max_batch=16)
+    rids = []
+    for k, (m, n) in enumerate([(100, 120), (64, 128), (90, 120), (250, 300)]):
+        C = rng.uniform(0, 1, (m, n)).astype(np.float32)
+        a = rng.uniform(0.5, 1.5, m).astype(np.float32)
+        b = rng.uniform(0.5, 1.5, n).astype(np.float32)
+        K = np.exp(-C / 0.05) * (a[:, None] / a.sum() * b[None, :] / b.sum())
+        rids.append(uot.submit(K, a / a.sum(), b / b.sum()))
+    print(f"\nqueued {uot.pending} UOT requests of mixed shapes")
+    couplings = uot.flush()
+    for rid in rids:
+        P = np.asarray(couplings[rid])
+        print(f"request {rid}: coupling {P.shape}, mass={P.sum():.4f}")
 
 
 if __name__ == "__main__":

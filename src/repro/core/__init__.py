@@ -15,7 +15,8 @@ Solver family
 """
 from repro.core.problem import UOTConfig, gibbs_kernel, uot_cost
 from repro.core.sinkhorn_baseline import sinkhorn_uot_baseline
-from repro.core.sinkhorn_fused import sinkhorn_uot_fused
+from repro.core.sinkhorn_fused import (sinkhorn_uot_fused,
+                                       sinkhorn_uot_fused_batched)
 from repro.core.sinkhorn_uv import sinkhorn_uot_uv, sinkhorn_uot_uv_fused
 from repro.core.log_domain import sinkhorn_uot_log
 from repro.core.convergence import marginal_error, mass
@@ -26,6 +27,7 @@ __all__ = [
     "uot_cost",
     "sinkhorn_uot_baseline",
     "sinkhorn_uot_fused",
+    "sinkhorn_uot_fused_batched",
     "sinkhorn_uot_uv",
     "sinkhorn_uot_uv_fused",
     "sinkhorn_uot_log",

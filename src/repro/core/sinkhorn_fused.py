@@ -77,3 +77,20 @@ def sinkhorn_uot_fused(A0: jax.Array, a: jax.Array, b: jax.Array,
             cond, body, (A0, colsum0, prev0, jnp.int32(0), jnp.float32(jnp.inf)))
 
     return A, {"iters": iters, "err": err, "colsum": colsum}
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def sinkhorn_uot_fused_batched(A0: jax.Array, a: jax.Array, b: jax.Array,
+                               cfg: UOTConfig):
+    """Batched Algorithm 1 — pure-jnp semantic reference for the stacked path.
+
+    A0: (B, M, N); a: (B, M); b: (B, N). Simply ``vmap`` of the single-problem
+    solver: this is the *semantic* target the batched Pallas kernel
+    (``repro.kernels.uot_batched``) must match; the explicit one-launch
+    (batch, row_blocks) memory schedule lives in the kernel. Note the
+    ``cfg.tol`` early-exit under vmap only stops once EVERY problem in the
+    stack has converged (converged problems keep iterating harmlessly —
+    their factors are ~1).
+    """
+    return jax.vmap(lambda A_, a_, b_: sinkhorn_uot_fused(A_, a_, b_, cfg)
+                    )(A0, a, b)

@@ -5,12 +5,19 @@
 - ``uot_halfpass``: two half-fused passes with 2-D tiling for very wide
   matrices (the paper's GPU part-2/part-4 split).
 - ``uot_uv_fused``: beyond-paper read-only pass in u/v-potential space.
-- ``ops``: padding/block-size/interpret handling + assembled solvers.
+- ``uot_batched``: stacked problems on a (batch, row_blocks) grid — one
+  launch for B problems, per-problem column-sum accumulators.
+- ``ops``: padding/block-size/interpret handling + assembled solvers
+  (single, batched, and shape-bucketed ragged batching).
 - ``ref``: pure-jnp oracles.
 
 All kernels validate on CPU via ``interpret=True``; block shapes are
-(8k, 128m)-aligned for the TPU VPU.
+(8k, 128m)-aligned for the TPU VPU ((16k, 128m) for bf16 storage). Every
+kernel takes ``acc_dtype`` (fp32 default) so the coupling/Gibbs matrix can
+be stored bf16 while reductions and factors stay fp32.
 """
-from repro.kernels import ops, ref, uot_fused, uot_halfpass, uot_uv_fused
+from repro.kernels import (ops, ref, uot_batched, uot_fused, uot_halfpass,
+                           uot_uv_fused)
 
-__all__ = ["ops", "ref", "uot_fused", "uot_halfpass", "uot_uv_fused"]
+__all__ = ["ops", "ref", "uot_batched", "uot_fused", "uot_halfpass",
+           "uot_uv_fused"]

@@ -3,6 +3,24 @@
 Handles: zero-padding to hardware-aligned shapes (the rescaling math is
 invariant to zero rows/cols), VMEM-aware block-size selection, interpret-mode
 fallback on non-TPU backends, and full solver loops assembled from kernels.
+
+Batched & mixed-precision solving
+---------------------------------
+Serving solves many small/medium problems per step. ``solve_fused_batched``
+and ``solve_uv_batched`` run a whole stack of same-shape problems in ONE
+kernel launch over a ``(batch, row_blocks)`` grid (see ``uot_batched``),
+keeping the per-problem single-pass HBM schedule; ``solve_fused_bucketed``
+extends this to ragged problem lists by shape-bucketed zero-padding (pad each
+problem to its bucket's (M, N) — zero rows/cols are exact no-ops for the
+rescaling math).
+
+All solvers accept a bf16 *storage* mode (``storage_dtype=jnp.bfloat16`` or
+``UOTConfig(dtype=jnp.bfloat16)``): the coupling matrix lives in bf16 in
+HBM/VMEM while every reduction and rescale factor is computed fp32
+(``acc_dtype``). On a bandwidth-bound kernel this halves bytes moved:
+fused traffic per problem per iteration is ``M*N*2*itemsize + O(M+N)`` bytes
+— 2 MB for 512x512 fp32, 1 MB bf16. ``pick_block_m`` budgets VMEM with the
+storage and accumulator itemsizes separately.
 """
 from __future__ import annotations
 
@@ -12,13 +30,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.problem import UOTConfig, rescale_factors
-from repro.kernels import uot_fused, uot_halfpass, uot_uv_fused
+from repro.kernels import uot_batched, uot_fused, uot_halfpass, uot_uv_fused
 
 # TPU v5e VMEM is 128 MiB; keep the working set (in + out + accumulators,
 # double-buffered) comfortably under half of it.
 _VMEM_BUDGET_BYTES = 32 * 1024 * 1024
 _LANE = 128       # TPU lane width (minor dim alignment)
-_SUBLANE = 8      # fp32 sublane count (use 16 for bf16)
+_SUBLANE = 8      # fp32 sublane count (16 for bf16 — see sublane_for)
 
 
 def on_tpu() -> bool:
@@ -29,41 +47,77 @@ def _interpret_default(interpret):
     return (not on_tpu()) if interpret is None else interpret
 
 
-def pick_block_m(M: int, N: int, itemsize: int = 4) -> int:
-    """Largest power-of-two row block (multiple of 8) whose (bm, N) in+out
-    tiles fit the VMEM budget."""
+def _sublane(itemsize: int) -> int:
+    return 2 * _SUBLANE if itemsize < 4 else _SUBLANE
+
+
+def sublane_for(dtype) -> int:
+    """Minor-2 dim alignment: 8 rows fp32, 16 rows for 2-byte types."""
+    return _sublane(jnp.dtype(dtype).itemsize)
+
+
+def _storage(cfg: UOTConfig, storage_dtype):
+    return jnp.dtype(storage_dtype if storage_dtype is not None else cfg.dtype)
+
+
+def pick_block_m(M: int, N: int, itemsize: int = 4,
+                 acc_itemsize: int = 4) -> int:
+    """Largest power-of-two row block whose VMEM working set fits the budget.
+
+    The working set per grid step is the in + out tiles in the storage dtype
+    (``itemsize`` bytes/elt, double-buffered by the pipeline) plus the fp32
+    compute copy of the tile (``acc_itemsize``): ``bm * N * (2*itemsize +
+    acc_itemsize)`` bytes. Mixed precision (bf16 storage) therefore earns a
+    larger block than fp32 at the same budget. The block is also clamped to
+    not exceed the (padded) problem height — no point padding M past the
+    next power of two.
+    """
+    sub = _sublane(itemsize)
+    bytes_per_row = N * (2 * itemsize + acc_itemsize)
     bm = 512
-    while bm > _SUBLANE and 2 * bm * N * itemsize > _VMEM_BUDGET_BYTES:
+    while bm > sub and (bm * bytes_per_row > _VMEM_BUDGET_BYTES
+                        or bm >= 2 * M):
         bm //= 2
-    return max(bm, _SUBLANE)
+    return max(bm, sub)
 
 
 def pad_to(x: jax.Array, m_mult: int, n_mult: int) -> jax.Array:
-    M, N = x.shape
+    """Zero-pad the last two dims to multiples (works for 2-D and 3-D)."""
+    M, N = x.shape[-2:]
     pm = (-M) % m_mult
     pn = (-N) % n_mult
     if pm or pn:
-        x = jnp.pad(x, ((0, pm), (0, pn)))
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, pm), (0, pn)]
+        x = jnp.pad(x, pad)
     return x
 
 
 def pad_vec(x: jax.Array, mult: int) -> jax.Array:
-    p = (-x.shape[0]) % mult
-    return jnp.pad(x, (0, p)) if p else x
+    """Zero-pad the last dim to a multiple (works for (M,) and (B, M))."""
+    p = (-x.shape[-1]) % mult
+    if not p:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, p)]
+    return jnp.pad(x, pad)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret"))
+@functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret",
+                                             "storage_dtype"))
 def solve_fused(A0: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig,
-                *, block_m: int | None = None, interpret: bool | None = None):
+                *, block_m: int | None = None, interpret: bool | None = None,
+                storage_dtype=None):
     """MAP-UOT solve built entirely from the fused Pallas kernel.
 
     Matches core.sinkhorn_uot_fused iterates (asserted in tests). Inputs of
     arbitrary shape; zero-padded internally to (block_m, 128) multiples.
+    ``storage_dtype`` (default ``cfg.dtype``) sets the in-HBM dtype of the
+    coupling matrix; accumulation/factors stay fp32.
     """
     interpret = _interpret_default(interpret)
     M, N = A0.shape
-    bm = block_m or pick_block_m(M, N, jnp.dtype(A0.dtype).itemsize)
-    Ap = pad_to(A0.astype(cfg.dtype), bm, _LANE)
+    sdt = _storage(cfg, storage_dtype)
+    bm = block_m or pick_block_m(M, N, sdt.itemsize)
+    Ap = pad_to(A0.astype(sdt), bm, _LANE)
     ap = pad_vec(a, bm)
     bp = pad_vec(b, _LANE)
     fi = cfg.fi
@@ -81,15 +135,85 @@ def solve_fused(A0: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig,
     return Ap[:M, :N], colsum[:N]
 
 
+def _impl_default(impl, interpret):
+    """'kernel' (Pallas) on TPU; vectorized 'jnp' elsewhere.
+
+    Interpret-mode pallas emulation scans the grid carrying the WHOLE stack
+    through a while_loop with full-buffer dynamic updates per grid step —
+    O(grid * B*M*N) traffic — so it is for validation, not speed. Tests pin
+    ``impl='kernel', interpret=True`` to exercise the real kernel schedule.
+    """
+    if impl is None:
+        return "kernel" if (on_tpu() and not interpret) else "jnp"
+    if impl not in ("kernel", "jnp"):
+        raise ValueError(f"impl must be 'kernel' or 'jnp', got {impl!r}")
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret",
+                                             "storage_dtype", "impl"))
+def solve_fused_batched(A0: jax.Array, a: jax.Array, b: jax.Array,
+                        cfg: UOTConfig, *, block_m: int | None = None,
+                        interpret: bool | None = None, storage_dtype=None,
+                        impl: str | None = None):
+    """MAP-UOT solve for a stack of same-shape problems in one launch.
+
+    A0: (B, M, N); a: (B, M); b: (B, N). On TPU (``impl='kernel'``) one
+    ``(batch, row_blocks)``-grid pallas_call per iteration covers the whole
+    stack — one dispatch instead of B, with each problem keeping the
+    read+write-once schedule and its own (1, N) column-sum accumulator.
+    ``impl='jnp'`` (the non-TPU default) runs the identical padded
+    iteration math vectorized over the batch in XLA. Returns (P, colsum)
+    of shapes (B, M, N) and (B, N).
+    """
+    interpret = _interpret_default(interpret)
+    impl = _impl_default(impl, interpret)
+    B, M, N = A0.shape
+    sdt = _storage(cfg, storage_dtype)
+    bm = block_m or pick_block_m(M, N, sdt.itemsize)
+    Ap = pad_to(A0.astype(sdt), bm, _LANE)
+    ap = pad_vec(a, bm)
+    bp = pad_vec(b, _LANE)
+    fi = cfg.fi
+
+    if impl == "jnp":
+        colsum = Ap.astype(jnp.float32).sum(axis=1)
+
+        def body(_, carry):
+            A, colsum = carry
+            fcol = rescale_factors(bp, colsum, fi)
+            blk = A.astype(jnp.float32) * fcol[:, None, :]
+            rowsum = blk.sum(axis=2)
+            frow = rescale_factors(ap, rowsum, fi)
+            blk = blk * frow[:, :, None]
+            return blk.astype(sdt), blk.sum(axis=1)
+    else:
+        colsum = uot_batched.batched_colsum(
+            Ap, block_m=bm, interpret=interpret)
+
+        def body(_, carry):
+            A, colsum = carry
+            fcol = rescale_factors(bp, colsum, fi)
+            return uot_batched.batched_fused_iteration(
+                A, fcol, ap, fi=fi, block_m=bm, interpret=interpret)
+
+    Ap, colsum = jax.lax.fori_loop(0, cfg.num_iters, body, (Ap, colsum))
+    return Ap[:, :M, :N], colsum[:, :N]
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "block_m", "block_n",
-                                             "interpret"))
+                                             "interpret", "storage_dtype"))
 def solve_halfpass(A0: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig,
                    *, block_m: int = 256, block_n: int = 512,
-                   interpret: bool | None = None):
-    """Wide-N fallback: iteration = two half-fused passes (paper GPU design)."""
+                   interpret: bool | None = None, storage_dtype=None):
+    """Wide-N fallback: iteration = two half-fused passes (paper GPU design).
+
+    Supports the same bf16-storage / fp32-accumulation mode as solve_fused.
+    """
     interpret = _interpret_default(interpret)
     M, N = A0.shape
-    Ap = pad_to(A0.astype(cfg.dtype), block_m, block_n)
+    sdt = _storage(cfg, storage_dtype)
+    Ap = pad_to(A0.astype(sdt), block_m, block_n)
     ap = pad_vec(a, block_m)
     bp = pad_vec(b, block_n)
     fi = cfg.fi
@@ -148,3 +272,107 @@ def solve_uv(K: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig, *,
     else:
         P = None
     return P, (u[:M], v[:N])
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret",
+                                             "materialize", "impl"))
+def solve_uv_batched(K: jax.Array, a: jax.Array, b: jax.Array,
+                     cfg: UOTConfig, *, block_m: int | None = None,
+                     interpret: bool | None = None, materialize: bool = True,
+                     impl: str | None = None):
+    """Batched read-only-pass u/v solver: K (B, M, N), a (B, M), b (B, N).
+
+    K may be bf16 (accumulation fp32). ``impl`` as in solve_fused_batched.
+    Returns (P or None, (u, v)) with P (B, M, N) fp32, u (B, M), v (B, N).
+    """
+    interpret = _interpret_default(interpret)
+    impl = _impl_default(impl, interpret)
+    B, M, N = K.shape
+    bm = block_m or pick_block_m(M, N, jnp.dtype(K.dtype).itemsize)
+    Kp = pad_to(K, bm, _LANE)
+    ap = pad_vec(a, bm)
+    bp = pad_vec(b, _LANE)
+    fi = cfg.fi
+
+    v0 = jnp.ones((B, Kp.shape[2]), jnp.float32)
+
+    if impl == "jnp":
+        def uv_iter(v):
+            Kv = jnp.einsum("bmn,bn->bm", Kp.astype(jnp.float32), v)
+            u = rescale_factors(ap, Kv, fi)
+            ktu = jnp.einsum("bmn,bm->bn", Kp.astype(jnp.float32), u)
+            return u, ktu
+    else:
+        def uv_iter(v):
+            return uot_batched.batched_uv_iteration(
+                Kp, v, ap, fi=fi, block_m=bm, interpret=interpret)
+
+    def body(_, v):
+        _, ktu = uv_iter(v)
+        return rescale_factors(bp, ktu, fi)
+
+    v = jax.lax.fori_loop(0, cfg.num_iters, body, v0)
+    u, _ = uv_iter(v)
+
+    if not materialize:
+        return None, (u[:, :M], v[:, :N])
+    if impl == "jnp":
+        P = (u[:, :, None] * Kp.astype(jnp.float32)
+             * v[:, None, :])[:, :M, :N]
+    else:
+        P = uot_batched.batched_materialize_coupling(
+            Kp, u, v, block_m=bm, interpret=interpret)[:, :M, :N]
+    return P, (u[:, :M], v[:, :N])
+
+
+# ---- shape-bucketed ragged batching ---------------------------------------
+
+def bucket_shape(M: int, N: int, m_bucket: int = 64,
+                 n_bucket: int = _LANE) -> tuple[int, int]:
+    """The padded (M, N) bucket a problem of shape (M, N) lands in."""
+    return (M + (-M) % m_bucket, N + (-N) % n_bucket)
+
+
+def bucket_problems(shapes, m_bucket: int = 64, n_bucket: int = _LANE):
+    """Group problem indices by padded-shape bucket.
+
+    ``shapes`` is a sequence of (M, N). Returns ``{(Mb, Nb): [indices]}``
+    with insertion order preserved within each bucket.
+    """
+    buckets: dict[tuple[int, int], list[int]] = {}
+    for idx, (M, N) in enumerate(shapes):
+        buckets.setdefault(bucket_shape(M, N, m_bucket, n_bucket),
+                           []).append(idx)
+    return buckets
+
+
+def solve_fused_bucketed(problems, cfg: UOTConfig, *,
+                         interpret: bool | None = None, storage_dtype=None,
+                         impl: str | None = None, max_batch: int = 64,
+                         m_bucket: int = 64, n_bucket: int = _LANE):
+    """Solve a ragged list of problems via shape-bucketed batched launches.
+
+    ``problems`` is a sequence of (A0, a, b) triples with per-problem shapes.
+    Problems are grouped into padded-shape buckets; each bucket is zero-padded
+    to its (Mb, Nb), stacked, and solved by ``solve_fused_batched`` in chunks
+    of at most ``max_batch``. Zero padding is exact (padded rows/cols carry
+    zero mass and unit factors), so each answer equals its standalone solve.
+
+    Returns a list of (P, colsum) aligned with the input order.
+    """
+    shapes = [tuple(p[0].shape) for p in problems]
+    results: list = [None] * len(problems)
+    for (Mb, Nb), idxs in bucket_problems(shapes, m_bucket, n_bucket).items():
+        for lo in range(0, len(idxs), max_batch):
+            chunk = idxs[lo:lo + max_batch]
+            A = jnp.stack([pad_to(problems[i][0], Mb, Nb)
+                           for i in chunk])
+            a = jnp.stack([pad_vec(problems[i][1], Mb) for i in chunk])
+            b = jnp.stack([pad_vec(problems[i][2], Nb) for i in chunk])
+            P, colsum = solve_fused_batched(
+                A, a, b, cfg, interpret=interpret,
+                storage_dtype=storage_dtype, impl=impl)
+            for k, i in enumerate(chunk):
+                M, N = shapes[i]
+                results[i] = (P[k, :M, :N], colsum[k, :N])
+    return results

@@ -48,3 +48,25 @@ def uv_iteration_ref(K, v, a, *, fi: float):
 def materialize_coupling_ref(K, u, v):
     return (u.astype(jnp.float32)[:, None] * K.astype(jnp.float32)
             * v.astype(jnp.float32)[None, :])
+
+
+# ---- batched oracles (vmap of the single-problem oracles) -----------------
+
+def batched_fused_iteration_ref(A, factor_col, a, *, fi: float):
+    """Oracle for kernels.uot_batched.batched_fused_iteration."""
+    return jax.vmap(lambda A_, f_, a_: fused_iteration_ref(A_, f_, a_, fi=fi)
+                    )(A, factor_col, a)
+
+
+def batched_colsum_ref(A):
+    return A.astype(jnp.float32).sum(axis=1)
+
+
+def batched_uv_iteration_ref(K, v, a, *, fi: float):
+    """Oracle for kernels.uot_batched.batched_uv_iteration."""
+    return jax.vmap(lambda K_, v_, a_: uv_iteration_ref(K_, v_, a_, fi=fi)
+                    )(K, v, a)
+
+
+def batched_materialize_coupling_ref(K, u, v):
+    return jax.vmap(materialize_coupling_ref)(K, u, v)

@@ -21,6 +21,12 @@ reduction degenerates to a VPU cross-lane ``jnp.sum``.
 
 HBM traffic per iteration: read MN + write MN elements (+O(M+N)) — the
 information-theoretic minimum — vs 4 reads + 2 writes for the POT baseline.
+
+Mixed precision: ``A`` may be stored bf16 (the tile is upcast to
+``acc_dtype`` fp32 on load, all sums/factors computed fp32, and the tile
+downcast once on store), halving the bytes moved by this bandwidth-bound
+kernel. bf16 tiles want block_m a multiple of 16 (see ops.sublane_for);
+``ops.pick_block_m`` budgets VMEM with the two itemsizes separately.
 """
 from __future__ import annotations
 

@@ -15,6 +15,11 @@ half-fused kernels, each one read+write pass (paper Algorithms 2 and 4):
 Full iteration = both kernels = 2 reads + 2 writes (Q = 4MN elements), vs
 6MN for the baseline, matching the paper's GPU traffic model. These kernels
 are also the local building blocks of the 2-D sharded distributed solver.
+
+Mixed precision: like ``uot_fused``, ``A`` may be stored bf16 — tiles are
+upcast to ``acc_dtype`` (fp32) for the multiply and both reductions, and
+downcast once on store, halving Q in bytes (``ops.solve_halfpass`` threads
+``storage_dtype`` through both passes).
 """
 from __future__ import annotations
 

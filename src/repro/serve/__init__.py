@@ -1,3 +1,4 @@
-from repro.serve.engine import ServeEngine, Request
+from repro.serve.engine import (Request, ServeEngine, UOTBatchEngine,
+                                UOTRequest)
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "UOTBatchEngine", "UOTRequest"]

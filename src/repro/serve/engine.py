@@ -1,16 +1,24 @@
-"""Batched serving engine: slot-based continuous batching over decode_step.
+"""Batched serving engines: LLM continuous batching + UOT request batching.
 
-A fixed pool of B slots shares one compiled decode_step (one token for all
-slots per call). Requests are admitted into free slots (prefill fills the
-slot's cache region), generate until EOS/max_tokens, then free the slot for
-the next queued request — the standard continuous-batching serving shape,
-minus speculative decoding.
+``ServeEngine`` — slot-based continuous batching over decode_step. A fixed
+pool of B slots shares one compiled decode_step (one token for all slots per
+call). Requests are admitted into free slots (prefill fills the slot's cache
+region), generate until EOS/max_tokens, then free the slot for the next
+queued request — the standard continuous-batching serving shape, minus
+speculative decoding.
 
 The per-slot KV-cache writes work because decode_step's cache update is
 per-sequence (dynamic_update_slice at each slot's own index). For the
 recurrent families the state is constant-size per slot. For simplicity the
 engine tracks ONE shared cache_index per step group when slots are aligned
 (prefill-once, generate-many benchmark mode) and per-slot indices otherwise.
+
+``UOTBatchEngine`` — request batching for the UOT solver itself. Clients
+submit independent (K, a, b) problems of arbitrary shapes; ``flush()``
+groups the queue into padded-shape buckets and solves each bucket with ONE
+batched fused-kernel launch (``ops.solve_fused_batched``) instead of a
+kernel launch per request. Zero-padding inside a bucket is exact, so every
+response equals its standalone solve.
 """
 from __future__ import annotations
 
@@ -20,6 +28,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.problem import UOTConfig
+from repro.kernels import ops as uot_ops
 
 
 @dataclasses.dataclass
@@ -86,3 +97,59 @@ class ServeEngine:
         self.generate(prompts, max_new_tokens=steps)
         dt = time.perf_counter() - t0
         return self.B * steps / dt
+
+
+@dataclasses.dataclass
+class UOTRequest:
+    rid: int
+    K: jax.Array                # (M, N) initial coupling / Gibbs kernel
+    a: jax.Array                # (M,) row marginal
+    b: jax.Array                # (N,) column marginal
+
+
+class UOTBatchEngine:
+    """Shape-bucketed batch solving of queued UOT requests.
+
+    submit() enqueues a problem and returns a request id; flush() drains the
+    queue with one batched kernel launch per (padded-shape bucket, max_batch
+    chunk) and returns {rid: coupling}. ``storage_dtype=jnp.bfloat16``
+    selects the mixed-precision path (bf16 matrix in HBM, fp32 accumulation)
+    for ~2x less HBM traffic per iteration at ~1e-2 relative error.
+    """
+
+    def __init__(self, cfg: UOTConfig, *, max_batch: int = 64,
+                 m_bucket: int = 64, n_bucket: int = 128,
+                 storage_dtype=None, interpret: bool | None = None,
+                 impl: str | None = None):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.m_bucket = m_bucket
+        self.n_bucket = n_bucket
+        self.storage_dtype = storage_dtype
+        self.interpret = interpret
+        self.impl = impl
+        self._queue: list[UOTRequest] = []
+        self._next_rid = 0
+
+    def submit(self, K, a, b) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(UOTRequest(rid, jnp.asarray(K), jnp.asarray(a),
+                                      jnp.asarray(b)))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> dict[int, jax.Array]:
+        """Solve every queued request; returns {rid: coupling (M, N)}."""
+        reqs, self._queue = self._queue, []
+        if not reqs:
+            return {}
+        results = uot_ops.solve_fused_bucketed(
+            [(r.K, r.a, r.b) for r in reqs], self.cfg,
+            interpret=self.interpret, storage_dtype=self.storage_dtype,
+            impl=self.impl, max_batch=self.max_batch,
+            m_bucket=self.m_bucket, n_bucket=self.n_bucket)
+        return {r.rid: P for r, (P, _) in zip(reqs, results)}

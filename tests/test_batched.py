@@ -1,0 +1,242 @@
+"""Batched + mixed-precision solving path: kernels, wrappers, serving.
+
+Pallas kernels run with ``impl='kernel', interpret=True`` so the real
+(batch, row_blocks) grid schedule executes on CPU CI; the vectorized XLA
+path (``impl='jnp'``, the non-TPU default) is held to the same parity bars.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import UOTConfig, sinkhorn_uot_fused, sinkhorn_uot_fused_batched
+from repro.kernels import ops, ref
+from repro.kernels.uot_batched import (
+    batched_colsum, batched_fused_iteration, batched_materialize_coupling,
+    batched_uv_iteration)
+from repro.serve import UOTBatchEngine
+
+
+def rand(shape, seed=0, dtype=jnp.float32, lo=0.1, hi=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape), dtype=dtype)
+
+
+def make_stack(B, M, N, reg=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    C = rng.uniform(0, 1, size=(B, M, N)).astype(np.float32)
+    a = rng.uniform(0.5, 1.5, size=(B, M)).astype(np.float32)
+    b = rng.uniform(0.5, 1.5, size=(B, N)).astype(np.float32)
+    a = a / a.sum(axis=1, keepdims=True)
+    b = b / b.sum(axis=1, keepdims=True) * 1.2
+    K = np.exp(-C / reg) * (a[:, :, None] * b[:, None, :])
+    return jnp.asarray(K), jnp.asarray(a), jnp.asarray(b)
+
+
+class TestBatchedKernels:
+    @pytest.mark.parametrize("B,M,N,bm", [
+        (1, 8, 128, 8), (3, 32, 128, 8), (4, 64, 256, 16), (2, 128, 384, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_fused_iteration_matches_ref(self, B, M, N, bm, dtype):
+        A = rand((B, M, N), seed=B + M + N, dtype=dtype)
+        fcol = rand((B, N), seed=1)
+        a = rand((B, M), seed=2)
+        out, cs = batched_fused_iteration(A, fcol, a, fi=0.9, block_m=bm,
+                                          interpret=True)
+        out_r, cs_r = ref.batched_fused_iteration_ref(A, fcol, a, fi=0.9)
+        if dtype == jnp.bfloat16:
+            tol = dict(rtol=2e-2, atol=1e-3)
+        else:
+            tol = dict(rtol=2e-6, atol=1e-8)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(out_r.astype(dtype), np.float32), **tol)
+        np.testing.assert_allclose(
+            cs, cs_r, rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+    def test_matches_single_problem_kernel_per_slice(self):
+        """The batched grid must reproduce the single-problem kernel exactly
+        (same block schedule per problem -> same accumulation order)."""
+        from repro.kernels.uot_fused import fused_iteration
+        B, M, N, bm = 3, 64, 256, 16
+        A, fcol, a = rand((B, M, N)), rand((B, N), 1), rand((B, M), 2)
+        out, cs = batched_fused_iteration(A, fcol, a, fi=0.9, block_m=bm,
+                                          interpret=True)
+        for i in range(B):
+            out_i, cs_i = fused_iteration(A[i], fcol[i], a[i], fi=0.9,
+                                          block_m=bm, interpret=True)
+            np.testing.assert_array_equal(np.asarray(out[i]),
+                                          np.asarray(out_i))
+            np.testing.assert_array_equal(np.asarray(cs[i]), np.asarray(cs_i))
+
+    def test_colsum(self):
+        A = rand((3, 96, 256))
+        np.testing.assert_allclose(
+            batched_colsum(A, block_m=32, interpret=True),
+            ref.batched_colsum_ref(A), rtol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_uv_iteration(self, dtype):
+        B, M, N = 2, 64, 128
+        K = rand((B, M, N), dtype=dtype)
+        v, a = rand((B, N), 5), rand((B, M), 6)
+        u, ktu = batched_uv_iteration(K, v, a, fi=0.9, block_m=16,
+                                      interpret=True)
+        u_r, ktu_r = ref.batched_uv_iteration_ref(K, v, a, fi=0.9)
+        rtol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(u, u_r, rtol=rtol)
+        np.testing.assert_allclose(ktu, ktu_r, rtol=rtol)
+
+    def test_materialize(self):
+        B, M, N = 2, 64, 128
+        K = rand((B, M, N))
+        u, v = rand((B, M), 7), rand((B, N), 8)
+        P = batched_materialize_coupling(K, u, v, block_m=16, interpret=True)
+        np.testing.assert_allclose(P, ref.batched_materialize_coupling_ref(
+            K, u, v), rtol=2e-6)
+
+
+class TestSolveFusedBatched:
+    CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=25)
+
+    @pytest.mark.parametrize("impl", ["kernel", "jnp"])
+    def test_matches_per_sample_loop(self, impl):
+        """ISSUE-1 acceptance: batched == loop of solve_fused to 1e-5."""
+        K, a, b = make_stack(4, 48, 130)
+        P, cs = ops.solve_fused_batched(K, a, b, self.CFG, block_m=16,
+                                        interpret=True, impl=impl)
+        for i in range(4):
+            P_i, cs_i = ops.solve_fused(K[i], a[i], b[i], self.CFG,
+                                        block_m=16, interpret=True)
+            np.testing.assert_allclose(P[i], P_i, rtol=1e-5, atol=1e-8)
+            np.testing.assert_allclose(cs[i], cs_i, rtol=1e-5)
+
+    def test_matches_vmap_semantic_reference(self):
+        K, a, b = make_stack(3, 40, 96)
+        P, _ = ops.solve_fused_batched(K, a, b, self.CFG, block_m=8,
+                                       interpret=True, impl="kernel")
+        P_ref, _ = sinkhorn_uot_fused_batched(K, a, b, self.CFG)
+        np.testing.assert_allclose(P, P_ref, rtol=3e-5, atol=1e-8)
+
+    @pytest.mark.parametrize("impl", ["kernel", "jnp"])
+    def test_bf16_storage_tolerance(self, impl):
+        """bf16 storage / fp32 accumulation stays within bf16 rounding of
+        the fp32 solve (relative error ~2^-8 per stored value)."""
+        K, a, b = make_stack(3, 64, 128, seed=1)
+        P32, _ = ops.solve_fused_batched(K, a, b, self.CFG, block_m=16,
+                                         interpret=True, impl=impl)
+        Pbf, _ = ops.solve_fused_batched(K, a, b, self.CFG, block_m=16,
+                                         interpret=True, impl=impl,
+                                         storage_dtype=jnp.bfloat16)
+        assert Pbf.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(Pbf, np.float32),
+                                   np.asarray(P32), rtol=5e-2, atol=1e-4)
+        # mass must be preserved to bf16 tolerance too, not just pointwise
+        np.testing.assert_allclose(
+            np.asarray(Pbf, np.float32).sum(), np.asarray(P32).sum(),
+            rtol=1e-2)
+
+    def test_bf16_via_cfg_dtype(self):
+        """UOTConfig(dtype=bf16) selects the storage mode without a kwarg."""
+        K, a, b = make_stack(2, 32, 128)
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=10,
+                        dtype=jnp.bfloat16)
+        P, _ = ops.solve_fused_batched(K, a, b, cfg, block_m=16,
+                                       interpret=True)
+        assert P.dtype == jnp.bfloat16
+
+    def test_solve_uv_batched_matches_per_sample(self):
+        K, a, b = make_stack(3, 48, 96)
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=30)
+        for impl in ["kernel", "jnp"]:
+            P, (u, v) = ops.solve_uv_batched(K, a, b, cfg, block_m=16,
+                                             interpret=True, impl=impl)
+            for i in range(3):
+                P_i, (u_i, v_i) = ops.solve_uv(K[i], a[i], b[i], cfg,
+                                               block_m=16, interpret=True)
+                np.testing.assert_allclose(P[i], P_i, rtol=1e-5, atol=1e-8)
+                np.testing.assert_allclose(u[i], u_i, rtol=1e-5)
+                np.testing.assert_allclose(v[i], v_i, rtol=1e-5)
+
+
+class TestRaggedBucketing:
+    CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=20)
+
+    def test_bucket_problems_groups_by_padded_shape(self):
+        shapes = [(20, 100), (60, 128), (17, 90), (65, 128), (64, 128)]
+        buckets = ops.bucket_problems(shapes, m_bucket=64, n_bucket=128)
+        assert buckets[(64, 128)] == [0, 1, 2, 4]
+        assert buckets[(128, 128)] == [3]
+
+    def test_ragged_solve_matches_standalone(self):
+        """Padding a problem up to its bucket shape must not change its
+        answer (zero rows/cols carry no mass, factors stay 1)."""
+        rng = np.random.default_rng(3)
+        problems = []
+        for (m, n) in [(20, 100), (32, 128), (17, 100), (64, 200), (20, 100)]:
+            problems.append((
+                jnp.asarray(rng.uniform(0.1, 2, (m, n)), jnp.float32),
+                jnp.asarray(rng.uniform(0.1, 2, (m,)), jnp.float32),
+                jnp.asarray(rng.uniform(0.1, 2, (n,)), jnp.float32)))
+        results = ops.solve_fused_bucketed(problems, self.CFG,
+                                           interpret=True, max_batch=2)
+        for (A0, a, b), (P, cs) in zip(problems, results):
+            assert P.shape == A0.shape
+            P_i, cs_i = ops.solve_fused(A0, a, b, self.CFG, interpret=True)
+            np.testing.assert_allclose(P, P_i, rtol=1e-5, atol=1e-8)
+            np.testing.assert_allclose(cs, cs_i, rtol=1e-5)
+
+
+class TestUOTBatchEngine:
+    def test_submit_flush_parity(self):
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=20)
+        engine = UOTBatchEngine(cfg, max_batch=3, interpret=True)
+        rng = np.random.default_rng(7)
+        probs = {}
+        for (m, n) in [(24, 100), (60, 120), (24, 100), (100, 250)]:
+            K = rng.uniform(0.1, 2, (m, n)).astype(np.float32)
+            a = rng.uniform(0.1, 2, m).astype(np.float32)
+            b = rng.uniform(0.1, 2, n).astype(np.float32)
+            rid = engine.submit(K, a, b)
+            probs[rid] = (K, a, b)
+        assert engine.pending == 4
+        out = engine.flush()
+        assert engine.pending == 0
+        assert set(out) == set(probs)
+        for rid, (K, a, b) in probs.items():
+            P_i, _ = ops.solve_fused(jnp.asarray(K), jnp.asarray(a),
+                                     jnp.asarray(b), cfg, interpret=True)
+            np.testing.assert_allclose(out[rid], P_i, rtol=1e-5, atol=1e-8)
+
+    def test_flush_empty(self):
+        engine = UOTBatchEngine(UOTConfig(num_iters=5), interpret=True)
+        assert engine.flush() == {}
+
+
+class TestJnpBatchedReference:
+    def test_vmap_reference_matches_loop(self):
+        K, a, b = make_stack(3, 30, 70)
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=15)
+        P, stats = sinkhorn_uot_fused_batched(K, a, b, cfg)
+        assert P.shape == K.shape
+        assert stats["iters"].shape == (3,)
+        for i in range(3):
+            P_i, _ = sinkhorn_uot_fused(K[i], a[i], b[i], cfg)
+            np.testing.assert_allclose(P[i], P_i, rtol=1e-6, atol=1e-9)
+
+
+class TestBlockPicker:
+    def test_mixed_itemsize_earns_larger_blocks(self):
+        # same N: bf16 storage fits at least the fp32 block, usually larger
+        assert ops.pick_block_m(4096, 65536, 2) >= ops.pick_block_m(
+            4096, 65536, 4)
+
+    def test_clamps_to_problem_height(self):
+        assert ops.pick_block_m(256, 256) <= 256
+        assert ops.pick_block_m(8, 128) == 8
+
+    def test_bf16_sublane_floor(self):
+        assert ops.pick_block_m(8, 10_000_000, 2) == 16
+        assert ops.sublane_for(jnp.bfloat16) == 16
+        assert ops.sublane_for(jnp.float32) == 8

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import UOTConfig, sinkhorn_uot_baseline, sinkhorn_uot_fused
