@@ -11,6 +11,9 @@ across PRs. Mapping to the paper:
   bench_application  -> Fig 17  (color-transfer application)
   bench_moe_router   -> beyond-paper (Sinkhorn-UOT MoE routing)
   bench_batch        -> beyond-paper (batched serving: fused stack vs loop)
+  bench_serve        -> beyond-paper (continuous scheduler vs flush barrier
+                        on a Poisson arrival trace; BENCH_SERVE_SMOKE=1
+                        shrinks it to a CI smoke run)
 """
 import argparse
 import json
@@ -33,10 +36,11 @@ def main(argv=None) -> None:
 
     from benchmarks import (common, bench_uot, bench_traffic, bench_kernel,
                             bench_memory, bench_distributed,
-                            bench_application, bench_moe_router, bench_batch)
+                            bench_application, bench_moe_router, bench_batch,
+                            bench_serve)
     mods = [bench_uot, bench_traffic, bench_kernel, bench_memory,
             bench_distributed, bench_application, bench_moe_router,
-            bench_batch]
+            bench_batch, bench_serve]
     if args.suite:
         known = {m.__name__.split(".")[-1] for m in mods}
         unknown = set(args.suite) - known

@@ -19,7 +19,8 @@ from repro.core.sinkhorn_fused import (sinkhorn_uot_fused,
                                        sinkhorn_uot_fused_batched)
 from repro.core.sinkhorn_uv import sinkhorn_uot_uv, sinkhorn_uot_uv_fused
 from repro.core.log_domain import sinkhorn_uot_log
-from repro.core.convergence import marginal_error, mass
+from repro.core.convergence import (factor_drift, lane_factor_drift,
+                                    marginal_error, mass)
 
 __all__ = [
     "UOTConfig",
@@ -33,4 +34,6 @@ __all__ = [
     "sinkhorn_uot_log",
     "marginal_error",
     "mass",
+    "factor_drift",
+    "lane_factor_drift",
 ]

@@ -92,6 +92,85 @@ def batched_fused_iteration(A: jax.Array, factor_col: jax.Array,
     return out, colsum.reshape(B, N)
 
 
+def _batched_fused_iter_frow_kernel(mask_ref, fcol_ref, a_ref, A_ref,
+                                    out_ref, colsum_ref, frow_ref, *,
+                                    fi: float, acc_dtype):
+    i = pl.program_id(1)
+
+    blk_in = A_ref[...].astype(acc_dtype)        # (1, bm, N)
+    fcol = fcol_ref[...].astype(acc_dtype)       # (1, 1, N)
+
+    blk = blk_in * fcol                          # I: column rescale
+    rowsum = jnp.sum(blk, axis=2, keepdims=True)  # II: (1, bm, 1)
+    frow = _safe_pow(a_ref[...].astype(acc_dtype), rowsum, fi)
+    blk = blk * frow                             # III: row rescale
+
+    # Lane freeze happens HERE, inside the single pass: a masked-out lane
+    # writes back its input tile unchanged (bit-exact), so freezing costs
+    # no extra memory pass — the tile was already in VMEM.
+    blk = jnp.where(mask_ref[...] > 0, blk, blk_in)
+
+    out_ref[...] = blk.astype(out_ref.dtype)
+    frow_ref[...] = frow.astype(frow_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        colsum_ref[...] = jnp.zeros_like(colsum_ref)
+
+    colsum_ref[...] += jnp.sum(blk, axis=1, keepdims=True).astype(colsum_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fi", "block_m", "interpret", "acc_dtype"))
+def batched_fused_iteration_frow(A: jax.Array, factor_col: jax.Array,
+                                 a: jax.Array, mask: jax.Array, *, fi: float,
+                                 block_m: int = 256, interpret: bool = False,
+                                 acc_dtype=jnp.float32):
+    """One masked batched MAP-UOT iteration that also emits the row factors.
+
+    The steppable-solver form of ``batched_fused_iteration``: ``mask``
+    (B,) float (1.0 = update, 0.0 = frozen) selects per lane between the
+    rescaled tile and the unchanged input *inside* the kernel — same
+    read+write-once traffic as the unmasked kernel, no second pass — and a
+    third output returns the per-row rescale factors ``frow`` (B, M) (an
+    O(M)-per-problem write, negligible against the M*N tile traffic) so
+    the caller can observe the per-lane stationarity drift. A frozen
+    lane's colsum output is the recomputation from its unchanged tile;
+    ``ops._stepped_iter`` re-selects the carried value so bf16 storage
+    keeps carried-colsum semantics. Returns (A_next, next_colsum, frow);
+    frow is the *computed* factor even for frozen lanes (callers mask it).
+    """
+    B, M, N = A.shape
+    assert M % block_m == 0, (M, block_m)
+    grid = (B, M // block_m)
+
+    kernel = functools.partial(_batched_fused_iter_frow_kernel, fi=fi,
+                               acc_dtype=acc_dtype)
+    out, colsum, frow = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1), lambda b, i: (b, 0, 0)),        # mask
+            pl.BlockSpec((1, 1, N), lambda b, i: (b, 0, 0)),        # fcol
+            pl.BlockSpec((1, block_m, 1), lambda b, i: (b, i, 0)),  # a (RPD)
+            pl.BlockSpec((1, block_m, N), lambda b, i: (b, i, 0)),  # A tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m, N), lambda b, i: (b, i, 0)),  # A' tile
+            pl.BlockSpec((1, 1, N), lambda b, i: (b, 0, 0)),        # colsum
+            pl.BlockSpec((1, block_m, 1), lambda b, i: (b, i, 0)),  # frow
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, M, N), A.dtype),
+            jax.ShapeDtypeStruct((B, 1, N), acc_dtype),
+            jax.ShapeDtypeStruct((B, M, 1), acc_dtype),
+        ],
+        interpret=interpret,
+    )(mask.reshape(B, 1, 1).astype(jnp.float32),
+      factor_col.reshape(B, 1, N), a.reshape(B, M, 1), A)
+    return out, colsum.reshape(B, N), frow.reshape(B, M)
+
+
 def _batched_colsum_kernel(A_ref, colsum_ref, *, acc_dtype):
     i = pl.program_id(1)
 

@@ -1,4 +1,31 @@
+"""UOT + LLM serving engines — three tiers of request batching.
+
+Tier 1 — per-request (``kernels.ops.solve_fused``): one launch per problem.
+  Use for one-off solves, offline analysis, or problems too large to share
+  a lane pool. No queueing, no cross-request amortization.
+
+Tier 2 — bucketed flush (``UOTBatchEngine``): queue requests, then
+  ``flush()`` solves each padded-shape bucket in one batched launch
+  (compiled solves memoized across flushes). Use for offline/batch jobs
+  where all requests are known up front and tail latency doesn't matter —
+  every request in a flush waits for the slowest problem of its bucket.
+
+Tier 3 — continuous scheduler (``UOTScheduler``): fixed lane pools advance
+  chunk-by-chunk; converged lanes are evicted and their results returned
+  immediately, freed lanes are refilled from the queue
+  earliest-deadline-first, and ``submit`` applies backpressure. Use for
+  online serving under live traffic — it trades a small per-chunk host
+  round trip for tail latency and deadline awareness.
+
+``ServeEngine`` is the LLM-token sibling of tier 3: slot-based continuous
+batching over ``decode_step`` (the architecture ``UOTScheduler`` mirrors,
+with solver lanes in place of KV-cache slots).
+"""
 from repro.serve.engine import (Request, ServeEngine, UOTBatchEngine,
                                 UOTRequest)
+from repro.serve.scheduler import (QueueFullError, RequestTelemetry,
+                                   ScheduledRequest, UOTScheduler)
 
-__all__ = ["ServeEngine", "Request", "UOTBatchEngine", "UOTRequest"]
+__all__ = ["ServeEngine", "Request", "UOTBatchEngine", "UOTRequest",
+           "UOTScheduler", "ScheduledRequest", "RequestTelemetry",
+           "QueueFullError"]

@@ -1,5 +1,9 @@
 """Batched serving engines: LLM continuous batching + UOT request batching.
 
+This module holds serving tiers 1-2 of the ladder described in the
+``repro.serve`` package docstring; tier 3 (the continuous-batching
+``UOTScheduler``) lives in ``repro.serve.scheduler``.
+
 ``ServeEngine`` — slot-based continuous batching over decode_step. A fixed
 pool of B slots shares one compiled decode_step (one token for all slots per
 call). Requests are admitted into free slots (prefill fills the slot's cache
@@ -13,12 +17,16 @@ recurrent families the state is constant-size per slot. For simplicity the
 engine tracks ONE shared cache_index per step group when slots are aligned
 (prefill-once, generate-many benchmark mode) and per-slot indices otherwise.
 
-``UOTBatchEngine`` — request batching for the UOT solver itself. Clients
-submit independent (K, a, b) problems of arbitrary shapes; ``flush()``
-groups the queue into padded-shape buckets and solves each bucket with ONE
-batched fused-kernel launch (``ops.solve_fused_batched``) instead of a
-kernel launch per request. Zero-padding inside a bucket is exact, so every
-response equals its standalone solve.
+``UOTBatchEngine`` — flush-barrier request batching for the UOT solver
+(tier 2). Clients submit independent (K, a, b) problems of arbitrary
+shapes; ``flush()`` groups the queue into padded-shape buckets and solves
+each bucket with ONE batched fused-kernel launch
+(``ops.solve_fused_batched``) instead of a kernel launch per request.
+Zero-padding inside a bucket is exact, so every response equals its
+standalone solve. Chunk batch sizes are canonicalized to powers of two so
+flushes with repeating bucket shapes reuse the compiled solves
+(``cache_stats()`` exposes the hit/miss counters). The flush is a barrier:
+for latency-sensitive traffic use ``UOTScheduler`` instead.
 """
 from __future__ import annotations
 
@@ -102,9 +110,9 @@ class ServeEngine:
 @dataclasses.dataclass
 class UOTRequest:
     rid: int
-    K: jax.Array                # (M, N) initial coupling / Gibbs kernel
-    a: jax.Array                # (M,) row marginal
-    b: jax.Array                # (N,) column marginal
+    K: np.ndarray               # (M, N) initial coupling / Gibbs kernel
+    a: np.ndarray               # (M,) row marginal
+    b: np.ndarray               # (N,) column marginal
 
 
 class UOTBatchEngine:
@@ -132,10 +140,13 @@ class UOTBatchEngine:
         self._next_rid = 0
 
     def submit(self, K, a, b) -> int:
+        # payloads stay host-side numpy until flush() assembles the padded
+        # batch (also in numpy) — one device transfer per bucket chunk
+        # instead of three boundary crossings per request
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(UOTRequest(rid, jnp.asarray(K), jnp.asarray(a),
-                                      jnp.asarray(b)))
+        self._queue.append(UOTRequest(rid, np.asarray(K), np.asarray(a),
+                                      np.asarray(b)))
         return rid
 
     @property
@@ -153,3 +164,8 @@ class UOTBatchEngine:
             impl=self.impl, max_batch=self.max_batch,
             m_bucket=self.m_bucket, n_bucket=self.n_bucket)
         return {r.rid: P for r, (P, _) in zip(reqs, results)}
+
+    @staticmethod
+    def cache_stats() -> dict:
+        """Process-wide bucketed-solve jit reuse counters (hits/misses)."""
+        return uot_ops.bucketed_cache_stats()

@@ -1,0 +1,397 @@
+"""Continuous-batching UOT scheduler: solver lanes as serving slots.
+
+The third serving tier (see ``repro.serve``'s module docstring for the
+ladder). ``UOTBatchEngine.flush()`` is a barrier: every request in a flush
+waits for the slowest problem of its bucket, and requests that arrive while
+a flush is running wait for the whole thing. This module replaces the
+barrier with the LLM continuous-batching shape, applied to solver state
+instead of KV caches:
+
+* one fixed **lane pool** per (m_bucket, n_bucket) padded-shape bucket — a
+  ``kernels.ops.LaneState`` stack advanced a *chunk* of Algorithm-1
+  iterations at a time by ``ops.solve_fused_stepped`` (one batched launch
+  per chunk, Pallas ``'kernel'`` or vectorized ``'jnp'``);
+* between chunks, lanes whose per-lane row-factor stationarity drift passed
+  ``cfg.tol`` (or that hit ``cfg.num_iters``) are **evicted** and their
+  couplings returned immediately — a fast-converging problem never waits
+  for a slow lane-mate;
+* queued requests are **admitted** into free or freshly-evicted lanes
+  earliest-deadline-first (ties: higher priority, then FIFO), so a late
+  urgent request starts solving one chunk-boundary after it arrives instead
+  of one full flush later;
+* ``submit`` applies **backpressure**: beyond ``max_queue`` waiting
+  requests it raises ``QueueFullError`` instead of growing an unbounded
+  queue.
+
+Because per-lane math is independent of pool occupancy (free lanes are
+zero problems — exact no-ops), every request's answer equals its standalone
+solve regardless of arrival order, admission interleaving, or evictions;
+tests/test_scheduler.py asserts this property for both impls.
+
+Telemetry: every completed request carries a ``RequestTelemetry`` (wait
+time, solve iterations, lane, converged-vs-cap), and ``occupancy_log``
+snapshots lane utilization per step — the inputs for the latency/occupancy
+numbers in ``benchmarks/bench_serve.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import UOTConfig
+from repro.kernels import ops
+
+
+class QueueFullError(RuntimeError):
+    """Raised by submit() when the waiting queue is at max_queue."""
+
+
+@dataclasses.dataclass
+class ScheduledRequest:
+    """A queued UOT problem plus its scheduling attributes.
+
+    Payload stays host-side numpy while queued; the single host->device
+    transfer happens at admission (already padded to the bucket shape).
+    """
+
+    rid: int
+    K: np.ndarray               # (M, N) initial coupling / Gibbs kernel
+    a: np.ndarray               # (M,) row marginal
+    b: np.ndarray               # (N,) column marginal
+    shape: tuple[int, int]
+    bucket: tuple[int, int]
+    arrival: float
+    deadline: float | None = None   # absolute time; None = no deadline
+    priority: int = 0               # higher = more urgent (EDF tie-break)
+
+    def edf_key(self):
+        """Earliest-deadline-first with priority then FIFO tie-breaks."""
+        d = self.deadline if self.deadline is not None else float("inf")
+        return (d, -self.priority, self.rid)
+
+
+@dataclasses.dataclass
+class RequestTelemetry:
+    """Per-request serving record, filled at eviction."""
+
+    rid: int
+    bucket: tuple[int, int]
+    lane: int
+    arrival: float
+    admitted: float
+    completed: float
+    iters: int
+    converged: bool             # False = hit the num_iters cap
+
+    @property
+    def wait(self) -> float:
+        return self.admitted - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return self.completed - self.arrival
+
+
+class _LanePool:
+    """One shape bucket's lane pool + host-side lane bookkeeping."""
+
+    def __init__(self, bucket: tuple[int, int], num_lanes: int,
+                 cfg: UOTConfig, *, storage_dtype=None):
+        self.bucket = bucket
+        self.cfg = cfg
+        self.state = ops.make_lane_state(
+            num_lanes, bucket[0], bucket[1], cfg,
+            storage_dtype=storage_dtype)
+        self.requests: dict[int, ScheduledRequest] = {}   # lane -> request
+        self.admitted_at: dict[int, float] = {}           # lane -> time
+        self.idle_steps = 0      # consecutive scheduler rounds with 0 lanes
+
+    @property
+    def num_lanes(self) -> int:
+        return self.state.num_lanes
+
+    def free_lanes(self) -> list[int]:
+        return [i for i in range(self.num_lanes) if i not in self.requests]
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.requests) / self.num_lanes
+
+
+class UOTScheduler:
+    """Deadline-aware continuous batching over steppable UOT lane pools.
+
+    Usage::
+
+        sched = UOTScheduler(UOTConfig(num_iters=100, tol=1e-4))
+        rid = sched.submit(K, a, b, deadline=now + 0.5, priority=1)
+        results = sched.run()          # {rid: coupling}, or step() manually
+
+    ``chunk_iters`` is the scheduling quantum: smaller chunks admit and
+    evict sooner (better tail latency) at the cost of more host round
+    trips per solve. ``cfg.tol`` enables convergence eviction; with
+    ``tol=None`` every lane runs exactly ``cfg.num_iters`` and the answer
+    equals the fixed-iteration ``solve_fused`` exactly.
+
+    Memory is bounded for long-running serving: results not collected from
+    a ``step()``/``run()`` return value are held for ``poll`` — which hands
+    a result out exactly once (take semantics) — but only the most recent
+    ``max_results`` of them (couplings are large; the step/run return is
+    the primary delivery); telemetry keeps the most recent ``max_log``
+    request records / occupancy snapshots; and a lane pool whose bucket
+    has been empty for ``pool_idle_ttl`` consecutive steps is released
+    (recreated on demand), so one-off request shapes don't pin device
+    memory forever.
+    """
+
+    def __init__(self, cfg: UOTConfig, *, lanes_per_pool: int = 8,
+                 chunk_iters: int = 4, max_queue: int = 1024,
+                 m_bucket: int = 64, n_bucket: int = 128,
+                 storage_dtype=None, interpret: bool | None = None,
+                 impl: str | None = None, max_log: int = 10_000,
+                 max_results: int = 256, pool_idle_ttl: int | None = 100,
+                 clock: Callable[[], float] = time.monotonic):
+        if lanes_per_pool < 1:
+            raise ValueError("lanes_per_pool must be >= 1")
+        if chunk_iters < 1:
+            raise ValueError("chunk_iters must be >= 1")
+        self.cfg = cfg
+        self.lanes_per_pool = lanes_per_pool
+        self.chunk_iters = chunk_iters
+        self.max_queue = max_queue
+        self.m_bucket = m_bucket
+        self.n_bucket = n_bucket
+        self.storage_dtype = storage_dtype
+        self.interpret = interpret
+        self.impl = impl
+        self.max_log = max_log
+        self.max_results = max_results
+        self.pool_idle_ttl = pool_idle_ttl
+        self.clock = clock
+
+        self._queue: list[ScheduledRequest] = []
+        self._pools: dict[tuple[int, int], _LanePool] = {}
+        self._next_rid = 0
+        self._results: dict[int, np.ndarray] = {}
+        self._steps = 0
+        self.request_log: list[RequestTelemetry] = []
+        self.occupancy_log: list[dict] = []
+
+    # ---- submission -------------------------------------------------------
+
+    def submit(self, K, a, b, *, deadline: float | None = None,
+               priority: int = 0) -> int:
+        """Enqueue a problem; returns its request id.
+
+        Raises ``QueueFullError`` when ``max_queue`` requests are already
+        waiting (in-flight lanes don't count) — the caller sheds load or
+        retries later instead of the queue growing without bound.
+        """
+        if len(self._queue) >= self.max_queue:
+            raise QueueFullError(
+                f"queue at max_queue={self.max_queue}; retry later")
+        K = np.asarray(K)
+        M, N = K.shape
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(ScheduledRequest(
+            rid=rid, K=K, a=np.asarray(a), b=np.asarray(b), shape=(M, N),
+            bucket=ops.bucket_shape(M, N, self.m_bucket, self.n_bucket),
+            arrival=self.clock(), deadline=deadline, priority=priority))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        """Requests waiting for a lane."""
+        return len(self._queue)
+
+    @property
+    def in_flight(self) -> int:
+        """Requests currently occupying lanes."""
+        return sum(len(p.requests) for p in self._pools.values())
+
+    def poll(self, rid: int):
+        """The finished coupling for ``rid``, or None if still in progress.
+
+        Take semantics: a result is handed out exactly once and then
+        dropped, so an uncollected backlog cannot grow without bound.
+        """
+        return self._results.pop(rid, None)
+
+    # ---- the scheduling loop ---------------------------------------------
+
+    def step(self) -> dict[int, np.ndarray]:
+        """One scheduling round: evict -> admit -> advance one chunk.
+
+        Returns the requests completed by this round, ``{rid: P (M, N)}``
+        as host numpy arrays (also retained for ``poll``, padding-free
+        copies). Eviction happens *before* admission
+        so freshly-freed lanes are immediately reusable — the continuous
+        part of continuous batching.
+        """
+        completed = self._evict_finished()
+        self._admit_queued()
+        for bucket, pool in list(self._pools.items()):
+            if pool.requests:
+                pool.idle_steps = 0
+                pool.state = ops.solve_fused_stepped(
+                    pool.state, self.chunk_iters, self.cfg,
+                    interpret=self.interpret, impl=self.impl)
+            else:
+                # a pool pins lanes x Mp x Np of device memory; traffic
+                # whose shape never recurs must not pin it forever
+                pool.idle_steps += 1
+                if (self.pool_idle_ttl is not None
+                        and pool.idle_steps > self.pool_idle_ttl):
+                    del self._pools[bucket]
+        self._steps += 1
+        self._snapshot_occupancy()
+        return completed
+
+    def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
+        """Step until queue and lanes drain (or ``max_steps`` *additional*
+        steps ran); returns all completions."""
+        start = self._steps
+        out: dict[int, np.ndarray] = {}
+        while self.pending or self.in_flight:
+            out.update(self.step())
+            if max_steps is not None and self._steps - start >= max_steps:
+                break
+        out.update(self._evict_finished())  # final chunk's completions
+        return out
+
+    # ---- internals --------------------------------------------------------
+
+    def _evict_finished(self) -> dict[int, np.ndarray]:
+        completed: dict[int, np.ndarray] = {}
+        now = self.clock()
+        for pool in self._pools.values():
+            if not pool.requests:
+                continue
+            done = np.asarray(ops.lane_done(pool.state, self.cfg.num_iters))
+            if not done.any():
+                continue
+            iters = np.asarray(pool.state.iters)
+            conv = np.asarray(pool.state.converged)
+            finished = [l for l in list(pool.requests) if done[l]]
+            for lane in finished:
+                req = pool.requests.pop(lane)
+                M, N = req.shape
+                # slice per lane on device (one jit signature per lane index)
+                # so only the finished lane crosses to the host, then trim to
+                # the request shape in numpy — not the whole pool, no
+                # per-(lane, shape) compile jitter, and a copy so the
+                # retained result doesn't pin the padded lane buffer
+                P = np.asarray(pool.state.P[lane])[:M, :N].copy()
+                completed[req.rid] = self._results[req.rid] = P
+                # the poll pickup store is bounded (oldest dropped) —
+                # step()/run() return values are the primary delivery
+                while len(self._results) > self.max_results:
+                    self._results.pop(next(iter(self._results)))
+                self.request_log.append(RequestTelemetry(
+                    rid=req.rid, bucket=pool.bucket, lane=lane,
+                    arrival=req.arrival,
+                    admitted=pool.admitted_at.pop(lane),
+                    completed=now, iters=int(iters[lane]),
+                    converged=bool(conv[lane])))
+            # one pool update for the whole round's evictions; the index
+            # vector is padded to the pool size with duplicates (same
+            # zeroing either way) so there is ONE jit signature per pool,
+            # not one per eviction count
+            lanes = finished + [finished[-1]] * (pool.num_lanes
+                                                 - len(finished))
+            pool.state = ops.lane_evict(pool.state,
+                                        jnp.asarray(lanes, jnp.int32))
+        return completed
+
+    def _admit_queued(self) -> None:
+        if not self._queue:
+            return
+        now = self.clock()
+        remaining: list[ScheduledRequest] = []
+        placements: dict[tuple[int, int], list[tuple[int, ScheduledRequest]]]
+        placements = {}
+        for req in sorted(self._queue, key=ScheduledRequest.edf_key):
+            pool = self._pools.get(req.bucket)
+            if pool is None:
+                pool = self._pools[req.bucket] = _LanePool(
+                    req.bucket, self.lanes_per_pool, self.cfg,
+                    storage_dtype=self.storage_dtype)
+            free = pool.free_lanes()
+            if not free:
+                remaining.append(req)
+                continue
+            lane = free[0]
+            placements.setdefault(req.bucket, []).append((lane, req))
+            pool.requests[lane] = req
+            pool.admitted_at[lane] = now
+        for bucket, placed in placements.items():
+            pool = self._pools[bucket]
+            # Normalize to the bucket shape host-side (numpy) so lane_admit
+            # never traces per request shape, and land the whole round's
+            # admissions for this pool in ONE pool update. The batch is
+            # padded to the pool size by repeating the last admission
+            # (duplicate scatter indices with identical payloads are
+            # harmless), so each pool compiles exactly ONE admit signature
+            # — not one per admission count.
+            Mb, Nb = bucket
+            L = pool.num_lanes
+            Kp = np.zeros((L, Mb, Nb), np.float32)
+            ap = np.zeros((L, Mb), np.float32)
+            bp = np.zeros((L, Nb), np.float32)
+            lanes = np.empty(L, np.int32)
+            for j in range(L):
+                lane, req = placed[min(j, len(placed) - 1)]
+                M, N = req.shape
+                Kp[j, :M, :N] = req.K
+                ap[j, :M] = req.a
+                bp[j, :N] = req.b
+                lanes[j] = lane
+            pool.state = ops.lane_admit(
+                pool.state, jnp.asarray(lanes), jnp.asarray(Kp),
+                jnp.asarray(ap), jnp.asarray(bp))
+        # EDF order (which already ends in the rid FIFO tie-break) is
+        # recomputed from scratch next round, so storage order is free.
+        self._queue = remaining
+
+    def _snapshot_occupancy(self) -> None:
+        self.occupancy_log.append({
+            "step": self._steps,
+            "queued": len(self._queue),
+            "pools": {str(b): p.occupancy for b, p in self._pools.items()},
+        })
+        del self.occupancy_log[:-self.max_log]
+        del self.request_log[:-self.max_log]
+
+    # ---- telemetry --------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Aggregate serving telemetry over the retained log window
+        (the last ``max_log`` completions / occupancy snapshots)."""
+        if not self.request_log:
+            return {"completed": 0, "steps": self._steps, "wait_mean": 0.0,
+                    "wait_p99": 0.0, "latency_p50": 0.0, "latency_p99": 0.0,
+                    "iters_mean": 0.0, "iters_max": 0,
+                    "converged_frac": 0.0, "occupancy_mean": 0.0}
+        waits = np.array([t.wait for t in self.request_log])
+        lats = np.array([t.latency for t in self.request_log])
+        iters = np.array([t.iters for t in self.request_log])
+        occ = [o for snap in self.occupancy_log
+               for o in snap["pools"].values()]
+        return {
+            "completed": len(self.request_log),
+            "steps": self._steps,
+            "wait_mean": float(waits.mean()),
+            "wait_p99": float(np.percentile(waits, 99)),
+            "latency_p50": float(np.percentile(lats, 50)),
+            "latency_p99": float(np.percentile(lats, 99)),
+            "iters_mean": float(iters.mean()),
+            "iters_max": int(iters.max()),
+            "converged_frac": float(np.mean(
+                [t.converged for t in self.request_log])),
+            "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+        }

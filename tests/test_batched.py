@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import UOTConfig, sinkhorn_uot_fused, sinkhorn_uot_fused_batched
+from repro.core import (UOTConfig, sinkhorn_uot_fused,
+                        sinkhorn_uot_fused_batched)
 from repro.kernels import ops, ref
 from repro.kernels.uot_batched import (
     batched_colsum, batched_fused_iteration, batched_materialize_coupling,
@@ -212,6 +213,92 @@ class TestUOTBatchEngine:
     def test_flush_empty(self):
         engine = UOTBatchEngine(UOTConfig(num_iters=5), interpret=True)
         assert engine.flush() == {}
+
+    def test_repeat_flushes_reuse_compiled_solves(self):
+        """Flushes whose bucket shapes repeat must hit the jit cache, even
+        when queue depths jitter (batch is canonicalized to powers of 2)."""
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=5)
+        engine = UOTBatchEngine(cfg, max_batch=8, interpret=True,
+                                impl="jnp")
+        rng = np.random.default_rng(11)
+
+        def enqueue(n, mn):
+            for _ in range(n):
+                m, n_ = mn
+                engine.submit(rng.uniform(0.1, 2, (m, n_)).astype(np.float32),
+                              rng.uniform(0.1, 2, m).astype(np.float32),
+                              rng.uniform(0.1, 2, n_).astype(np.float32))
+
+        ops.reset_bucketed_cache_stats()
+        enqueue(3, (20, 100))
+        engine.flush()
+        s1 = engine.cache_stats()
+        assert s1 == {"hits": 0, "misses": 1}
+        # _cache_size is a private jax API; use it when present for a
+        # stronger no-recompile assertion, but don't depend on it
+        sizer = getattr(ops.solve_fused_batched, "_cache_size", None)
+        jit_entries = sizer() if sizer else None
+
+        # same bucket, different queue depth within the same pow2 chunk
+        enqueue(4, (24, 90))
+        engine.flush()
+        s2 = engine.cache_stats()
+        assert s2 == {"hits": 1, "misses": 1}
+        if sizer:
+            assert sizer() == jit_entries, \
+                "repeat flush recompiled the bucket solve"
+
+        # a genuinely new chunk size is a miss exactly once
+        enqueue(7, (20, 100))
+        engine.flush()
+        assert engine.cache_stats() == {"hits": 1, "misses": 2}
+        enqueue(6, (20, 100))
+        engine.flush()
+        assert engine.cache_stats() == {"hits": 2, "misses": 2}
+
+    def test_canonical_batch(self):
+        assert [ops.canonical_batch(n, 8) for n in (1, 2, 3, 5, 8)] == \
+            [1, 2, 4, 8, 8]
+        assert ops.canonical_batch(33, 48) == 48
+
+
+class TestPerLaneEarlyExit:
+    """cfg.tol on the batched path: converged lanes freeze, loop ends when
+    every lane (not each lane's worst-case budget) is done."""
+
+    def _stack(self):
+        # peaky cost (slow) + flat cost (fast) in one stack
+        from benchmarks.common import make_problem
+        probs = [make_problem(32, 128, reg=0.1, seed=5 + i, peak=peak)
+                 for i, peak in enumerate((1.0, 6.0))]
+        return tuple(jnp.stack(xs) for xs in zip(*probs))
+
+    @pytest.mark.parametrize("impl", ["jnp", "kernel"])
+    def test_each_lane_matches_its_single_problem_tol_solve(self, impl):
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=300, tol=1e-4)
+        K, a, b = self._stack()
+        P, cs = ops.solve_fused_batched(K, a, b, cfg, block_m=16,
+                                        interpret=True, impl=impl)
+        iter_counts = []
+        for i in range(2):
+            A_core, stats = sinkhorn_uot_fused(K[i], a[i], b[i], cfg)
+            iter_counts.append(int(stats["iters"]))
+            np.testing.assert_allclose(P[i], A_core, rtol=3e-5, atol=1e-8)
+        assert iter_counts[0] < iter_counts[1], \
+            "test needs heterogeneous convergence to mean anything"
+
+    def test_matches_stepped_lane_pool(self):
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=300, tol=1e-4)
+        K, a, b = self._stack()
+        P, _ = ops.solve_fused_batched(K, a, b, cfg, impl="jnp")
+        st = ops.make_lane_state(2, 32, 128, cfg)
+        for i in range(2):
+            st = ops.lane_admit(st, jnp.int32(i), K[i], a[i], b[i])
+        for _ in range(100):
+            st = ops.solve_fused_stepped(st, 6, cfg, impl="jnp")
+            if bool(np.asarray(ops.lane_done(st, cfg.num_iters)).all()):
+                break
+        np.testing.assert_allclose(st.P, P, rtol=1e-6, atol=1e-9)
 
 
 class TestJnpBatchedReference:

@@ -1,0 +1,35 @@
+"""Guard the serving-bench path with a micro trace (the CI smoke's tier-1
+twin — bench_serve must not rot between bench runs)."""
+import numpy as np
+
+from repro.core import UOTConfig
+from benchmarks import bench_serve
+
+
+def micro_cfg_and_trace():
+    cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=12, tol=1e-3)
+    trace = bench_serve.make_trace(
+        4, rate_hz=500.0, seed=3, shapes=[(16, 100), (24, 120)],
+        peak_range=(1.0, 4.0), reg=cfg.reg)
+    return cfg, trace
+
+
+def test_make_trace_shapes_and_arrivals():
+    _, trace = micro_cfg_and_trace()
+    arrivals = [t for t, *_ in trace]
+    assert arrivals == sorted(arrivals) and arrivals[0] > 0
+    for _, K, a, b in trace:
+        assert K.shape == (a.shape[0], b.shape[0])
+        assert K.dtype == np.float32
+
+
+def test_sim_flush_and_scheduler_cover_every_request():
+    cfg, trace = micro_cfg_and_trace()
+    flush_lat, flush_T = bench_serve.sim_flush(trace, cfg, max_batch=4,
+                                               warmup=False)
+    sched_lat, sched_T, sched = bench_serve.sim_scheduler(
+        trace, cfg, lanes_per_pool=2, chunk_iters=4, warmup=False)
+    assert len(flush_lat) == len(sched_lat) == len(trace)
+    assert all(lat > 0 for lat in flush_lat + sched_lat)
+    assert flush_T > 0 and sched_T > 0
+    assert sched.stats()["completed"] == len(trace)

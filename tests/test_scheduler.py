@@ -1,0 +1,286 @@
+"""Continuous-batching UOT serving: steppable solver + scheduler.
+
+The load-bearing property: a request's answer must not depend on HOW it was
+served — arrival order, admission interleaving, lane assignment, chunk
+boundaries, or what else shared the pool. Per-lane math is independent and
+convergence freezing happens per-iteration inside the chunk, so the
+scheduler's output is required to EQUAL the standalone solve (exactly for a
+fixed lane pool / same impl; to kernel-vs-jnp tolerance otherwise).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import UOTConfig, sinkhorn_uot_fused
+from repro.kernels import ops
+from repro.serve import QueueFullError, UOTScheduler
+
+IMPLS = ["jnp", "kernel"]
+
+
+from benchmarks.common import make_problem as _common_problem
+
+
+def make_problem(m, n, seed, peak=1.0, reg=0.1):
+    """Random UOT problem (shared recipe from benchmarks.common);
+    ``peak`` scales the cost (peaky cost = slow convergence), giving
+    workloads heterogeneous iteration counts."""
+    return _common_problem(m, n, reg=reg, seed=seed, peak=peak)
+
+
+def ragged_workload(seed, n_requests=8):
+    """Seeded ragged problem list spanning several shape buckets and a
+    ~10x spread of convergence speeds."""
+    r = np.random.default_rng(seed)
+    shapes = [(8, 100), (20, 128), (32, 64), (16, 90), (24, 120)]
+    out = []
+    for i in range(n_requests):
+        m, n = shapes[r.integers(len(shapes))]
+        out.append(make_problem(m, n, seed * 1000 + i,
+                                peak=float(r.uniform(1.0, 8.0))))
+    return out
+
+
+class TestSteppedSolver:
+    CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=20)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_matches_batched_fixed_iters(self, impl):
+        """A lane stepped in chunks equals the one-shot batched solve."""
+        K, a, b = make_problem(40, 100, 1)
+        st = ops.make_lane_state(4, 64, 128, self.CFG)
+        st = ops.lane_admit(st, jnp.int32(2), K, a, b)
+        for _ in range(4):
+            st = ops.solve_fused_stepped(st, 5, self.CFG, interpret=True,
+                                         impl=impl)
+        assert bool(ops.lane_done(st, self.CFG.num_iters)[2])
+        P_ref, cs_ref = ops.solve_fused_batched(
+            K[None], a[None], b[None], self.CFG, interpret=True, impl=impl)
+        np.testing.assert_allclose(st.P[2, :40, :100], P_ref[0],
+                                   rtol=1e-6, atol=1e-9)
+        np.testing.assert_allclose(st.colsum[2, :100], cs_ref[0], rtol=1e-6)
+
+    def test_chunk_boundaries_do_not_change_results(self):
+        """Convergence freezing is per-iteration inside the chunk, so the
+        final iterate is independent of the chunk size."""
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=60, tol=1e-4)
+        K, a, b = make_problem(32, 128, 3, peak=4.0)
+        finals = []
+        for chunk in (1, 4, 7):
+            st = ops.lane_admit(ops.make_lane_state(2, 32, 128, cfg),
+                                jnp.int32(0), K, a, b)
+            for _ in range(60):
+                st = ops.solve_fused_stepped(st, chunk, cfg, impl="jnp")
+                if bool(ops.lane_done(st, cfg.num_iters)[0]):
+                    break
+            finals.append((np.asarray(st.P[0]), int(st.iters[0])))
+        for P, iters in finals[1:]:
+            np.testing.assert_array_equal(P, finals[0][0])
+            assert iters == finals[0][1]
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_tol_matches_single_problem_solver(self, impl):
+        """Per-lane stationarity eviction reproduces the core solver's tol
+        semantics: same iteration count, same iterate, per lane."""
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=200, tol=1e-4)
+        probs = [make_problem(32, 128, s, peak=p)
+                 for s, p in [(1, 1.0), (2, 4.0), (3, 8.0)]]
+        st = ops.make_lane_state(3, 32, 128, cfg)
+        for i, (K, a, b) in enumerate(probs):
+            st = ops.lane_admit(st, jnp.int32(i), K, a, b)
+        for _ in range(80):
+            st = ops.solve_fused_stepped(st, 5, cfg, interpret=True,
+                                         impl=impl)
+            if bool(np.asarray(ops.lane_done(st, cfg.num_iters)).all()):
+                break
+        iters = np.asarray(st.iters)
+        assert len(set(iters.tolist())) > 1, \
+            f"workload should converge heterogeneously, got {iters}"
+        for i, (K, a, b) in enumerate(probs):
+            A_core, stats = sinkhorn_uot_fused(K, a, b, cfg)
+            assert int(stats["iters"]) == int(iters[i])
+            np.testing.assert_allclose(st.P[i], A_core, rtol=1e-5,
+                                       atol=1e-8)
+
+    def test_evict_frees_lane_and_zeroes_problem(self):
+        cfg = self.CFG
+        K, a, b = make_problem(20, 100, 5)
+        st = ops.lane_admit(ops.make_lane_state(2, 32, 128, cfg),
+                            jnp.int32(1), K, a, b)
+        st = ops.lane_evict(st, jnp.int32(1))
+        assert not bool(st.active[1])
+        np.testing.assert_array_equal(np.asarray(st.P[1]), 0.0)
+        # an evicted lane is a no-op for the stepped math
+        st2 = ops.solve_fused_stepped(st, 3, cfg, impl="jnp")
+        np.testing.assert_array_equal(np.asarray(st2.P), np.asarray(st.P))
+
+
+class TestSchedulerProperty:
+    """Scheduler output == standalone solve, whatever the serving history."""
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_arrival_order_invariance(self, impl, seed):
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=40, tol=1e-3)
+        probs = ragged_workload(seed)
+        rng = np.random.default_rng(seed + 99)
+
+        def serve(order, stages):
+            """Serve ``probs[order]``, submitting in ``stages`` slices with
+            scheduler steps in between (admission interleaving)."""
+            sched = UOTScheduler(cfg, lanes_per_pool=2, chunk_iters=3,
+                                 m_bucket=32, interpret=True, impl=impl)
+            rid_to_prob = {}
+            out = {}
+            lo = 0
+            for hi in stages + [len(order)]:
+                for k in order[lo:hi]:
+                    rid = sched.submit(*probs[k],
+                                       priority=int(rng.integers(3)))
+                    rid_to_prob[rid] = k
+                lo = hi
+                out.update(sched.step())
+            out.update(sched.run())
+            assert sched.pending == 0 and sched.in_flight == 0
+            return {rid_to_prob[rid]: P for rid, P in out.items()}
+
+        base = serve(list(range(len(probs))), [])
+        assert set(base) == set(range(len(probs)))
+
+        # every request equals its standalone tol solve
+        for k, (K, a, b) in enumerate(probs):
+            A_core, _ = sinkhorn_uot_fused(K, a, b, cfg)
+            rtol = 1e-5 if impl == "jnp" else 3e-5
+            np.testing.assert_allclose(base[k], A_core, rtol=rtol,
+                                       atol=1e-8)
+
+        # permuted arrival + staged admission: identical results per request
+        order = list(rng.permutation(len(probs)))
+        staged = serve(order, stages=[3, 5])
+        for k in base:
+            np.testing.assert_allclose(staged[k], base[k], rtol=1e-7,
+                                       atol=1e-10)
+
+    def test_fixed_iteration_mode_equals_solve_fused(self):
+        """tol=None: every request runs exactly num_iters in its lane and
+        equals the per-request Pallas solve."""
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=15)
+        probs = ragged_workload(7, n_requests=5)
+        sched = UOTScheduler(cfg, lanes_per_pool=2, chunk_iters=4,
+                             m_bucket=32, impl="jnp")
+        rids = [sched.submit(*p) for p in probs]
+        out = sched.run()
+        for rid, (K, a, b) in zip(rids, probs):
+            P_ref, _ = ops.solve_fused(K, a, b, cfg, interpret=True)
+            np.testing.assert_allclose(out[rid], P_ref, rtol=1e-5,
+                                       atol=1e-8)
+        for t in sched.request_log:
+            assert t.iters == cfg.num_iters and not t.converged
+
+
+class TestScheduling:
+    CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=6)
+
+    def _sched(self, **kw):
+        t = kw.pop("t")
+        return UOTScheduler(self.CFG, lanes_per_pool=1, chunk_iters=3,
+                            m_bucket=32, impl="jnp",
+                            clock=lambda: t[0], **kw)
+
+    def test_edf_admission_order(self):
+        """With one lane, earliest deadline is admitted (and so completes)
+        first regardless of submission order."""
+        t = [0.0]
+        sched = self._sched(t=t)
+        K, a, b = make_problem(16, 100, 0)
+        r_late = sched.submit(K, a, b, deadline=30.0)
+        r_first = sched.submit(K, a, b, deadline=1.0)
+        r_mid = sched.submit(K, a, b, deadline=2.0)
+        r_none = sched.submit(K, a, b)            # no deadline -> last
+        sched.run()
+        assert [tt.rid for tt in sched.request_log] == \
+            [r_first, r_mid, r_late, r_none]
+
+    def test_priority_breaks_deadline_ties(self):
+        t = [0.0]
+        sched = self._sched(t=t)
+        K, a, b = make_problem(16, 100, 1)
+        r0 = sched.submit(K, a, b, deadline=5.0, priority=0)
+        r1 = sched.submit(K, a, b, deadline=5.0, priority=9)
+        r2 = sched.submit(K, a, b, deadline=5.0, priority=4)
+        sched.run()
+        assert [tt.rid for tt in sched.request_log] == [r1, r2, r0]
+
+    def test_fifo_breaks_full_ties(self):
+        t = [0.0]
+        sched = self._sched(t=t)
+        K, a, b = make_problem(16, 100, 2)
+        rids = [sched.submit(K, a, b) for _ in range(3)]
+        sched.run()
+        assert [tt.rid for tt in sched.request_log] == rids
+
+    def test_backpressure_rejects_then_recovers(self):
+        t = [0.0]
+        sched = self._sched(t=t, max_queue=2)
+        K, a, b = make_problem(16, 100, 3)
+        sched.submit(K, a, b)
+        sched.submit(K, a, b)
+        with pytest.raises(QueueFullError):
+            sched.submit(K, a, b)
+        sched.step()                     # admits one -> queue has room again
+        rid = sched.submit(K, a, b)
+        out = sched.run()
+        assert rid in out and len(out) == 3
+
+    def test_poll_take_semantics_and_bounded_logs(self):
+        t = [0.0]
+        sched = self._sched(t=t, max_log=3, max_results=3)
+        K, a, b = make_problem(16, 100, 6)
+        rids = [sched.submit(K, a, b) for _ in range(5)]
+        while sched.pending or sched.in_flight:
+            sched.step()
+        # poll hands each result out exactly once
+        assert sched.poll(rids[-1]) is not None
+        assert sched.poll(rids[-1]) is None
+        # telemetry and pickup store are capped at max_log
+        assert len(sched.request_log) <= 3
+        assert len(sched.occupancy_log) <= 3
+        assert len(sched._results) <= 3
+
+    def test_idle_pool_released_after_ttl(self):
+        t = [0.0]
+        sched = self._sched(t=t, pool_idle_ttl=2)
+        K, a, b = make_problem(16, 100, 7)
+        rid = sched.submit(K, a, b)
+        out = sched.run()
+        assert rid in out and len(sched._pools) == 1
+        for _ in range(3):          # idle rounds past the TTL
+            sched.step()
+        assert sched._pools == {}
+        # pool is recreated transparently for new traffic
+        rid2 = sched.submit(K, a, b)
+        out2 = sched.run()
+        np.testing.assert_array_equal(np.asarray(out2[rid2]),
+                                      np.asarray(out[rid]))
+
+    def test_telemetry(self):
+        t = [0.0]
+        sched = self._sched(t=t)
+
+        def stepping_clock():
+            t[0] += 0.25
+            return t[0]
+        sched.clock = stepping_clock
+        K, a, b = make_problem(16, 100, 4)
+        sched.submit(K, a, b)
+        sched.submit(K, a, b)
+        sched.run()
+        s = sched.stats()
+        assert s["completed"] == 2
+        assert s["iters_max"] == self.CFG.num_iters
+        assert s["occupancy_mean"] > 0
+        # second request waited for the single lane
+        waits = sorted(tt.wait for tt in sched.request_log)
+        assert waits[1] > waits[0]
+        assert all(tt.latency >= tt.wait for tt in sched.request_log)
+        assert len(sched.occupancy_log) == s["steps"]
