@@ -15,8 +15,11 @@ times are *measured wall clock*:
 Both run the same cfg (tol-based early exit enabled for both — the flush
 path also stops when ALL lanes converge, so the scheduler's edge is
 specifically per-request eviction + mid-solve admission). Reports p50/p99
-request latency (arrival -> result) and throughput; the ISSUE-2 acceptance
-bar is scheduler p99 < flush p99 at equal (same-trace) throughput.
+request latency (arrival -> result), throughput, and the deadline-miss
+rate against a per-request latency SLO — the scheduler's from its own
+``RequestTelemetry`` counters, the flush barrier's derived from the
+simulated latencies; the ISSUE-2 acceptance bar is scheduler p99 < flush
+p99 at equal (same-trace) throughput.
 
 ``BENCH_SERVE_SMOKE=1`` shrinks the trace to a seconds-long CI smoke run.
 """
@@ -97,9 +100,13 @@ def sim_flush(trace, cfg, *, max_batch, warmup=True):
     return [lat[k] for k in range(len(trace))], t
 
 
-def sim_scheduler(trace, cfg, *, lanes_per_pool, chunk_iters, warmup=True):
+def sim_scheduler(trace, cfg, *, lanes_per_pool, chunk_iters, warmup=True,
+                  deadline_budget=None):
     """Continuous-batching serving of the trace; returns
-    (latencies, makespan, scheduler) — the scheduler for its telemetry."""
+    (latencies, makespan, scheduler) — the scheduler for its telemetry.
+    With ``deadline_budget`` set, every request gets the deadline
+    ``arrival + budget`` (simulated clock), so the scheduler's own
+    deadline-miss telemetry is exercised and reported."""
     import time
 
     def build(clock):
@@ -122,7 +129,9 @@ def sim_scheduler(trace, cfg, *, lanes_per_pool, chunk_iters, warmup=True):
                 and trace[i][0] > now[0]):
             now[0] = trace[i][0]     # idle: jump to the next arrival
         while i < len(trace) and trace[i][0] <= now[0]:
-            rid_to_idx[sched.submit(*trace[i][1:])] = i
+            deadline = (None if deadline_budget is None
+                        else trace[i][0] + deadline_budget)
+            rid_to_idx[sched.submit(*trace[i][1:], deadline=deadline)] = i
             i += 1
         t0 = time.perf_counter()
         done = sched.step()
@@ -148,12 +157,15 @@ def run():
         shapes = [(200, 300), (224, 320), (256, 384), (240, 360)]
         lanes, chunk, max_batch = 12, 6, 32
     peak_range = (1.0, 8.0) if smoke else (2.0, 20.0)
+    # per-request latency SLO: misses are completions past arrival+budget
+    deadline_budget = 0.2 if smoke else 0.3
     trace = make_trace(n, rate, seed=0, shapes=shapes,
                        peak_range=peak_range, reg=cfg.reg)
 
     flush_lat, flush_T = sim_flush(trace, cfg, max_batch=max_batch)
     sched_lat, sched_T, sched = sim_scheduler(
-        trace, cfg, lanes_per_pool=lanes, chunk_iters=chunk)
+        trace, cfg, lanes_per_pool=lanes, chunk_iters=chunk,
+        deadline_budget=deadline_budget)
 
     f50, f99 = _percentiles(flush_lat)
     s50, s99 = _percentiles(sched_lat)
@@ -169,3 +181,12 @@ def run():
     emit(f"serve_sched_iters_{tag}", st["iters_mean"],
          f"max={st['iters_max']},converged={st['converged_frac']:.2f},"
          f"occupancy={st['occupancy_mean']:.2f}")
+    # deadline-miss rate alongside p99: the scheduler's from its own
+    # telemetry (RequestTelemetry.missed), the flush barrier's from the
+    # simulated latencies against the same SLO
+    flush_miss = float(np.mean([l > deadline_budget for l in flush_lat]))
+    emit(f"serve_flush_missrate_{tag}", flush_miss * 100,
+         f"slo={deadline_budget * 1e3:.0f}ms")
+    emit(f"serve_sched_missrate_{tag}", st["miss_rate"] * 100,
+         f"slo={deadline_budget * 1e3:.0f}ms,"
+         f"misses={st['deadline_misses']}/{st['completed']}")

@@ -20,6 +20,8 @@ SIZES = [(1024, 1024), (4096, 4096), (10240, 10240)]
 
 def _bytes(fn, *args):
     c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(c, (list, tuple)):  # newer jax: one dict per computation
+        c = c[0] if c else {}
     return float(c.get("bytes accessed", 0.0))
 
 

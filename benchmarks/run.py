@@ -14,6 +14,9 @@ across PRs. Mapping to the paper:
   bench_serve        -> beyond-paper (continuous scheduler vs flush barrier
                         on a Poisson arrival trace; BENCH_SERVE_SMOKE=1
                         shrinks it to a CI smoke run)
+  bench_resident     -> beyond-paper (VMEM-resident whole-solve fusion vs
+                        per-iteration streamed launches;
+                        BENCH_RESIDENT_SMOKE=1 for the CI smoke run)
 """
 import argparse
 import json
@@ -37,10 +40,10 @@ def main(argv=None) -> None:
     from benchmarks import (common, bench_uot, bench_traffic, bench_kernel,
                             bench_memory, bench_distributed,
                             bench_application, bench_moe_router, bench_batch,
-                            bench_serve)
+                            bench_serve, bench_resident)
     mods = [bench_uot, bench_traffic, bench_kernel, bench_memory,
             bench_distributed, bench_application, bench_moe_router,
-            bench_batch, bench_serve]
+            bench_batch, bench_serve, bench_resident]
     if args.suite:
         known = {m.__name__.split(".")[-1] for m in mods}
         unknown = set(args.suite) - known

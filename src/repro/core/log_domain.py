@@ -11,6 +11,24 @@ P = exp((f[:,None] + g[None,:] - C) / eps).
 
 This path exists for numerical robustness (serving, tiny-eps analysis); the
 memory-optimized paths operate in linear space like the paper.
+
+Precision: potentials and reductions are computed in
+``promote_types(cfg.dtype, float32)`` — sub-fp32 storage configs keep the
+repo-wide fp32 accumulation floor, while fp64 configs (with x64 enabled)
+are no longer silently truncated to fp32. The log floor on the marginals is
+the compute dtype's smallest *normal* (``finfo.tiny``), not a hardcoded
+constant: the old ``1e-38`` was subnormal even in fp32 and underflows to
+exactly 0 when a caller hands fp16 marginals, turning ``log`` into ``-inf``
+and the potentials into NaN fodder. Only the final coupling is cast to
+``cfg.dtype``.
+
+With ``cfg.translation_invariant`` the optimal dual translation
+(Séjourné et al., arXiv:2201.00730) is applied after each iteration:
+``(f, g) <- (f + t, g - t)`` with
+``t = (rho/2) * log(<a, e^{-f/rho}> / <b, e^{-g/rho}>)`` — the closed-form
+mass rebalancing that removes UOT Sinkhorn's slow mode on unbalanced
+problems (no-op when ``reg_m=inf``, where translation is the exact gauge
+freedom of P).
 """
 from __future__ import annotations
 
@@ -20,35 +38,52 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import logsumexp
 
+from repro.core.sinkhorn_uv import translation_noise_floor
+
 
 @partial(jax.jit, static_argnames=("cfg",))
 def sinkhorn_uot_log(C: jax.Array, a: jax.Array, b: jax.Array, cfg):
     """Log-domain UOT. Returns (P, (f, g), stats)."""
     eps = cfg.reg
     fi = cfg.fi
+    rho = cfg.reg_m
+    ti = cfg.translation_invariant and rho != float("inf")
     M, N = C.shape
-    loga = jnp.log(jnp.maximum(a, 1e-38))
-    logb = jnp.log(jnp.maximum(b, 1e-38))
-    f0 = jnp.zeros((M,), jnp.float32)
-    g0 = jnp.zeros((N,), jnp.float32)
+    ptype = jnp.promote_types(jnp.dtype(cfg.dtype), jnp.float32)
+    tiny = float(jnp.finfo(ptype).tiny)
+    C = C.astype(ptype)
+    loga = jnp.log(jnp.maximum(a.astype(ptype), tiny))
+    logb = jnp.log(jnp.maximum(b.astype(ptype), tiny))
+    f0 = jnp.zeros((M,), ptype)
+    g0 = jnp.zeros((N,), ptype)
 
     def body(carry):
         f, g, it, _ = carry
         f_new = fi * eps * (loga - logsumexp((g[None, :] - C) / eps, axis=1))
         g_new = fi * eps * (logb - logsumexp((f_new[:, None] - C) / eps, axis=0))
+        if ti:
+            t = 0.5 * rho * (logsumexp(loga - f_new / rho)
+                             - logsumexp(logb - g_new / rho))
+            # the 0.5*rho amplification turns logsumexp rounding into
+            # stationarity-stalling jitter near the fixed point
+            t = jnp.where(jnp.abs(t) > translation_noise_floor(0.5 * rho,
+                                                               ptype),
+                          t, 0.0)
+            f_new, g_new = f_new + t, g_new - t
         err = jnp.max(jnp.abs(f_new - f))
         return f_new, g_new, it + 1, err
 
+    err0 = jnp.asarray(jnp.inf, ptype)
     if cfg.tol is None:
         f, g, iters, err = jax.lax.fori_loop(
             0, cfg.num_iters, lambda _, c: body(c),
-            (f0, g0, jnp.int32(0), jnp.float32(jnp.inf)))
+            (f0, g0, jnp.int32(0), err0))
     else:
         def cond(carry):
             _, _, it, err = carry
             return jnp.logical_and(it < cfg.num_iters, err > cfg.tol)
         f, g, iters, err = jax.lax.while_loop(
-            cond, body, (f0, g0, jnp.int32(0), jnp.float32(jnp.inf)))
+            cond, body, (f0, g0, jnp.int32(0), err0))
 
     P = jnp.exp((f[:, None] + g[None, :] - C) / eps).astype(cfg.dtype)
     return P, (f, g), {"iters": iters, "err": err}

@@ -42,6 +42,18 @@ class UOTConfig:
       tol: optional early-exit tolerance on the rescaling-factor drift
         ``max(|alpha - 1|)``; enables a ``lax.while_loop`` path.
       dtype: storage dtype for the coupling matrix (accumulation is fp32).
+      translation_invariant: apply the optimal dual translation after each
+        iteration of the *potential-form* solvers (``sinkhorn_uv``,
+        ``log_domain``) — Séjourné et al., arXiv:2201.00730. The classical
+        UOT update shuttles the mass imbalance between the marginals and
+        contracts slowly for large ``reg_m/reg``; translating ``(f, g)`` by
+        the closed-form optimal constant each iteration removes that mode
+        and cuts the iteration count dramatically on unbalanced problems.
+        A no-op for balanced problems (``reg_m=inf``: translation is the
+        exact gauge freedom of P) and for the matrix-form solvers, whose
+        iteration depends on the coupling alone — A = diag(u) K diag(v) is
+        invariant under the translation ``u *= k, v /= k``, so their
+        trajectory already cannot be improved this way.
     """
 
     reg: float = 0.05
@@ -49,6 +61,7 @@ class UOTConfig:
     num_iters: int = 100
     tol: float | None = None
     dtype: jnp.dtype = jnp.float32
+    translation_invariant: bool = False
 
     @property
     def fi(self) -> float:

@@ -7,17 +7,35 @@
 - ``uot_uv_fused``: beyond-paper read-only pass in u/v-potential space.
 - ``uot_batched``: stacked problems on a (batch, row_blocks) grid — one
   launch for B problems, per-problem column-sum accumulators.
+- ``uot_resident``: lane-grid kernels that keep a problem's WHOLE tile in
+  VMEM across a ``lax.while_loop`` of iterations (one-shot and
+  LaneState-stepped) — per-solve instead of per-iteration HBM traffic,
+  with the tol convergence check folded into the on-chip loop.
 - ``ops``: padding/block-size/interpret handling + assembled solvers
-  (single, batched, and shape-bucketed ragged batching).
+  (single, batched, shape-bucketed ragged, steppable) + the
+  resident-vs-streamed auto-dispatch (``impl='auto'`` routed by
+  ``resident_fits``; see the dispatch table in ``ops``'s docstring).
 - ``ref``: pure-jnp oracles.
+
+Two memory tiers, picked per problem shape:
+
+* **streamed** (``uot_fused``/``uot_batched``/``uot_halfpass``): each
+  iteration streams the coupling HBM -> VMEM -> HBM through a row-block
+  grid — read MN + write MN bytes *per iteration*, the paper's floor.
+* **resident** (``uot_resident``): the whole (padded) tile fits the VMEM
+  budget, so the solve loads it once, iterates on-chip, stores once —
+  read MN + write MN bytes *per solve*; a 25-iteration solve moves 25x
+  fewer coupling bytes.
 
 All kernels validate on CPU via ``interpret=True``; block shapes are
 (8k, 128m)-aligned for the TPU VPU ((16k, 128m) for bf16 storage). Every
 kernel takes ``acc_dtype`` (fp32 default) so the coupling/Gibbs matrix can
-be stored bf16 while reductions and factors stay fp32.
+be stored bf16 while reductions and factors stay fp32 (the resident tier
+upcasts once on load and downcasts once on store, so bf16 there rounds
+per solve, not per iteration).
 """
 from repro.kernels import (ops, ref, uot_batched, uot_fused, uot_halfpass,
-                           uot_uv_fused)
+                           uot_resident, uot_uv_fused)
 
 __all__ = ["ops", "ref", "uot_batched", "uot_fused", "uot_halfpass",
-           "uot_uv_fused"]
+           "uot_resident", "uot_uv_fused"]

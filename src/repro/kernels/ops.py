@@ -31,6 +31,41 @@ substrate for ``repro.serve.scheduler``'s continuous batching. With
 ``cfg.tol`` set, both the stepped and the one-shot batched solves freeze
 each lane at the iterate where its row-factor stationarity reaches tol
 (identical to the single-problem solvers' early exit, per lane).
+
+Resident tier & auto-dispatch
+-----------------------------
+When a problem's whole padded tile fits the VMEM budget
+(``resident_fits``), the streamed per-iteration HBM schedule is beatable:
+``uot_resident`` loads each lane's tile on-chip once, iterates to
+convergence in a ``lax.while_loop``, and stores once — per-solve instead of
+per-iteration traffic. ``impl='auto'`` on the solve entry points routes
+between the two tiers by that static budget test (decisions are observable
+via ``dispatch_stats``). Per-solve HBM traffic by (workload x tier), with
+``s`` = storage itemsize, ``T`` = iterations run, ``c`` = chunks
+(``ceil(T / chunk_iters)``):
+
+====================  ==========================  =========================
+workload              resident (fits VMEM)        streamed (over budget)
+====================  ==========================  =========================
+per-request           ``2*M*N*s`` per solve       ``2*M*N*s * T``
+``solve_fused``
+bucketed batch        ``2*B*M*N*s`` per chunk     ``2*B*M*N*s * T``
+``solve_fused_        solve (one lane-grid
+batched/bucketed``    launch, lanes early-exit
+                      independently)
+scheduler chunk       ``2*L*M*N*s`` per CHUNK     ``2*L*M*N*s *
+``solve_fused_        (fp32 pools; bf16 pools     chunk_iters`` per chunk
+stepped``             stay streamed to keep
+                      chunk-boundary invariance)
+====================  ==========================  =========================
+
+(+ O(M+N) factor/marginal traffic per launch in every cell. On non-TPU
+backends the resident tier is the jnp mirror — same iteration fusion in one
+XLA executable; the table's traffic formulas describe the TPU kernels.)
+
+bf16 storage on the resident tier upcasts once at load and downcasts once
+at store, so the per-iteration bf16 rounding of the streamed path
+disappears: resident bf16 iterates are the fp32 trajectory rounded once.
 """
 from __future__ import annotations
 
@@ -43,7 +78,8 @@ import numpy as np
 
 from repro.core.convergence import lane_factor_drift
 from repro.core.problem import UOTConfig, rescale_factors
-from repro.kernels import uot_batched, uot_fused, uot_halfpass, uot_uv_fused
+from repro.kernels import (uot_batched, uot_fused, uot_halfpass, uot_resident,
+                           uot_uv_fused)
 
 # TPU v5e VMEM is 128 MiB; keep the working set (in + out + accumulators,
 # double-buffered) comfortably under half of it.
@@ -94,6 +130,46 @@ def pick_block_m(M: int, N: int, itemsize: int = 4,
     return max(bm, sub)
 
 
+def resident_fits(M: int, N: int, cfg: UOTConfig, *, storage_dtype=None,
+                  budget_bytes: int | None = None) -> bool:
+    """Whether a (M, N) problem can run on the VMEM-resident solver tier.
+
+    The resident kernel (``uot_resident``) holds, per grid step (= per
+    lane): the in and out tiles in the storage dtype (double-buffered by
+    the pipeline), the fp32 working copy carried through the iteration
+    loop, one fp32 temporary for the rescale products, and the O(M+N)
+    factor/marginal vectors — ``Mp*Np*(2*s + 2*4)`` + vector bytes against
+    the same budget ``pick_block_m`` uses for the streamed tier. The test
+    is static (shapes, dtypes, budget), so ``impl='auto'`` dispatch is
+    decidable at trace time and batch size does not matter: the lane grid
+    is sequential, one tile resident at a time.
+    """
+    sdt = _storage(cfg, storage_dtype)
+    sub = _sublane(sdt.itemsize)
+    Mp = M + (-M) % sub
+    Np = N + (-N) % _LANE
+    budget = _VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    acc = 4  # fp32 accumulator itemsize
+    tile_bytes = Mp * Np * (2 * sdt.itemsize + 2 * acc)
+    vec_bytes = 4 * (Mp + Np) * acc  # a/frow/rowsum rows + b/colsum/fcol cols
+    return tile_bytes + vec_bytes <= budget
+
+
+# ``impl='auto'`` routing decisions, observable so the dispatch boundary is
+# assertable in tests and visible in benchmarks. Only 'auto' counts — an
+# explicit impl is the caller's decision, not the dispatcher's.
+_DISPATCH_STATS = {"resident": 0, "streamed": 0}
+
+
+def dispatch_stats() -> dict:
+    """{'resident': ..., 'streamed': ...} decisions made by ``impl='auto'``."""
+    return dict(_DISPATCH_STATS)
+
+
+def reset_dispatch_stats() -> None:
+    _DISPATCH_STATS.update(resident=0, streamed=0)
+
+
 def pad_to(x: jax.Array, m_mult: int, n_mult: int) -> jax.Array:
     """Zero-pad the last two dims to multiples (works for 2-D and 3-D)."""
     M, N = x.shape[-2:]
@@ -114,18 +190,52 @@ def pad_vec(x: jax.Array, mult: int) -> jax.Array:
     return jnp.pad(x, pad)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret",
-                                             "storage_dtype"))
 def solve_fused(A0: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig,
                 *, block_m: int | None = None, interpret: bool | None = None,
-                storage_dtype=None):
+                storage_dtype=None, impl: str | None = None):
     """MAP-UOT solve built entirely from the fused Pallas kernel.
 
     Matches core.sinkhorn_uot_fused iterates (asserted in tests). Inputs of
     arbitrary shape; zero-padded internally to (block_m, 128) multiples.
     ``storage_dtype`` (default ``cfg.dtype``) sets the in-HBM dtype of the
     coupling matrix; accumulation/factors stay fp32.
+
+    ``impl``: None/'kernel' runs the streamed per-iteration kernel loop
+    (this function's historical behavior, fixed ``cfg.num_iters``);
+    'resident' runs the whole solve VMEM-resident (one HBM read + write of
+    the coupling for the entire solve, and — unlike the streamed path here
+    — honoring ``cfg.tol`` early exit); 'auto' picks by ``resident_fits``.
     """
+    if impl not in (None, "kernel", "auto", "resident"):
+        raise ValueError(
+            f"solve_fused impl must be None, 'kernel', 'auto' or 'resident',"
+            f" got {impl!r} (for the vectorized XLA path use the core jnp"
+            f" solvers or solve_fused_batched)")
+    if impl in ("auto", "resident"):
+        M, N = A0.shape
+        if _resolve_auto(impl, M, N, cfg, storage_dtype):
+            P, colsum, _, _ = solve_fused_resident(
+                A0, a, b, cfg, interpret=interpret,
+                storage_dtype=storage_dtype)
+            return P, colsum
+        # Over budget: stream via the batched path at B=1 rather than the
+        # legacy fixed-iteration loop below, so 'auto' keeps tol semantics
+        # (per-lane early exit) consistent across the dispatch boundary —
+        # results must differ by tier in *traffic*, never in math.
+        P, colsum = solve_fused_batched(
+            A0[None], a[None], b[None], cfg, block_m=block_m,
+            interpret=interpret, storage_dtype=storage_dtype)
+        return P[0], colsum[0]
+    return _solve_fused_streamed(A0, a, b, cfg, block_m=block_m,
+                                 interpret=interpret,
+                                 storage_dtype=storage_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret",
+                                             "storage_dtype"))
+def _solve_fused_streamed(A0: jax.Array, a: jax.Array, b: jax.Array,
+                          cfg: UOTConfig, *, block_m: int | None = None,
+                          interpret: bool | None = None, storage_dtype=None):
     interpret = _interpret_default(interpret)
     M, N = A0.shape
     sdt = _storage(cfg, storage_dtype)
@@ -155,12 +265,40 @@ def _impl_default(impl, interpret):
     through a while_loop with full-buffer dynamic updates per grid step —
     O(grid * B*M*N) traffic — so it is for validation, not speed. Tests pin
     ``impl='kernel', interpret=True`` to exercise the real kernel schedule.
+
+    'auto' and 'resident' pass through — the public wrappers resolve them
+    to a tier (see ``resident_fits``) before reaching the jitted streamed
+    cores, which only ever see 'kernel' or 'jnp'.
     """
     if impl is None:
         return "kernel" if (on_tpu() and not interpret) else "jnp"
-    if impl not in ("kernel", "jnp"):
-        raise ValueError(f"impl must be 'kernel' or 'jnp', got {impl!r}")
+    if impl not in ("kernel", "jnp", "auto", "resident"):
+        raise ValueError(f"impl must be 'kernel', 'jnp', 'auto' or "
+                         f"'resident', got {impl!r}")
     return impl
+
+
+def _resolve_auto(impl, M, N, cfg, storage_dtype, *, stepped_sdt=None):
+    """Resolve 'auto'/'resident' to a tier for a (M, N) problem.
+
+    Returns True to route resident. For the stepped path pass the pool's
+    storage dtype as ``stepped_sdt``: sub-fp32 pools never auto-route
+    resident, because the resident chunk rounds the tile once per chunk
+    instead of once per iteration, which would make a bf16 lane's iterates
+    depend on chunk boundaries (the streamed stepped path guarantees
+    chunk-boundary invariance; see ``uot_resident.resident_stepped``).
+    """
+    fits = resident_fits(M, N, cfg, storage_dtype=storage_dtype)
+    if impl == "resident":
+        if not fits:
+            raise ValueError(
+                f"({M}, {N}) exceeds the resident VMEM budget; use "
+                f"impl='auto' to fall back to the streamed tier")
+        return True
+    resident = fits and not (stepped_sdt is not None
+                             and jnp.dtype(stepped_sdt).itemsize < 4)
+    _DISPATCH_STATS["resident" if resident else "streamed"] += 1
+    return resident
 
 
 def _stepped_iter(A, colsum, upd, *, ap, bp, fi, sdt, impl, bm, interpret):
@@ -208,8 +346,6 @@ def _stepped_iter(A, colsum, upd, *, ap, bp, fi, sdt, impl, bm, interpret):
     return newA, colsum, frow
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret",
-                                             "storage_dtype", "impl"))
 def solve_fused_batched(A0: jax.Array, a: jax.Array, b: jax.Array,
                         cfg: UOTConfig, *, block_m: int | None = None,
                         interpret: bool | None = None, storage_dtype=None,
@@ -221,17 +357,43 @@ def solve_fused_batched(A0: jax.Array, a: jax.Array, b: jax.Array,
     stack — one dispatch instead of B, with each problem keeping the
     read+write-once schedule and its own (1, N) column-sum accumulator.
     ``impl='jnp'`` (the non-TPU default) runs the identical padded
-    iteration math vectorized over the batch in XLA. Returns (P, colsum)
-    of shapes (B, M, N) and (B, N).
+    iteration math vectorized over the batch in XLA. ``impl='resident'``
+    runs the whole solve on the VMEM-resident tier (one read + one write of
+    each coupling for the entire solve; bf16 storage is rounded once at
+    the end instead of every iteration); ``impl='auto'`` picks the tier by
+    ``resident_fits``. Returns (P, colsum) of shapes (B, M, N) and (B, N).
 
     With ``cfg.tol`` set the solve early-exits per lane: a lane whose
     row-factor stationarity ``max|frow_t - frow_{t-1}|`` (the same
     criterion as the single-problem solvers — see ``sinkhorn_baseline`` on
     why not ``|f - 1|``) falls to ``tol`` is frozen (masked out of further
-    updates) at exactly that iterate, and the loop ends once every lane has
-    converged or ``num_iters`` is hit — fixed-shape batches stop dragging
+    updates on the streamed tier; stops computing on the resident tier) at
+    exactly that iterate, and the loop ends once every lane has converged
+    or ``num_iters`` is hit — fixed-shape batches stop dragging
     already-converged problems to the iteration cap.
     """
+    impl = _impl_default(impl, _interpret_default(interpret))
+    if impl in ("auto", "resident"):
+        _, M, N = A0.shape
+        if _resolve_auto(impl, M, N, cfg, storage_dtype):
+            P, colsum, _, _ = solve_fused_resident(
+                A0, a, b, cfg, interpret=interpret,
+                storage_dtype=storage_dtype)
+            return P, colsum
+        impl = None  # over budget: fall through to the streamed default
+    return _solve_fused_batched_streamed(
+        A0, a, b, cfg, block_m=block_m, interpret=interpret,
+        storage_dtype=storage_dtype, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret",
+                                             "storage_dtype", "impl"))
+def _solve_fused_batched_streamed(A0: jax.Array, a: jax.Array, b: jax.Array,
+                                  cfg: UOTConfig, *,
+                                  block_m: int | None = None,
+                                  interpret: bool | None = None,
+                                  storage_dtype=None,
+                                  impl: str | None = None):
     interpret = _interpret_default(interpret)
     impl = _impl_default(impl, interpret)
     B, M, N = A0.shape
@@ -273,6 +435,59 @@ def solve_fused_batched(A0: jax.Array, a: jax.Array, b: jax.Array,
             cond, wbody, (Ap, colsum, jnp.ones_like(ap),
                           jnp.zeros((B,), bool), jnp.int32(0)))
     return Ap[:, :M, :N], colsum[:, :N]
+
+
+def solve_fused_resident(A0: jax.Array, a: jax.Array, b: jax.Array,
+                         cfg: UOTConfig, *, interpret: bool | None = None,
+                         storage_dtype=None, impl: str | None = None):
+    """Whole-solve VMEM-resident MAP-UOT: load once, iterate, store once.
+
+    A0 may be (M, N) or (B, M, N) (a/b matching). ``impl`` selects the
+    flavor *within* the resident tier with the usual convention: 'kernel'
+    is the Pallas lane-grid kernel (``uot_resident.resident_solve``; TPU
+    default, interpretable on CPU for validation), 'jnp' (non-TPU default)
+    is the same iteration fusion in one XLA executable. Both honor
+    ``cfg.tol`` per lane with the streamed solvers' row-factor-stationarity
+    criterion — same iterate, same iteration count.
+
+    Returns (P, colsum, iters, err); leading batch dims only if A0 had one.
+    The extra per-lane outputs (iteration counts, final drift) come for
+    free from the in-kernel convergence loop and are what the parity tests
+    pin against the streamed tier.
+    """
+    interpret = _interpret_default(interpret)
+    if impl not in (None, "kernel", "jnp"):
+        raise ValueError(f"resident flavor must be None, 'kernel' or 'jnp', "
+                         f"got {impl!r}")
+    flavor = _impl_default(impl, interpret)
+    single = A0.ndim == 2
+    if single:
+        A0, a, b = A0[None], a[None], b[None]
+    B, M, N = A0.shape
+    if not resident_fits(M, N, cfg, storage_dtype=storage_dtype):
+        # guard here too (not just in the impl='resident' dispatch routes)
+        # so an over-budget shape gets this error instead of an opaque
+        # Mosaic VMEM-exhaustion failure from the whole-tile BlockSpec
+        raise ValueError(
+            f"({M}, {N}) exceeds the resident VMEM budget; use "
+            f"impl='auto' to fall back to the streamed tier")
+    sdt = _storage(cfg, storage_dtype)
+    sub = _sublane(sdt.itemsize)
+    Ap = pad_to(A0.astype(sdt), sub, _LANE)
+    ap = pad_vec(a.astype(jnp.float32), sub)
+    bp = pad_vec(b.astype(jnp.float32), _LANE)
+    if flavor == "kernel":
+        P, colsum, iters, err = uot_resident.resident_solve(
+            Ap, ap, bp, fi=cfg.fi, num_iters=cfg.num_iters, tol=cfg.tol,
+            interpret=interpret)
+    else:
+        P, colsum, iters, err = uot_resident.resident_solve_jnp(
+            Ap, ap, bp, fi=cfg.fi, num_iters=cfg.num_iters, tol=cfg.tol,
+            out_dtype=sdt)
+    P, colsum = P[:, :M, :N], colsum[:, :N]
+    if single:
+        return P[0], colsum[0], iters[0], err[0]
+    return P, colsum, iters, err
 
 
 # ---- steppable solving: explicit carried state for continuous batching ----
@@ -412,8 +627,6 @@ def lane_done(state: LaneState, max_iters: int) -> jax.Array:
     return state.active & (state.converged | (state.iters >= max_iters))
 
 
-@functools.partial(jax.jit, static_argnames=("n_iters", "cfg", "block_m",
-                                             "interpret", "impl"))
 def solve_fused_stepped(state: LaneState, n_iters: int, cfg: UOTConfig, *,
                         block_m: int | None = None,
                         interpret: bool | None = None,
@@ -430,9 +643,76 @@ def solve_fused_stepped(state: LaneState, n_iters: int, cfg: UOTConfig, *,
     reaches tol has ``converged`` latched and is frozen at exactly that
     iterate, so a lane's final answer is independent of chunk boundaries
     and of whatever else shares the pool — and equal to the single-problem
-    tol solve. Both ``impl='kernel'`` (Pallas, via the frow-emitting
-    batched kernel) and ``impl='jnp'`` are supported.
+    tol solve. ``impl='kernel'`` (Pallas, via the frow-emitting batched
+    kernel) and ``impl='jnp'`` stream the pool through HBM every
+    iteration; ``impl='resident'`` runs the whole chunk with each lane's
+    tile VMEM-resident (``solve_fused_stepped_resident``), and
+    ``impl='auto'`` routes by ``resident_fits`` — fp32 pools only, since
+    the resident chunk rounds sub-fp32 storage per chunk rather than per
+    iteration, which would break chunk-boundary invariance.
     """
+    impl = _impl_default(impl, _interpret_default(interpret))
+    if impl in ("auto", "resident"):
+        Mp, Np = state.P.shape[1:]
+        if _resolve_auto(impl, Mp, Np, cfg, state.P.dtype,
+                         stepped_sdt=state.P.dtype):
+            return solve_fused_stepped_resident(state, n_iters, cfg,
+                                                interpret=interpret)
+        impl = None  # over budget (or sub-fp32 pool): streamed default
+    return _solve_fused_stepped_streamed(state, n_iters, cfg,
+                                         block_m=block_m,
+                                         interpret=interpret, impl=impl)
+
+
+def solve_fused_stepped_resident(state: LaneState, n_iters: int,
+                                 cfg: UOTConfig, *,
+                                 interpret: bool | None = None,
+                                 impl: str | None = None) -> LaneState:
+    """``solve_fused_stepped`` with the whole chunk VMEM-resident per lane.
+
+    One launch advances every live lane up to ``n_iters`` iterations with
+    its tile loaded on-chip once (read + write MN per CHUNK instead of per
+    iteration); per-lane gating and the tol freeze run inside the kernel's
+    while_loop, so iterates, iteration counts, and chunk-boundary behavior
+    match the streamed stepped path exactly for fp32 pools. ``impl``
+    selects the flavor within the tier: 'kernel' is
+    ``uot_resident.resident_stepped`` (TPU default; interpretable), 'jnp'
+    (non-TPU default) reuses the streamed XLA chunk — already one
+    executable per chunk — with the pool upcast once at chunk entry and
+    downcast once at exit (a no-op for fp32 pools, the per-chunk-rounding
+    semantics of the resident kernel for sub-fp32 ones).
+    """
+    interpret = _interpret_default(interpret)
+    if impl not in (None, "kernel", "jnp"):
+        raise ValueError(f"resident flavor must be None, 'kernel' or 'jnp', "
+                         f"got {impl!r}")
+    Mp, Np = state.P.shape[1:]
+    if not resident_fits(Mp, Np, cfg, storage_dtype=state.P.dtype):
+        raise ValueError(
+            f"({Mp}, {Np}) lane pool exceeds the resident VMEM budget; use "
+            f"impl='auto' to fall back to the streamed tier")
+    flavor = _impl_default(impl, interpret)
+    if flavor == "jnp":
+        sdt = state.P.dtype
+        st = dataclasses.replace(state, P=state.P.astype(jnp.float32))
+        st = _solve_fused_stepped_streamed(st, n_iters, cfg,
+                                           interpret=interpret, impl="jnp")
+        return dataclasses.replace(st, P=st.P.astype(sdt))
+    P, colsum, frow, iters, conv = uot_resident.resident_stepped(
+        state.P, state.colsum, state.frow, state.iters, state.converged,
+        state.active, state.a, state.b, fi=cfg.fi, n_iters=n_iters,
+        num_iters=cfg.num_iters, tol=cfg.tol, interpret=interpret)
+    return LaneState(P=P, colsum=colsum, a=state.a, b=state.b, frow=frow,
+                     iters=iters, converged=conv > 0, active=state.active)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "cfg", "block_m",
+                                             "interpret", "impl"))
+def _solve_fused_stepped_streamed(state: LaneState, n_iters: int,
+                                  cfg: UOTConfig, *,
+                                  block_m: int | None = None,
+                                  interpret: bool | None = None,
+                                  impl: str | None = None) -> LaneState:
     interpret = _interpret_default(interpret)
     impl = _impl_default(impl, interpret)
     Mp, Np = state.P.shape[1:]
@@ -540,11 +820,16 @@ def solve_uv_batched(K: jax.Array, a: jax.Array, b: jax.Array,
                      impl: str | None = None):
     """Batched read-only-pass u/v solver: K (B, M, N), a (B, M), b (B, N).
 
-    K may be bf16 (accumulation fp32). ``impl`` as in solve_fused_batched.
+    K may be bf16 (accumulation fp32). ``impl`` is 'kernel' or 'jnp' as in
+    solve_fused_batched (no resident tier: the u/v pass is read-only, so
+    its streamed form already moves only M*N read bytes per iteration).
     Returns (P or None, (u, v)) with P (B, M, N) fp32, u (B, M), v (B, N).
     """
     interpret = _interpret_default(interpret)
     impl = _impl_default(impl, interpret)
+    if impl not in ("kernel", "jnp"):
+        raise ValueError(f"solve_uv_batched has no resident tier; impl must "
+                         f"be 'kernel' or 'jnp', got {impl!r}")
     B, M, N = K.shape
     bm = block_m or pick_block_m(M, N, jnp.dtype(K.dtype).itemsize)
     Kp = pad_to(K, bm, _LANE)
@@ -652,7 +937,10 @@ def solve_fused_bucketed(problems, cfg: UOTConfig, *,
     of at most ``max_batch``. Zero padding is exact (padded rows/cols carry
     zero mass and unit factors), so each answer equals its standalone solve.
 
-    Each chunk's batch dimension is rounded up to ``canonical_batch`` with
+    ``impl='auto'`` is resolved per bucket chunk by ``solve_fused_batched``
+    (the tier choice depends only on the bucket's padded shape and dtypes,
+    so it is deterministic per cache key). Each chunk's batch dimension is
+    rounded up to ``canonical_batch`` with
     zero problems, so flushes whose bucket shapes repeat reuse the compiled
     solve (see ``bucketed_cache_stats``). The padded stack is assembled
     host-side in numpy: device-side pad/stack would trace per batch

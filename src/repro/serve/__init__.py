@@ -15,7 +15,14 @@ Tier 3 — continuous scheduler (``UOTScheduler``): fixed lane pools advance
   immediately, freed lanes are refilled from the queue
   earliest-deadline-first, and ``submit`` applies backpressure. Use for
   online serving under live traffic — it trades a small per-chunk host
-  round trip for tail latency and deadline awareness.
+  round trip for tail latency and deadline awareness (deadline misses are
+  counted per request and aggregated in ``stats()``).
+
+Every tier accepts ``impl='auto'``: problems whose padded tile fits the
+VMEM budget run on the resident kernel tier (whole solve — or whole
+scheduler chunk — on-chip, one HBM read + write of the coupling instead of
+one per iteration; see ``repro.kernels.ops``'s dispatch table), larger
+ones stream.
 
 ``ServeEngine`` is the LLM-token sibling of tier 3: slot-based continuous
 batching over ``decode_step`` (the architecture ``UOTScheduler`` mirrors,

@@ -29,9 +29,18 @@ solve regardless of arrival order, admission interleaving, or evictions;
 tests/test_scheduler.py asserts this property for both impls.
 
 Telemetry: every completed request carries a ``RequestTelemetry`` (wait
-time, solve iterations, lane, converged-vs-cap), and ``occupancy_log``
-snapshots lane utilization per step — the inputs for the latency/occupancy
-numbers in ``benchmarks/bench_serve.py``.
+time, solve iterations, lane, converged-vs-cap, deadline + whether it was
+missed), ``occupancy_log`` snapshots lane utilization and the running
+deadline-miss total per step, and ``stats()`` reports ``deadline_misses``
+/ ``miss_rate`` — the inputs for the latency/occupancy/miss numbers in
+``benchmarks/bench_serve.py`` and the accounting half of deadline-aware
+shedding (the drop/downgrade half is a ROADMAP follow-on).
+
+With ``impl='auto'`` each pool's chunk advance is routed per bucket shape
+by ``ops.resident_fits``: fp32 pools that fit the VMEM budget run their
+whole chunk with each lane's tile resident
+(``ops.solve_fused_stepped_resident`` — one launch, no per-iteration HBM
+round trips), larger or sub-fp32 pools keep the streamed masked kernel.
 """
 from __future__ import annotations
 
@@ -86,6 +95,7 @@ class RequestTelemetry:
     completed: float
     iters: int
     converged: bool             # False = hit the num_iters cap
+    deadline: float | None = None   # the request's absolute deadline
 
     @property
     def wait(self) -> float:
@@ -94,6 +104,11 @@ class RequestTelemetry:
     @property
     def latency(self) -> float:
         return self.completed - self.arrival
+
+    @property
+    def missed(self) -> bool:
+        """Completed after its deadline (False when no deadline was set)."""
+        return self.deadline is not None and self.completed > self.deadline
 
 
 class _LanePool:
@@ -180,6 +195,11 @@ class UOTScheduler:
         self._steps = 0
         self.request_log: list[RequestTelemetry] = []
         self.occupancy_log: list[dict] = []
+        # Running deadline accounting (survives request_log trimming): the
+        # first ingredient of deadline-aware shedding, and what lets
+        # bench_serve report miss-rate alongside p99.
+        self._deadline_misses = 0
+        self._deadlined_completed = 0
 
     # ---- submission -------------------------------------------------------
 
@@ -292,12 +312,16 @@ class UOTScheduler:
                 # step()/run() return values are the primary delivery
                 while len(self._results) > self.max_results:
                     self._results.pop(next(iter(self._results)))
-                self.request_log.append(RequestTelemetry(
+                rec = RequestTelemetry(
                     rid=req.rid, bucket=pool.bucket, lane=lane,
                     arrival=req.arrival,
                     admitted=pool.admitted_at.pop(lane),
                     completed=now, iters=int(iters[lane]),
-                    converged=bool(conv[lane])))
+                    converged=bool(conv[lane]), deadline=req.deadline)
+                if rec.deadline is not None:
+                    self._deadlined_completed += 1
+                    self._deadline_misses += rec.missed
+                self.request_log.append(rec)
             # one pool update for the whole round's evictions; the index
             # vector is padded to the pool size with duplicates (same
             # zeroing either way) so there is ONE jit signature per pool,
@@ -362,6 +386,7 @@ class UOTScheduler:
         self.occupancy_log.append({
             "step": self._steps,
             "queued": len(self._queue),
+            "deadline_misses": self._deadline_misses,  # running total
             "pools": {str(b): p.occupancy for b, p in self._pools.items()},
         })
         del self.occupancy_log[:-self.max_log]
@@ -371,12 +396,20 @@ class UOTScheduler:
 
     def stats(self) -> dict:
         """Aggregate serving telemetry over the retained log window
-        (the last ``max_log`` completions / occupancy snapshots)."""
+        (the last ``max_log`` completions / occupancy snapshots).
+        ``deadline_misses`` / ``miss_rate`` are *running* totals over every
+        completion (misses / completions-that-had-deadlines), so they stay
+        correct after the window trims."""
+        misses = {
+            "deadline_misses": self._deadline_misses,
+            "miss_rate": (self._deadline_misses / self._deadlined_completed
+                          if self._deadlined_completed else 0.0),
+        }
         if not self.request_log:
             return {"completed": 0, "steps": self._steps, "wait_mean": 0.0,
                     "wait_p99": 0.0, "latency_p50": 0.0, "latency_p99": 0.0,
                     "iters_mean": 0.0, "iters_max": 0,
-                    "converged_frac": 0.0, "occupancy_mean": 0.0}
+                    "converged_frac": 0.0, "occupancy_mean": 0.0, **misses}
         waits = np.array([t.wait for t in self.request_log])
         lats = np.array([t.latency for t in self.request_log])
         iters = np.array([t.iters for t in self.request_log])
@@ -394,4 +427,5 @@ class UOTScheduler:
             "converged_frac": float(np.mean(
                 [t.converged for t in self.request_log])),
             "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+            **misses,
         }

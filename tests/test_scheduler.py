@@ -284,3 +284,34 @@ class TestScheduling:
         assert waits[1] > waits[0]
         assert all(tt.latency >= tt.wait for tt in sched.request_log)
         assert len(sched.occupancy_log) == s["steps"]
+
+    def test_deadline_miss_accounting(self):
+        """Completions after their deadline are counted — per request
+        (RequestTelemetry.missed), as a running total in the occupancy
+        log, and as miss_rate in stats()."""
+        t = [0.0]
+        sched = self._sched(t=t)
+
+        def stepping_clock():
+            t[0] += 0.25
+            return t[0]
+        sched.clock = stepping_clock
+        K, a, b = make_problem(16, 100, 4)
+        # one lane: the impossible-deadline request and a lax one queue up,
+        # a no-deadline request is excluded from the rate denominator
+        sched.submit(K, a, b, deadline=0.01)        # must be missed
+        sched.submit(K, a, b, deadline=1e9)         # comfortably met
+        sched.submit(K, a, b)                       # no deadline
+        sched.run()
+        s = sched.stats()
+        assert s["completed"] == 3
+        assert s["deadline_misses"] == 1
+        assert s["miss_rate"] == pytest.approx(0.5)  # 1 of 2 deadlined
+        by_rid = {tt.rid: tt for tt in sched.request_log}
+        assert by_rid[0].missed and by_rid[0].deadline == 0.01
+        assert not by_rid[1].missed
+        assert not by_rid[2].missed and by_rid[2].deadline is None
+        assert sched.occupancy_log[-1]["deadline_misses"] == 1
+        # running counters survive log trimming
+        sched.request_log.clear()
+        assert sched.stats()["deadline_misses"] == 1

@@ -132,6 +132,110 @@ class TestLogDomainStability:
         K = np.exp(-np.asarray(C) / 0.005)
         assert (K == 0).mean() > 0.5
 
+    def test_respects_cfg_dtype_log_floor(self):
+        """fp16 config + a zero marginal entry: the old hardcoded 1e-38
+        floor is exactly 0 in fp16, so log() produced -inf potentials.
+        The floor must come from the compute dtype's finfo.tiny."""
+        rng = np.random.default_rng(1)
+        C = jnp.asarray(rng.uniform(0, 1, (16, 16)), jnp.float32)
+        a = rng.uniform(0.5, 1.5, 16).astype(np.float16)
+        a[0] = 0.0  # zero-mass row: hits the log floor
+        b = rng.uniform(0.5, 1.5, 16).astype(np.float16)
+        cfg = UOTConfig(reg=0.05, reg_m=1.0, num_iters=20,
+                        dtype=jnp.float16)
+        P, (f, g), _ = sinkhorn_uot_log(C, jnp.asarray(a), jnp.asarray(b),
+                                        cfg)
+        assert P.dtype == jnp.float16
+        assert bool(jnp.isfinite(f).all()) and bool(jnp.isfinite(g).all())
+        assert bool(jnp.isfinite(P).all())
+        # potentials are computed at >= fp32 (the accumulation floor),
+        # only the coupling is stored in cfg.dtype
+        assert f.dtype == jnp.float32
+
+    def test_bf16_cfg_matches_fp32_solution(self):
+        rng = np.random.default_rng(2)
+        C = jnp.asarray(rng.uniform(0, 1, (24, 20)), jnp.float32)
+        a = jnp.asarray(rng.uniform(0.5, 1.5, 24) / 24, jnp.float32)
+        b = jnp.asarray(rng.uniform(0.5, 1.5, 20) / 20 * 1.3, jnp.float32)
+        cfg16 = UOTConfig(reg=0.05, reg_m=1.0, num_iters=100,
+                          dtype=jnp.bfloat16)
+        cfg32 = UOTConfig(reg=0.05, reg_m=1.0, num_iters=100)
+        P16, _, _ = sinkhorn_uot_log(C, a, b, cfg16)
+        P32, _, _ = sinkhorn_uot_log(C, a, b, cfg32)
+        assert P16.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(P16, np.float32),
+                                   np.asarray(P32), rtol=0, atol=2e-2)
+
+
+class TestTranslationInvariant:
+    """Séjourné et al. (2201.00730): the optimal dual translation after
+    each update removes UOT Sinkhorn's slow mass-shuttling mode. Same
+    fixed point, far fewer iterations on ill-conditioned (mass-imbalanced,
+    large reg_m/reg) problems."""
+
+    def _ill_conditioned(self, seed=0, mass_ratio=4.0):
+        rng = np.random.default_rng(seed)
+        C = rng.uniform(0, 1, (64, 64)).astype(np.float32)
+        a = rng.uniform(0.5, 1.5, 64).astype(np.float32)
+        b = rng.uniform(0.5, 1.5, 64).astype(np.float32)
+        a = a / a.sum()
+        b = b / b.sum() * mass_ratio
+        return jnp.asarray(C), jnp.asarray(a), jnp.asarray(b)
+
+    @pytest.mark.parametrize("reg_m", [1.0, 5.0])
+    def test_uv_fewer_iterations_to_tol(self, reg_m):
+        C, a, b = self._ill_conditioned()
+        K = jnp.exp(-C / 0.05)
+        plain = UOTConfig(reg=0.05, reg_m=reg_m, num_iters=20000, tol=1e-6)
+        ti = UOTConfig(reg=0.05, reg_m=reg_m, num_iters=20000, tol=1e-6,
+                       translation_invariant=True)
+        P_p, _, s_p = sinkhorn_uot_uv(K, a, b, plain)
+        P_t, _, s_t = sinkhorn_uot_uv(K, a, b, ti)
+        assert float(s_t["err"]) <= 1e-6  # actually reached tol
+        assert int(s_t["iters"]) < int(s_p["iters"])  # and strictly faster
+        assert int(s_t["iters"]) <= int(s_p["iters"]) // 3
+        np.testing.assert_allclose(np.asarray(P_t), np.asarray(P_p),
+                                   rtol=0, atol=1e-5)
+
+    def test_log_domain_fewer_iterations_to_tol(self):
+        # large reg_m/reg: the regime where the scaling-space iterates
+        # overflow fp32 and only the log-domain TI path is viable
+        C, a, b = self._ill_conditioned(seed=1)
+        plain = UOTConfig(reg=0.05, reg_m=20.0, num_iters=20000, tol=1e-6)
+        ti = UOTConfig(reg=0.05, reg_m=20.0, num_iters=20000, tol=1e-6,
+                       translation_invariant=True)
+        P_p, _, s_p = sinkhorn_uot_log(C, a, b, plain)
+        P_t, _, s_t = sinkhorn_uot_log(C, a, b, ti)
+        assert float(s_t["err"]) <= 1e-6
+        assert int(s_t["iters"]) <= int(s_p["iters"]) // 10
+        np.testing.assert_allclose(np.asarray(P_t), np.asarray(P_p),
+                                   rtol=0, atol=1e-5)
+
+    def test_uv_fused_matches_uv_with_ti(self):
+        C, a, b = self._ill_conditioned(seed=2)
+        K = jnp.exp(-C / 0.05)
+        cfg = UOTConfig(reg=0.05, reg_m=1.0, num_iters=40,
+                        translation_invariant=True)
+        P_uv, (u1, v1), _ = sinkhorn_uot_uv(K, a, b, cfg)
+        P_f, (u2, v2), _ = sinkhorn_uot_uv_fused(K, a, b, cfg)
+        np.testing.assert_allclose(np.asarray(u1), np.asarray(u2),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(P_uv), np.asarray(P_f),
+                                   rtol=1e-5, atol=1e-8)
+
+    def test_balanced_is_noop_gauge(self):
+        """reg_m=inf: translation is the exact gauge freedom of P — the TI
+        flag must not change the coupling at all."""
+        C, a, b = self._ill_conditioned(seed=3, mass_ratio=1.0)
+        b = b / b.sum() * a.sum()
+        K = jnp.exp(-C / 0.05)
+        cfg = UOTConfig(reg=0.05, reg_m=float("inf"), num_iters=50)
+        cfg_ti = UOTConfig(reg=0.05, reg_m=float("inf"), num_iters=50,
+                           translation_invariant=True)
+        P, _, _ = sinkhorn_uot_uv(K, a, b, cfg)
+        P_ti, _, _ = sinkhorn_uot_uv(K, a, b, cfg_ti)
+        np.testing.assert_array_equal(np.asarray(P), np.asarray(P_ti))
+
 
 class TestPallasRouterPath:
     def test_sinkhorn_route_pallas_matches_jnp(self):
