@@ -17,6 +17,10 @@ across PRs. Mapping to the paper:
   bench_resident     -> beyond-paper (VMEM-resident whole-solve fusion vs
                         per-iteration streamed launches;
                         BENCH_RESIDENT_SMOKE=1 for the CI smoke run)
+  bench_geometry     -> beyond-paper (implicit cost geometries: coordinate
+                        payloads + on-chip cost tiles vs host-materialized
+                        dense C; BENCH_GEOMETRY_SMOKE=1 for the CI smoke
+                        run)
 """
 import argparse
 import json
@@ -40,10 +44,10 @@ def main(argv=None) -> None:
     from benchmarks import (common, bench_uot, bench_traffic, bench_kernel,
                             bench_memory, bench_distributed,
                             bench_application, bench_moe_router, bench_batch,
-                            bench_serve, bench_resident)
+                            bench_serve, bench_resident, bench_geometry)
     mods = [bench_uot, bench_traffic, bench_kernel, bench_memory,
             bench_distributed, bench_application, bench_moe_router,
-            bench_batch, bench_serve, bench_resident]
+            bench_batch, bench_serve, bench_resident, bench_geometry]
     if args.suite:
         known = {m.__name__.split(".")[-1] for m in mods}
         unknown = set(args.suite) - known

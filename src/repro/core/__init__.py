@@ -13,7 +13,8 @@ Solver family
 - ``distributed``: shard_map row-sharded & 2-D sharded solvers (the paper's
   MPI_Allreduce design mapped to jax.lax.psum).
 """
-from repro.core.problem import UOTConfig, gibbs_kernel, uot_cost
+from repro.core.problem import (UOTConfig, UOTProblem, gibbs_kernel,
+                                uot_cost)
 from repro.core.sinkhorn_baseline import sinkhorn_uot_baseline
 from repro.core.sinkhorn_fused import (sinkhorn_uot_fused,
                                        sinkhorn_uot_fused_batched)
@@ -24,6 +25,7 @@ from repro.core.convergence import (factor_drift, lane_factor_drift,
 
 __all__ = [
     "UOTConfig",
+    "UOTProblem",
     "gibbs_kernel",
     "uot_cost",
     "sinkhorn_uot_baseline",

@@ -29,6 +29,15 @@ With ``cfg.translation_invariant`` the optimal dual translation
 mass rebalancing that removes UOT Sinkhorn's slow mode on unbalanced
 problems (no-op when ``reg_m=inf``, where translation is the exact gauge
 freedom of P).
+
+``C`` may also be a ``repro.geometry.Geometry``, in which case the
+logsumexp reductions are evaluated *through the geometry*
+(``apply_lse`` / ``apply_lse_T``): a ``GridGeometry`` runs them as staged
+per-axis logsumexps over its small factors — the solve never forms an
+``M*N`` array — and a ``PointCloudGeometry`` computes row-chunked cost
+tiles on the fly. Pass ``materialize=False`` to skip the final dense
+coupling and get ``P=None`` (the potentials are returned either way), the
+memory-honest mode for implicit geometries.
 """
 from __future__ import annotations
 
@@ -39,28 +48,46 @@ import jax.numpy as jnp
 from jax.scipy.special import logsumexp
 
 from repro.core.sinkhorn_uv import translation_noise_floor
+from repro.geometry import Geometry
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def sinkhorn_uot_log(C: jax.Array, a: jax.Array, b: jax.Array, cfg):
-    """Log-domain UOT. Returns (P, (f, g), stats)."""
+@partial(jax.jit, static_argnames=("cfg", "materialize"))
+def sinkhorn_uot_log(C, a: jax.Array, b: jax.Array, cfg, *,
+                     materialize: bool = True):
+    """Log-domain UOT. Returns (P, (f, g), stats).
+
+    ``C``: dense cost matrix or a ``Geometry`` (evaluated lazily through
+    its staged/chunked logsumexps). ``materialize=False`` returns
+    ``P=None`` — with a ``GridGeometry`` the whole solve then never
+    touches an ``M*N`` operand.
+    """
     eps = cfg.reg
     fi = cfg.fi
     rho = cfg.reg_m
     ti = cfg.translation_invariant and rho != float("inf")
+    geom = isinstance(C, Geometry)
     M, N = C.shape
     ptype = jnp.promote_types(jnp.dtype(cfg.dtype), jnp.float32)
     tiny = float(jnp.finfo(ptype).tiny)
-    C = C.astype(ptype)
+    if not geom:
+        C = C.astype(ptype)
     loga = jnp.log(jnp.maximum(a.astype(ptype), tiny))
     logb = jnp.log(jnp.maximum(b.astype(ptype), tiny))
     f0 = jnp.zeros((M,), ptype)
     g0 = jnp.zeros((N,), ptype)
 
+    def lse_rows(g):
+        return (C.apply_lse(g, eps) if geom
+                else logsumexp((g[None, :] - C) / eps, axis=1))
+
+    def lse_cols(f):
+        return (C.apply_lse_T(f, eps) if geom
+                else logsumexp((f[:, None] - C) / eps, axis=0))
+
     def body(carry):
         f, g, it, _ = carry
-        f_new = fi * eps * (loga - logsumexp((g[None, :] - C) / eps, axis=1))
-        g_new = fi * eps * (logb - logsumexp((f_new[:, None] - C) / eps, axis=0))
+        f_new = fi * eps * (loga - lse_rows(g))
+        g_new = fi * eps * (logb - lse_cols(f_new))
         if ti:
             t = 0.5 * rho * (logsumexp(loga - f_new / rho)
                              - logsumexp(logb - g_new / rho))
@@ -85,5 +112,8 @@ def sinkhorn_uot_log(C: jax.Array, a: jax.Array, b: jax.Array, cfg):
         f, g, iters, err = jax.lax.while_loop(
             cond, body, (f0, g0, jnp.int32(0), err0))
 
-    P = jnp.exp((f[:, None] + g[None, :] - C) / eps).astype(cfg.dtype)
+    if not materialize:
+        return None, (f, g), {"iters": iters, "err": err}
+    Cd = C.cost().astype(ptype) if geom else C
+    P = jnp.exp((f[:, None] + g[None, :] - Cd) / eps).astype(cfg.dtype)
     return P, (f, g), {"iters": iters, "err": err}

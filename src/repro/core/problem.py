@@ -75,6 +75,75 @@ def gibbs_kernel(C: jax.Array, reg: float, dtype=jnp.float32) -> jax.Array:
     return jnp.exp(-C / reg).astype(dtype)
 
 
+@dataclasses.dataclass(frozen=True)
+class UOTProblem:
+    """A UOT instance: the marginals plus where their ground cost comes
+    from — either an explicit dense ``C`` or a ``repro.geometry.Geometry``
+    (exactly one of the two).
+
+    The cost source is evaluated *lazily* by the consumers: the
+    potential-form solvers (``sinkhorn_uv``, ``log_domain``) accept the
+    problem's geometry directly and apply the kernel / logsumexp through
+    it (never forming ``M*N`` for grid geometries, row-chunked for point
+    clouds), and the kernel stack (``ops.solve_fused*``) computes implicit
+    geometries' Gibbs tiles on-chip. ``initial_coupling`` materializes
+    ``K = exp(-C / reg)`` for the matrix-scaling solvers that iterate on a
+    dense coupling by construction.
+
+    A registered pytree, so problems pass through jit boundaries whole.
+    """
+
+    a: jax.Array
+    b: jax.Array
+    geometry: "object | None" = None    # repro.geometry.Geometry
+    C: jax.Array | None = None
+
+    def __post_init__(self):
+        if (self.geometry is None) == (self.C is None):
+            raise ValueError("UOTProblem needs exactly one of geometry / C")
+
+    @classmethod
+    def from_cost(cls, C, a, b) -> "UOTProblem":
+        return cls(a=jnp.asarray(a), b=jnp.asarray(b), C=jnp.asarray(C))
+
+    @classmethod
+    def from_points(cls, x, y, a, b, *, scale: float = 1.0) -> "UOTProblem":
+        from repro.geometry import PointCloudGeometry
+        return cls(a=jnp.asarray(a), b=jnp.asarray(b),
+                   geometry=PointCloudGeometry.from_points(x, y,
+                                                           scale=scale))
+
+    @classmethod
+    def from_grid(cls, factors, a, b) -> "UOTProblem":
+        from repro.geometry import GridGeometry
+        return cls(a=jnp.asarray(a), b=jnp.asarray(b),
+                   geometry=GridGeometry(tuple(factors)))
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        if self.geometry is not None:
+            return self.geometry.shape
+        return tuple(self.C.shape[-2:])
+
+    def geom(self):
+        """The problem's cost source as a ``Geometry`` (dense C wrapped)."""
+        if self.geometry is not None:
+            return self.geometry
+        from repro.geometry import DenseGeometry
+        return DenseGeometry(self.C)
+
+    def cost_matrix(self) -> jax.Array:
+        return self.C if self.C is not None else self.geometry.cost()
+
+    def initial_coupling(self, reg: float, dtype=jnp.float32) -> jax.Array:
+        """Materialized ``K = exp(-C / reg)`` for matrix-scaling solvers."""
+        return self.geom().kernel(reg).astype(dtype)
+
+
+jax.tree_util.register_dataclass(
+    UOTProblem, data_fields=["a", "b", "geometry", "C"], meta_fields=[])
+
+
 def uot_cost(P: jax.Array, C: jax.Array, a: jax.Array, b: jax.Array,
              reg: float, reg_m: float) -> jax.Array:
     """Primal entropic UOT objective value (for convergence diagnostics)."""

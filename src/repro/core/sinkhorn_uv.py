@@ -21,6 +21,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.problem import UOTConfig, rescale_factors
+from repro.geometry import Geometry
+
+
+def _Kv(K, v, cfg: UOTConfig):
+    """``K @ v`` for a dense kernel matrix or, lazily, a ``Geometry``
+    (grid: per-axis contractions, never M*N; point cloud: row-chunked
+    on-the-fly tiles)."""
+    if isinstance(K, Geometry):
+        return K.apply_kernel(v, cfg.reg)
+    return K @ v
+
+
+def _KTu(K, u, cfg: UOTConfig):
+    if isinstance(K, Geometry):
+        return K.apply_kernel_T(u, cfg.reg)
+    return u @ K              # row-major-friendly transposed matvec
+
+
+def _coupling(K, u, v, cfg: UOTConfig):
+    Kd = K.kernel(cfg.reg) if isinstance(K, Geometry) else K
+    return (u[:, None] * Kd * v[None, :]).astype(cfg.dtype)
 
 
 def translation_noise_floor(amplification: float, dtype) -> float:
@@ -78,8 +99,15 @@ def _ti_enabled(cfg: UOTConfig) -> bool:
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def sinkhorn_uot_uv(K: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig):
+def sinkhorn_uot_uv(K, a: jax.Array, b: jax.Array, cfg: UOTConfig):
     """POT-style u/v iteration. Returns (P, (u, v), stats).
+
+    ``K`` is the dense Gibbs kernel matrix — or a
+    ``repro.geometry.Geometry``, evaluated lazily: every matvec goes
+    through ``apply_kernel`` / ``apply_kernel_T``, so a ``GridGeometry``
+    iterates entirely on per-axis factors (never forming M*N) and a
+    ``PointCloudGeometry`` computes row-chunked tiles on the fly. Only the
+    final coupling materialization is dense.
 
     With ``cfg.translation_invariant`` the optimal dual translation is
     applied after every iteration (see ``translate_uv``) — same fixed
@@ -93,9 +121,9 @@ def sinkhorn_uot_uv(K: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig):
 
     def body(carry):
         u, v, it, _ = carry
-        Kv = K @ v
+        Kv = _Kv(K, v, cfg)
         u_new = rescale_factors(a, Kv, fi)
-        KTu = u_new @ K          # row-major-friendly transposed matvec
+        KTu = _KTu(K, u_new, cfg)
         v_new = rescale_factors(b, KTu, fi)
         if ti:
             u_new, v_new = translate_uv(u_new, v_new, a, b, cfg.reg,
@@ -114,7 +142,7 @@ def sinkhorn_uot_uv(K: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig):
         u, v, iters, err = jax.lax.while_loop(
             cond, body, (u0, v0, jnp.int32(0), jnp.float32(jnp.inf)))
 
-    P = (u[:, None] * K * v[None, :]).astype(cfg.dtype)
+    P = _coupling(K, u, v, cfg)
     return P, (u, v), {"iters": iters, "err": err}
 
 
@@ -132,9 +160,15 @@ def uv_fused_iteration(K, v, a, b, fi):
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def sinkhorn_uot_uv_fused(K: jax.Array, a: jax.Array, b: jax.Array,
+def sinkhorn_uot_uv_fused(K, a: jax.Array, b: jax.Array,
                           cfg: UOTConfig):
-    """Fused-schedule u/v solver (same iterates as ``sinkhorn_uot_uv``)."""
+    """Fused-schedule u/v solver (same iterates as ``sinkhorn_uot_uv``).
+
+    ``K`` may be a ``Geometry`` (lazy kernel applications) like
+    ``sinkhorn_uot_uv``; the explicit single-read-pass schedule is the
+    dense-matrix story, the geometry story is that each "pass" never
+    touches an M*N operand at all.
+    """
     fi = cfg.fi
     ti = _ti_enabled(cfg)
     M, N = K.shape
@@ -143,11 +177,12 @@ def sinkhorn_uot_uv_fused(K: jax.Array, a: jax.Array, b: jax.Array,
 
     def body(_, carry):
         u, v = carry
-        u, v = uv_fused_iteration(K, v, a, b, fi)
+        u = rescale_factors(a, _Kv(K, v, cfg), fi)
+        v = rescale_factors(b, _KTu(K, u, cfg), fi)
         if ti:
             u, v = translate_uv(u, v, a, b, cfg.reg, cfg.reg_m)
         return u, v
 
     u, v = jax.lax.fori_loop(0, cfg.num_iters, body, (u0, v0))
-    P = (u[:, None] * K * v[None, :]).astype(cfg.dtype)
+    P = _coupling(K, u, v, cfg)
     return P, (u, v), {"iters": jnp.int32(cfg.num_iters)}

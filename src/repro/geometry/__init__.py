@@ -1,0 +1,26 @@
+"""Implicit cost geometries: name the cost *source*, not its M*N bytes.
+
+``Geometry`` abstracts where a UOT problem's ground cost comes from, so
+every consumer (core solvers, Pallas kernel stack, serving) can pick the
+cheapest faithful evaluation instead of demanding a dense HBM-resident
+``C``:
+
+- ``DenseGeometry(C)`` — the explicit matrix; historical semantics.
+- ``PointCloudGeometry.from_points(x, y)`` — squared-Euclidean cost of
+  coordinate clouds; the kernel stack computes Gibbs tiles in VMEM from
+  ``O((M + N) * d)`` coordinates (never materializing ``C``), serving
+  ships coordinates instead of matrices, and the resident tier's VMEM
+  budget shrinks to the coupling alone.
+- ``GridGeometry(factors)`` — separable per-axis costs; kernel
+  applications are k small per-axis contractions and never form ``M*N``.
+
+See ``base.py`` for the bitwise-reproducibility contract that lets the
+solver tiers dispatch on memory layout without changing results.
+"""
+from repro.geometry.base import Geometry
+from repro.geometry.dense import DenseGeometry
+from repro.geometry.grid import GridGeometry
+from repro.geometry.pointcloud import PointCloudGeometry
+
+__all__ = ["Geometry", "DenseGeometry", "GridGeometry",
+           "PointCloudGeometry"]

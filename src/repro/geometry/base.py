@@ -1,0 +1,96 @@
+"""Cost geometry abstraction: where the ground cost comes from.
+
+Every solver in this repo consumes the ground cost ``C`` (or its Gibbs
+kernel ``K = exp(-C / reg)``) somewhere: the matrix-scaling paths take
+``K`` as the initial coupling, the u/v and log-domain paths apply ``K``
+(or ``(z - C)/eps`` logsumexps) every iteration. Historically that meant a
+dense, precomputed, HBM-resident ``M*N`` operand — even when the cost is a
+*function* of ``O(M + N)`` data (point-cloud squared Euclidean, separable
+grid costs). A ``Geometry`` names the cost *source* instead of its
+materialization, so each consumer can pick the cheapest faithful
+evaluation: load a dense tile, compute the tile on-chip from coordinates,
+or contract small per-axis factors.
+
+Three backends (see the sibling modules):
+
+- ``DenseGeometry`` — today's explicit ``C``; semantics unchanged, the
+  degenerate "the materialization IS the source" case.
+- ``PointCloudGeometry`` — squared-Euclidean cost of ``(M, d)`` / ``(N, d)``
+  coordinate clouds. ``is_implicit``: the Pallas kernel stack computes
+  Gibbs-kernel tiles in VMEM straight from the coordinates, so no ``M*N``
+  cost array ever exists in HBM on that path.
+- ``GridGeometry`` — separable (kron-sum) cost over a product grid; kernel
+  applications are per-axis contractions of small factors and never form
+  ``M*N`` at all.
+
+All geometries are registered pytrees, so they pass through ``jax.jit``
+boundaries as arguments (array fields trace; float metadata is static).
+
+Numerical contract: a geometry's materializing ``kernel()`` / ``cost()``
+mirrors and its implicit tile evaluations round identically (asserted
+bit-for-bit in fp32 by tests/test_geometry.py), so the solver tiers can
+dispatch on memory layout without changing results. That is why the
+implicit geometries precompute any shared reductions (e.g. squared norms)
+once at construction: recomputing them inside different fusion contexts is
+where bitwise reproducibility would die (XLA FMA-contracts a ``mul+add``
+in one fusion and not another).
+"""
+from __future__ import annotations
+
+import jax
+
+
+class Geometry:
+    """Abstract cost source for a (M, N) transport problem.
+
+    Subclasses implement the materializing mirrors (``cost``, ``kernel``)
+    and the lazy applications (``apply_kernel``, ``apply_kernel_T``,
+    ``apply_lse``, ``apply_lse_T``); consumers pick by memory budget.
+    ``is_implicit`` marks geometries whose kernel path computes cost tiles
+    on-chip instead of loading them (the ops dispatcher uses it to shrink
+    the VMEM tile budget to the coupling only — see ``ops.resident_fits``).
+    """
+
+    #: True when the Pallas kernel stack can compute this geometry's Gibbs
+    #: tiles on-chip from O(M + N) operands instead of loading an M*N array.
+    is_implicit: bool = False
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        """(M, N) of the cost this geometry describes (per problem; batched
+        geometries report the trailing per-problem shape)."""
+        raise NotImplementedError
+
+    @property
+    def batch_shape(self) -> tuple[int, ...]:
+        """Leading batch dims ((,) for a single problem)."""
+        return ()
+
+    def cost(self) -> jax.Array:
+        """Materialize the dense cost matrix C (tests / fallbacks)."""
+        raise NotImplementedError
+
+    def kernel(self, reg: float) -> jax.Array:
+        """Materialize the Gibbs kernel ``K = exp(-C / reg)``.
+
+        This is the *mirror* the dense solver tiers consume; implicit
+        geometries compute it with exactly the arithmetic their on-chip
+        tile evaluation uses, never via an intermediate dense ``C``.
+        """
+        raise NotImplementedError
+
+    def apply_kernel(self, v: jax.Array, reg: float) -> jax.Array:
+        """``K @ v`` without holding a dense K (the u/v solvers' matvec)."""
+        raise NotImplementedError
+
+    def apply_kernel_T(self, u: jax.Array, reg: float) -> jax.Array:
+        """``K^T @ u`` without holding a dense K."""
+        raise NotImplementedError
+
+    def apply_lse(self, z: jax.Array, reg: float) -> jax.Array:
+        """``logsumexp_j((z_j - C_ij) / reg)`` per row (log-domain solver)."""
+        raise NotImplementedError
+
+    def apply_lse_T(self, z: jax.Array, reg: float) -> jax.Array:
+        """``logsumexp_i((z_i - C_ij) / reg)`` per column."""
+        raise NotImplementedError

@@ -1,0 +1,71 @@
+"""Explicit dense cost matrix — the degenerate Geometry backend.
+
+Wraps today's precomputed ``C`` so every solver entry point can take a
+``Geometry`` uniformly; semantics (and bytes moved) are exactly the
+historical dense path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+from repro.geometry.base import Geometry
+
+
+@functools.partial(jax.jit, static_argnames=("reg",))
+def _gibbs(C: jax.Array, *, reg: float) -> jax.Array:
+    # evaluate the exp on a lane-aligned minor dim and slice back, so the
+    # values match the implicit geometries' lane-padded tile evaluation
+    # bitwise (scalar-tail vs SIMD exp round differently; see
+    # pointcloud._lane_padded)
+    N = C.shape[-1]
+    pad = (-N) % 128
+    if pad:
+        C = jnp.pad(C, [(0, 0)] * (C.ndim - 1) + [(0, pad)])
+    K = jnp.exp(-C / reg)
+    if pad:
+        # the barrier stops XLA from fusing the slice into the exp loop
+        # and narrowing its bounds back to a tailed evaluation
+        K = jax.lax.optimization_barrier(K)
+    return K[..., :N]
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseGeometry(Geometry):
+    """Geometry backed by an explicit (M, N) (or (..., M, N)) cost matrix."""
+
+    C: jax.Array
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(self.C.shape[-2:])
+
+    @property
+    def batch_shape(self) -> tuple[int, ...]:
+        return tuple(self.C.shape[:-2])
+
+    def cost(self) -> jax.Array:
+        return self.C
+
+    def kernel(self, reg: float) -> jax.Array:
+        return _gibbs(self.C, reg=float(reg))
+
+    def apply_kernel(self, v: jax.Array, reg: float) -> jax.Array:
+        return self.kernel(reg) @ v
+
+    def apply_kernel_T(self, u: jax.Array, reg: float) -> jax.Array:
+        return u @ self.kernel(reg)
+
+    def apply_lse(self, z: jax.Array, reg: float) -> jax.Array:
+        return logsumexp((z[None, :] - self.C) / reg, axis=1)
+
+    def apply_lse_T(self, z: jax.Array, reg: float) -> jax.Array:
+        return logsumexp((z[:, None] - self.C) / reg, axis=0)
+
+
+jax.tree_util.register_dataclass(DenseGeometry, data_fields=["C"],
+                                 meta_fields=[])

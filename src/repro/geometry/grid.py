@@ -1,0 +1,117 @@
+"""Separable grid geometry: per-axis cost factors, never an M*N array.
+
+For histograms supported on product grids (images, voxel grids, tensor
+meshes) with a separable ground cost
+
+    C[(i_1..i_k), (j_1..j_k)] = sum_l C_l[i_l, j_l]
+
+the Gibbs kernel factorizes as a Kronecker product,
+``K = kron(K_1, ..., K_k)`` with ``K_l = exp(-C_l / reg)``, and every
+kernel application the u/v and log-domain solvers need is a sequence of
+*small per-axis contractions*:
+
+    K @ v      = fold_l ( K_l tensordot_l V )        — k small matmuls
+    lse update = fold_l ( logsumexp_l over axis l )  — staged, stabilized
+
+Cost per application drops from ``O(M * N)`` to
+``O(sum_l m_l * n_l * prod_{r != l} n_r)`` flops with ``O(M + N)`` state —
+the geometry never forms an ``M*N`` array at all (``kernel()`` /
+``cost()`` exist as materializing mirrors for tests and for the
+matrix-scaling tiers, which iterate on a dense coupling by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+from repro.geometry.base import Geometry
+
+
+@dataclasses.dataclass(frozen=True)
+class GridGeometry(Geometry):
+    """Geometry of a separable cost over a k-axis product grid.
+
+    ``factors`` are the per-axis cost matrices ``C_l`` of shape
+    ``(m_l, n_l)``; the flattened problem shape is
+    ``(prod m_l, prod n_l)`` with C-order (row-major) flattening of the
+    grid axes, matching ``jnp.reshape``.
+    """
+
+    factors: tuple[jax.Array, ...]
+
+    def __post_init__(self):
+        if not self.factors:
+            raise ValueError("GridGeometry needs at least one axis factor")
+        object.__setattr__(self, "factors", tuple(self.factors))
+
+    @property
+    def grid_shape(self) -> tuple[tuple[int, int], ...]:
+        return tuple(tuple(C.shape) for C in self.factors)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (math.prod(C.shape[0] for C in self.factors),
+                math.prod(C.shape[1] for C in self.factors))
+
+    def cost(self) -> jax.Array:
+        """Dense kron-sum mirror (tests / explicit-C parity)."""
+        C = self.factors[0]
+        for Cn in self.factors[1:]:
+            C = (C[:, None, :, None] + Cn[None, :, None, :]).reshape(
+                C.shape[0] * Cn.shape[0], C.shape[1] * Cn.shape[1])
+        return C
+
+    def kernel(self, reg: float) -> jax.Array:
+        """Dense Kronecker mirror ``kron(exp(-C_l / reg))``."""
+        K = jnp.exp(-self.factors[0] / reg)
+        for Cn in self.factors[1:]:
+            Kn = jnp.exp(-Cn / reg)
+            K = (K[:, None, :, None] * Kn[None, :, None, :]).reshape(
+                K.shape[0] * Kn.shape[0], K.shape[1] * Kn.shape[1])
+        return K
+
+    def _apply(self, vec, reg, *, transpose: bool) -> jax.Array:
+        axis_in = 1 if not transpose else 0
+        shp_in = tuple(C.shape[axis_in] for C in self.factors)
+        V = vec.reshape(shp_in)
+        for l, C in enumerate(self.factors):
+            K = jnp.exp(-C / reg)
+            if transpose:
+                K = K.T
+            # contract axis l of V against K's input axis, put the output
+            # axis back in place — one small matmul per grid axis
+            V = jnp.moveaxis(jnp.tensordot(K, V, axes=(1, l)), 0, l)
+        return V.reshape(-1)
+
+    def apply_kernel(self, v: jax.Array, reg: float) -> jax.Array:
+        return self._apply(v, float(reg), transpose=False)
+
+    def apply_kernel_T(self, u: jax.Array, reg: float) -> jax.Array:
+        return self._apply(u, float(reg), transpose=True)
+
+    def _apply_lse(self, z, reg, *, transpose: bool) -> jax.Array:
+        axis_in = 1 if not transpose else 0
+        shp_in = tuple(C.shape[axis_in] for C in self.factors)
+        W = z.reshape(shp_in) / reg
+        for l, C in enumerate(self.factors):
+            A = -C / reg
+            if transpose:
+                A = A.T
+            Wf = jnp.moveaxis(W, l, 0)          # (in_l, rest...)
+            comb = A[(...,) + (None,) * (Wf.ndim - 1)] + Wf[None]
+            W = jnp.moveaxis(logsumexp(comb, axis=1), 0, l)
+        return W.reshape(-1)
+
+    def apply_lse(self, z: jax.Array, reg: float) -> jax.Array:
+        return self._apply_lse(z, float(reg), transpose=False)
+
+    def apply_lse_T(self, z: jax.Array, reg: float) -> jax.Array:
+        return self._apply_lse(z, float(reg), transpose=True)
+
+
+jax.tree_util.register_dataclass(GridGeometry, data_fields=["factors"],
+                                 meta_fields=[])

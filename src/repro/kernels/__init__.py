@@ -10,11 +10,21 @@
 - ``uot_resident``: lane-grid kernels that keep a problem's WHOLE tile in
   VMEM across a ``lax.while_loop`` of iterations (one-shot and
   LaneState-stepped) — per-solve instead of per-iteration HBM traffic,
-  with the tol convergence check folded into the on-chip loop.
+  with the tol convergence check folded into the on-chip loop. Includes
+  ``resident_solve_pc``, the implicit-geometry twin whose tile is
+  COMPUTED in VMEM from point-cloud coordinates (per-solve coupling
+  traffic: write MN, no read; coupling-only VMEM budget).
+- ``uot_geometry``: the streamed tiers' implicit-geometry twins — initial
+  colsum, materialize, and first-iteration kernels that evaluate
+  squared-Euclidean Gibbs tiles on-chip from O((M+N)*d) coordinates
+  (``repro.geometry.PointCloudGeometry``), so no M*N cost array ever
+  exists in HBM and couplings still match the dense-load path
+  bit-for-bit.
 - ``ops``: padding/block-size/interpret handling + assembled solvers
   (single, batched, shape-bucketed ragged, steppable) + the
   resident-vs-streamed auto-dispatch (``impl='auto'`` routed by
-  ``resident_fits``; see the dispatch table in ``ops``'s docstring).
+  ``resident_fits``, implicit-geometry-aware; see the dispatch table in
+  ``ops``'s docstring) + ``geometry=`` threading.
 - ``ref``: pure-jnp oracles.
 
 Two memory tiers, picked per problem shape:
@@ -34,8 +44,8 @@ be stored bf16 while reductions and factors stay fp32 (the resident tier
 upcasts once on load and downcasts once on store, so bf16 there rounds
 per solve, not per iteration).
 """
-from repro.kernels import (ops, ref, uot_batched, uot_fused, uot_halfpass,
-                           uot_resident, uot_uv_fused)
+from repro.kernels import (ops, ref, uot_batched, uot_fused, uot_geometry,
+                           uot_halfpass, uot_resident, uot_uv_fused)
 
-__all__ = ["ops", "ref", "uot_batched", "uot_fused", "uot_halfpass",
-           "uot_resident", "uot_uv_fused"]
+__all__ = ["ops", "ref", "uot_batched", "uot_fused", "uot_geometry",
+           "uot_halfpass", "uot_resident", "uot_uv_fused"]

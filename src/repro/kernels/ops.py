@@ -40,28 +40,54 @@ When a problem's whole padded tile fits the VMEM budget
 convergence in a ``lax.while_loop``, and stores once — per-solve instead of
 per-iteration traffic. ``impl='auto'`` on the solve entry points routes
 between the two tiers by that static budget test (decisions are observable
-via ``dispatch_stats``). Per-solve HBM traffic by (workload x tier), with
-``s`` = storage itemsize, ``T`` = iterations run, ``c`` = chunks
-(``ceil(T / chunk_iters)``):
+via ``dispatch_stats``).
+
+Cost geometries
+---------------
+``geometry=`` on the solve entry points names the cost *source* instead
+of a materialized ``A0`` (see ``repro.geometry``). Dense/grid geometries
+materialize their Gibbs mirror once and take the historical path. For
+implicit geometries (``PointCloudGeometry``) the kernel path computes
+Gibbs tiles on-chip from ``O((M + N) * d)`` coordinates — no M*N cost
+array ever exists in HBM — and ``resident_fits(implicit=True)`` budgets
+only the coupling (no input tile), so shapes the dense tier must stream
+run resident under a geometry. Couplings match the dense-load path
+bit-for-bit (both dtypes).
+
+Per-solve coupling HBM traffic by (workload x tier x cost source), with
+``s`` = storage itemsize, ``T`` = iterations run, ``G`` = the cost-source
+read: ``G = M*N*s`` for a dense ``A0`` (materialize/ship + first read)
+vs ``G = (M+N)*(d+1)*4`` coordinate bytes for an implicit geometry
+(and the solve's write-side first touch of the coupling drops from
+"write K then rewrite A1" to "write A1 only"):
 
 ====================  ==========================  =========================
-workload              resident (fits VMEM)        streamed (over budget)
+workload              resident (fits VMEM;        streamed (over budget)
+                      implicit budget is
+                      coupling-only)
 ====================  ==========================  =========================
-per-request           ``2*M*N*s`` per solve       ``2*M*N*s * T``
-``solve_fused``
-bucketed batch        ``2*B*M*N*s`` per chunk     ``2*B*M*N*s * T``
-``solve_fused_        solve (one lane-grid
-batched/bucketed``    launch, lanes early-exit
-                      independently)
+per-request           ``G + 2*M*N*s`` per solve   ``G + 2*M*N*s * T``
+``solve_fused``       (implicit: ``G + M*N*s``    (implicit: the colsum
+                      — no tile read, store       pass and iteration 1
+                      once)                       read coords, not K)
+bucketed batch        ``B*(G + 2*M*N*s)`` per     ``B*(G + 2*M*N*s * T)``
+``solve_fused_        chunk solve (one
+batched/bucketed``    lane-grid launch, lanes
+                      early-exit independently)
 scheduler chunk       ``2*L*M*N*s`` per CHUNK     ``2*L*M*N*s *
 ``solve_fused_        (fp32 pools; bf16 pools     chunk_iters`` per chunk
-stepped``             stay streamed to keep
-                      chunk-boundary invariance)
+stepped``             stay streamed to keep       (admission pays ``G``
+                      chunk-boundary              once per request either
+                      invariance)                 way — coordinates ship
+                                                  host->device, K is
+                                                  device-materialized)
 ====================  ==========================  =========================
 
 (+ O(M+N) factor/marginal traffic per launch in every cell. On non-TPU
 backends the resident tier is the jnp mirror — same iteration fusion in one
-XLA executable; the table's traffic formulas describe the TPU kernels.)
+XLA executable — and implicit geometries materialize their masked Gibbs
+mirror on-device (the host still never ships an M*N operand); the table's
+traffic formulas describe the TPU kernels.)
 
 bf16 storage on the resident tier upcasts once at load and downcasts once
 at store, so the per-iteration bf16 rounding of the streamed path
@@ -78,8 +104,9 @@ import numpy as np
 
 from repro.core.convergence import lane_factor_drift
 from repro.core.problem import UOTConfig, rescale_factors
-from repro.kernels import (uot_batched, uot_fused, uot_halfpass, uot_resident,
-                           uot_uv_fused)
+from repro.geometry import Geometry, PointCloudGeometry
+from repro.kernels import (uot_batched, uot_fused, uot_geometry,
+                           uot_halfpass, uot_resident, uot_uv_fused)
 
 # TPU v5e VMEM is 128 MiB; keep the working set (in + out + accumulators,
 # double-buffered) comfortably under half of it.
@@ -131,18 +158,32 @@ def pick_block_m(M: int, N: int, itemsize: int = 4,
 
 
 def resident_fits(M: int, N: int, cfg: UOTConfig, *, storage_dtype=None,
-                  budget_bytes: int | None = None) -> bool:
+                  budget_bytes: int | None = None,
+                  implicit: bool = False) -> bool:
     """Whether a (M, N) problem can run on the VMEM-resident solver tier.
 
-    The resident kernel (``uot_resident``) holds, per grid step (= per
-    lane): the in and out tiles in the storage dtype (double-buffered by
-    the pipeline), the fp32 working copy carried through the iteration
-    loop, one fp32 temporary for the rescale products, and the O(M+N)
-    factor/marginal vectors — ``Mp*Np*(2*s + 2*4)`` + vector bytes against
-    the same budget ``pick_block_m`` uses for the streamed tier. The test
-    is static (shapes, dtypes, budget), so ``impl='auto'`` dispatch is
-    decidable at trace time and batch size does not matter: the lane grid
-    is sequential, one tile resident at a time.
+    The dense resident kernel (``uot_resident.resident_solve``) holds, per
+    grid step (= per lane): the in and out tiles in the storage dtype
+    (double-buffered by the pipeline), the fp32 working copy carried
+    through the iteration loop, one fp32 temporary for the rescale
+    products, and the O(M+N) factor/marginal vectors —
+    ``Mp*Np*(2*s + 2*4)`` + vector bytes against the same budget
+    ``pick_block_m`` uses for the streamed tier.
+
+    ``implicit=True`` is the budget of the implicit-geometry kernel
+    (``resident_solve_pc``): the cost operand is O((M + N) * d)
+    coordinates computed into the working tile on-chip, so there is **no
+    input tile** — the M*N-sized VMEM residents shrink to the coupling
+    alone (out tile + fp32 working copy + rescale temporary:
+    ``Mp*Np*(s + 2*4)``). At fp32 that is 12 bytes/element against the
+    dense tier's 16, which is what lets ``impl='auto'`` route shapes to
+    the resident tier under an implicit geometry that the dense path must
+    stream (e.g. 1024x2048 fp32: 24 MiB implicit vs 32 MiB dense against
+    the 32 MiB budget).
+
+    The test is static (shapes, dtypes, budget), so ``impl='auto'``
+    dispatch is decidable at trace time and batch size does not matter:
+    the lane grid is sequential, one tile resident at a time.
     """
     sdt = _storage(cfg, storage_dtype)
     sub = _sublane(sdt.itemsize)
@@ -150,7 +191,11 @@ def resident_fits(M: int, N: int, cfg: UOTConfig, *, storage_dtype=None,
     Np = N + (-N) % _LANE
     budget = _VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
     acc = 4  # fp32 accumulator itemsize
-    tile_bytes = Mp * Np * (2 * sdt.itemsize + 2 * acc)
+    # dense: in + out storage tiles + fp32 working copy + rescale temp;
+    # implicit: the input tile is computed, not loaded — out tile only
+    per_elt = (sdt.itemsize + 2 * acc if implicit
+               else 2 * sdt.itemsize + 2 * acc)
+    tile_bytes = Mp * Np * per_elt
     vec_bytes = 4 * (Mp + Np) * acc  # a/frow/rowsum rows + b/colsum/fcol cols
     return tile_bytes + vec_bytes <= budget
 
@@ -192,7 +237,7 @@ def pad_vec(x: jax.Array, mult: int) -> jax.Array:
 
 def solve_fused(A0: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig,
                 *, block_m: int | None = None, interpret: bool | None = None,
-                storage_dtype=None, impl: str | None = None):
+                storage_dtype=None, impl: str | None = None, geometry=None):
     """MAP-UOT solve built entirely from the fused Pallas kernel.
 
     Matches core.sinkhorn_uot_fused iterates (asserted in tests). Inputs of
@@ -205,7 +250,24 @@ def solve_fused(A0: jax.Array, a: jax.Array, b: jax.Array, cfg: UOTConfig,
     'resident' runs the whole solve VMEM-resident (one HBM read + write of
     the coupling for the entire solve, and — unlike the streamed path here
     — honoring ``cfg.tol`` early exit); 'auto' picks by ``resident_fits``.
+
+    ``geometry=`` (exclusive with ``A0``) sources the initial coupling
+    from a ``repro.geometry.Geometry``: ``A0 = K = exp(-C / reg)``. The
+    solve is routed through the batched core at B=1, so — like 'auto' —
+    it has ``cfg.tol`` per-lane early-exit semantics, and every ``impl``
+    (including the default and 'jnp') is accepted. Implicit geometries
+    never materialize an M*N cost array in HBM on the kernel path.
     """
+    if geometry is not None:
+        if A0 is not None:
+            raise ValueError("pass either A0 or geometry=, not both")
+        g = (_pc_batched(geometry)
+             if isinstance(geometry, PointCloudGeometry) else geometry)
+        P, colsum = solve_fused_batched(
+            None, a[None], b[None], cfg, block_m=block_m,
+            interpret=interpret, storage_dtype=storage_dtype, impl=impl,
+            geometry=g)
+        return P[0], colsum[0]
     if impl not in (None, "kernel", "auto", "resident"):
         raise ValueError(
             f"solve_fused impl must be None, 'kernel', 'auto' or 'resident',"
@@ -278,7 +340,8 @@ def _impl_default(impl, interpret):
     return impl
 
 
-def _resolve_auto(impl, M, N, cfg, storage_dtype, *, stepped_sdt=None):
+def _resolve_auto(impl, M, N, cfg, storage_dtype, *, stepped_sdt=None,
+                  implicit=False):
     """Resolve 'auto'/'resident' to a tier for a (M, N) problem.
 
     Returns True to route resident. For the stepped path pass the pool's
@@ -287,8 +350,11 @@ def _resolve_auto(impl, M, N, cfg, storage_dtype, *, stepped_sdt=None):
     instead of once per iteration, which would make a bf16 lane's iterates
     depend on chunk boundaries (the streamed stepped path guarantees
     chunk-boundary invariance; see ``uot_resident.resident_stepped``).
+    ``implicit`` selects the implicit-geometry VMEM budget (no input tile
+    — see ``resident_fits``), widening the resident shape range.
     """
-    fits = resident_fits(M, N, cfg, storage_dtype=storage_dtype)
+    fits = resident_fits(M, N, cfg, storage_dtype=storage_dtype,
+                         implicit=implicit)
     if impl == "resident":
         if not fits:
             raise ValueError(
@@ -346,10 +412,168 @@ def _stepped_iter(A, colsum, upd, *, ap, bp, fi, sdt, impl, bm, interpret):
     return newA, colsum, frow
 
 
+# ---- implicit-geometry plumbing -------------------------------------------
+
+def _pc_batched(g: PointCloudGeometry) -> PointCloudGeometry:
+    """Lift a single-problem point-cloud geometry to a batch of one."""
+    if g.batch_shape:
+        return g
+    return dataclasses.replace(
+        g, x=g.x[None], y=g.y[None], xn=g.xn[None], yn=g.yn[None],
+        m_valid=None if g.m_valid is None else jnp.reshape(g.m_valid, (1,)),
+        n_valid=None if g.n_valid is None else jnp.reshape(g.n_valid, (1,)))
+
+
+def _pc_padded_operands(g: PointCloudGeometry, Mp: int, Np: int):
+    """Zero-pad the coordinate operands to kernel-aligned (Mp, Np); returns
+    (x, xn, y, yn, m_valid, n_valid) ready for the pc kernels.
+
+    Padded coordinate rows are zeros; it is the kernels' validity mask
+    (not the coordinate values) that makes the padded region of every
+    computed tile exactly 0.0, mirroring a zero-padded dense stack.
+    """
+    B, M, _ = g.x.shape
+    N = g.y.shape[1]
+    x = jnp.pad(g.x, ((0, 0), (0, Mp - M), (0, 0)))
+    xn = jnp.pad(g.xn, ((0, 0), (0, Mp - M)))
+    y = jnp.pad(g.y, ((0, 0), (0, Np - N), (0, 0)))
+    yn = jnp.pad(g.yn, ((0, 0), (0, Np - N)))
+    mv = (jnp.full((B,), M, jnp.int32) if g.m_valid is None
+          else g.m_valid.astype(jnp.int32))
+    nv = (jnp.full((B,), N, jnp.int32) if g.n_valid is None
+          else g.n_valid.astype(jnp.int32))
+    return x, xn, y, yn, mv, nv
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret",
+                                             "storage_dtype"))
+def _solve_fused_batched_geometry_streamed(geom: PointCloudGeometry,
+                                           a: jax.Array, b: jax.Array,
+                                           cfg: UOTConfig, *,
+                                           block_m: int | None = None,
+                                           interpret: bool | None = None,
+                                           storage_dtype=None):
+    """Streamed batched solve with the Gibbs kernel computed on-chip.
+
+    The implicit twin of ``_solve_fused_batched_streamed``'s 'kernel'
+    path: Algorithm 1's preprocessing colsum and first iteration evaluate
+    cost tiles in VMEM from the geometry's coordinates
+    (``uot_geometry.batched_pc_*``) — the initial coupling never exists in
+    HBM; the solve's first M*N write is the already-rescaled ``A1``. From
+    iteration 2 the coupling is ordinary solver state and the standard
+    streamed kernels take over, with identical blocking and identical
+    tol bookkeeping (first-iteration drift vs unit factors), so the
+    iterates match the dense-load path bit-for-bit.
+    """
+    interpret = _interpret_default(interpret)
+    M, N = geom.shape
+    sdt = _storage(cfg, storage_dtype)
+    bm = block_m or pick_block_m(M, N, sdt.itemsize)
+    Mp = M + (-M) % bm
+    Np = N + (-N) % _LANE
+    x, xn, y, yn, mv, nv = _pc_padded_operands(geom, Mp, Np)
+    ap = pad_vec(a, bm)
+    bp = pad_vec(b, _LANE)
+    fi = cfg.fi
+    reg, scale = float(cfg.reg), geom.scale
+
+    colsum0 = uot_geometry.batched_pc_colsum(
+        x, xn, y, yn, mv, nv, reg=reg, scale=scale, block_m=bm,
+        interpret=interpret, storage_dtype=sdt)
+    if cfg.num_iters == 0:
+        A = uot_geometry.batched_pc_materialize(
+            x, xn, y, yn, mv, nv, reg=reg, scale=scale, block_m=bm,
+            interpret=interpret, out_dtype=sdt)
+        return A[:, :M, :N], colsum0[:, :N]
+
+    fcol = rescale_factors(bp, colsum0, fi)
+    Ap, colsum, frow1 = uot_geometry.batched_pc_first_iteration(
+        fcol, ap, x, xn, y, yn, mv, nv, fi=fi, reg=reg, scale=scale,
+        block_m=bm, interpret=interpret, out_dtype=sdt)
+
+    it = functools.partial(_stepped_iter, ap=ap, bp=bp, fi=fi, sdt=sdt,
+                           impl="kernel", bm=bm, interpret=interpret)
+    if cfg.tol is None:
+        def body(_, carry):
+            A, colsum = carry
+            A, colsum, _ = it(A, colsum, None)
+            return A, colsum
+        Ap, colsum = jax.lax.fori_loop(1, cfg.num_iters, body, (Ap, colsum))
+    else:
+        # same bookkeeping as the dense while_loop's first pass: drift of
+        # the first row factors against the all-ones prior
+        drift1 = lane_factor_drift(frow1, jnp.ones_like(ap))
+        conv1 = drift1 <= cfg.tol
+
+        def cond(carry):
+            _, _, _, conv, i = carry
+            return jnp.logical_and(i < cfg.num_iters, ~jnp.all(conv))
+
+        def wbody(carry):
+            A, colsum, prev_frow, conv, i = carry
+            upd = ~conv
+            A, colsum, frow = it(A, colsum, upd)
+            drift = lane_factor_drift(frow, prev_frow)
+            prev_frow = jnp.where(upd[:, None], frow, prev_frow)
+            return A, colsum, prev_frow, conv | (drift <= cfg.tol), i + 1
+
+        Ap, colsum, _, _, _ = jax.lax.while_loop(
+            cond, wbody, (Ap, colsum, frow1, conv1, jnp.int32(1)))
+    return Ap[:, :M, :N], colsum[:, :N]
+
+
+def _solve_fused_batched_geometry(geom, a, b, cfg, *, block_m=None,
+                                  interpret=None, storage_dtype=None,
+                                  impl=None):
+    """Dispatch a batched geometry solve to a tier + flavor.
+
+    Implicit point-cloud geometries route between the tile-compute
+    streamed kernels, the implicit resident kernel (with the widened
+    ``resident_fits(implicit=True)`` budget) and the jnp mirror (which
+    materializes the masked Gibbs stack on-device — the host still never
+    ships an M*N operand). Explicit/materializable geometries (dense,
+    grid) materialize their Gibbs mirror once and take the ordinary dense
+    path unchanged.
+    """
+    if not isinstance(geom, Geometry):
+        raise TypeError(f"geometry= expects a repro.geometry.Geometry, "
+                        f"got {type(geom).__name__}")
+    B = a.shape[0]
+    if not isinstance(geom, PointCloudGeometry):
+        A0 = geom.kernel(cfg.reg)
+        if A0.ndim == 2:
+            A0 = jnp.broadcast_to(A0, (B,) + A0.shape)
+        return solve_fused_batched(A0, a, b, cfg, block_m=block_m,
+                                   interpret=interpret,
+                                   storage_dtype=storage_dtype, impl=impl)
+    geom = _pc_batched(geom)
+    if geom.x.shape[0] != B:
+        raise ValueError(f"geometry batch {geom.x.shape[0]} != marginal "
+                         f"batch {B}")
+    interp = _interpret_default(interpret)
+    impl = _impl_default(impl, interp)
+    M, N = geom.shape
+    if impl in ("auto", "resident"):
+        if _resolve_auto(impl, M, N, cfg, storage_dtype, implicit=True):
+            P, colsum, _, _ = solve_fused_resident(
+                None, a, b, cfg, interpret=interpret,
+                storage_dtype=storage_dtype, geometry=geom)
+            return P, colsum
+        impl = _impl_default(None, interp)  # over budget: streamed default
+    if impl == "jnp":
+        A0 = geom.kernel(cfg.reg)
+        return _solve_fused_batched_streamed(
+            A0, a, b, cfg, block_m=block_m, interpret=interpret,
+            storage_dtype=storage_dtype, impl="jnp")
+    return _solve_fused_batched_geometry_streamed(
+        geom, a, b, cfg, block_m=block_m, interpret=interpret,
+        storage_dtype=storage_dtype)
+
+
 def solve_fused_batched(A0: jax.Array, a: jax.Array, b: jax.Array,
                         cfg: UOTConfig, *, block_m: int | None = None,
                         interpret: bool | None = None, storage_dtype=None,
-                        impl: str | None = None):
+                        impl: str | None = None, geometry=None):
     """MAP-UOT solve for a stack of same-shape problems in one launch.
 
     A0: (B, M, N); a: (B, M); b: (B, N). On TPU (``impl='kernel'``) one
@@ -371,7 +595,23 @@ def solve_fused_batched(A0: jax.Array, a: jax.Array, b: jax.Array,
     exactly that iterate, and the loop ends once every lane has converged
     or ``num_iters`` is hit — fixed-shape batches stop dragging
     already-converged problems to the iteration cap.
+
+    ``geometry=`` (exclusive with ``A0``) sources the initial coupling
+    from a ``repro.geometry.Geometry`` instead of a dense stack: the
+    Gibbs kernel ``K = exp(-C / reg)`` becomes ``A0``. For implicit
+    geometries (``PointCloudGeometry``, batched coordinates + optional
+    per-problem valid counts) the 'kernel' path computes cost tiles
+    on-chip and never materializes an M*N cost array in HBM, and
+    ``impl='auto'`` uses the widened implicit resident budget (see
+    ``resident_fits``); couplings match the dense-load path bit-for-bit
+    in fp32.
     """
+    if geometry is not None:
+        if A0 is not None:
+            raise ValueError("pass either A0 or geometry=, not both")
+        return _solve_fused_batched_geometry(
+            geometry, a, b, cfg, block_m=block_m, interpret=interpret,
+            storage_dtype=storage_dtype, impl=impl)
     impl = _impl_default(impl, _interpret_default(interpret))
     if impl in ("auto", "resident"):
         _, M, N = A0.shape
@@ -439,7 +679,8 @@ def _solve_fused_batched_streamed(A0: jax.Array, a: jax.Array, b: jax.Array,
 
 def solve_fused_resident(A0: jax.Array, a: jax.Array, b: jax.Array,
                          cfg: UOTConfig, *, interpret: bool | None = None,
-                         storage_dtype=None, impl: str | None = None):
+                         storage_dtype=None, impl: str | None = None,
+                         geometry=None):
     """Whole-solve VMEM-resident MAP-UOT: load once, iterate, store once.
 
     A0 may be (M, N) or (B, M, N) (a/b matching). ``impl`` selects the
@@ -450,16 +691,31 @@ def solve_fused_resident(A0: jax.Array, a: jax.Array, b: jax.Array,
     ``cfg.tol`` per lane with the streamed solvers' row-factor-stationarity
     criterion — same iterate, same iteration count.
 
-    Returns (P, colsum, iters, err); leading batch dims only if A0 had one.
-    The extra per-lane outputs (iteration counts, final drift) come for
-    free from the in-kernel convergence loop and are what the parity tests
-    pin against the streamed tier.
+    ``geometry=`` (exclusive with ``A0``) sources the tile from a
+    ``Geometry``. Implicit point-cloud geometries run
+    ``uot_resident.resident_solve_pc`` on the 'kernel' flavor — each
+    lane's tile is COMPUTED in VMEM from its coordinates (per-solve
+    coupling HBM traffic: write MN, no read) — and are budgeted with
+    ``resident_fits(implicit=True)``, which admits shapes the dense tier
+    must stream. The 'jnp' flavor materializes the Gibbs mirror on-device
+    first (the host still never ships an M*N operand).
+
+    Returns (P, colsum, iters, err); leading batch dims only if A0/the
+    marginals had one. The extra per-lane outputs (iteration counts, final
+    drift) come for free from the in-kernel convergence loop and are what
+    the parity tests pin against the streamed tier.
     """
     interpret = _interpret_default(interpret)
     if impl not in (None, "kernel", "jnp"):
         raise ValueError(f"resident flavor must be None, 'kernel' or 'jnp', "
                          f"got {impl!r}")
     flavor = _impl_default(impl, interpret)
+    if geometry is not None:
+        if A0 is not None:
+            raise ValueError("pass either A0 or geometry=, not both")
+        return _solve_fused_resident_geometry(
+            geometry, a, b, cfg, interpret=interpret,
+            storage_dtype=storage_dtype, flavor=flavor)
     single = A0.ndim == 2
     if single:
         A0, a, b = A0[None], a[None], b[None]
@@ -481,6 +737,56 @@ def solve_fused_resident(A0: jax.Array, a: jax.Array, b: jax.Array,
             Ap, ap, bp, fi=cfg.fi, num_iters=cfg.num_iters, tol=cfg.tol,
             interpret=interpret)
     else:
+        P, colsum, iters, err = uot_resident.resident_solve_jnp(
+            Ap, ap, bp, fi=cfg.fi, num_iters=cfg.num_iters, tol=cfg.tol,
+            out_dtype=sdt)
+    P, colsum = P[:, :M, :N], colsum[:, :N]
+    if single:
+        return P[0], colsum[0], iters[0], err[0]
+    return P, colsum, iters, err
+
+
+def _solve_fused_resident_geometry(geom, a, b, cfg, *, interpret, flavor,
+                                   storage_dtype=None):
+    """Resident-tier solve with the tile sourced from a ``Geometry``."""
+    if not isinstance(geom, Geometry):
+        raise TypeError(f"geometry= expects a repro.geometry.Geometry, "
+                        f"got {type(geom).__name__}")
+    if not isinstance(geom, PointCloudGeometry):
+        A0 = geom.kernel(cfg.reg)
+        if A0.ndim == 2 and a.ndim == 2:
+            A0 = jnp.broadcast_to(A0, (a.shape[0],) + A0.shape)
+        return solve_fused_resident(A0, a, b, cfg, interpret=interpret,
+                                    storage_dtype=storage_dtype,
+                                    impl=flavor)
+    single = a.ndim == 1
+    if single:
+        a, b = a[None], b[None]
+    geom = _pc_batched(geom)
+    B = a.shape[0]
+    if geom.x.shape[0] != B:
+        raise ValueError(f"geometry batch {geom.x.shape[0]} != marginal "
+                         f"batch {B}")
+    M, N = geom.shape
+    if not resident_fits(M, N, cfg, storage_dtype=storage_dtype,
+                         implicit=True):
+        raise ValueError(
+            f"({M}, {N}) exceeds the implicit resident VMEM budget; use "
+            f"impl='auto' to fall back to the streamed tier")
+    sdt = _storage(cfg, storage_dtype)
+    sub = _sublane(sdt.itemsize)
+    Mp = M + (-M) % sub
+    Np = N + (-N) % _LANE
+    ap = pad_vec(a.astype(jnp.float32), sub)
+    bp = pad_vec(b.astype(jnp.float32), _LANE)
+    if flavor == "kernel":
+        x, xn, y, yn, mv, nv = _pc_padded_operands(geom, Mp, Np)
+        P, colsum, iters, err = uot_resident.resident_solve_pc(
+            x, xn, y, yn, ap, bp, mv, nv, fi=cfg.fi, reg=float(cfg.reg),
+            scale=geom.scale, num_iters=cfg.num_iters, tol=cfg.tol,
+            interpret=interpret, out_dtype=sdt)
+    else:
+        Ap = pad_to(geom.kernel(cfg.reg).astype(sdt), sub, _LANE)
         P, colsum, iters, err = uot_resident.resident_solve_jnp(
             Ap, ap, bp, fi=cfg.fi, num_iters=cfg.num_iters, tol=cfg.tol,
             out_dtype=sdt)

@@ -18,6 +18,13 @@ bytes + O(M + N), i.e. 2 MB/iter for a 512x512 fp32 problem and 1 MB bf16.
 Shapes are pre-padded by ``ops.solve_fused_batched`` (zero rows/cols are
 no-ops for the rescaling math, proven for the single-problem path and
 re-asserted for this one in tests/test_batched.py).
+
+Cost source: these kernels *load* their tiles. The implicit-geometry
+solve (``ops.solve_fused_batched(geometry=...)``) replaces the initial
+colsum and iteration-1 launches with the tile-compute twins in
+``uot_geometry`` (Gibbs tiles evaluated in VMEM from coordinates, masked
+per-problem valid counts standing in for zero padding), then continues
+with these kernels from iteration 2 — bit-identical iterates either way.
 """
 from __future__ import annotations
 

@@ -27,6 +27,13 @@ Mixed precision: ``A`` may be stored bf16 (the tile is upcast to
 downcast once on store), halving the bytes moved by this bandwidth-bound
 kernel. bf16 tiles want block_m a multiple of 16 (see ops.sublane_for);
 ``ops.pick_block_m`` budgets VMEM with the two itemsizes separately.
+
+Cost source: this kernel *loads* its tile — the initial coupling must
+exist in HBM. For implicit geometries (point clouds), the solve's colsum
+and first-iteration passes have tile-COMPUTE twins in ``uot_geometry``
+that evaluate the Gibbs tile in VMEM from coordinates, after which the
+coupling is ordinary solver state and these kernels take over (the
+``geometry=`` path of ``ops.solve_fused``).
 """
 from __future__ import annotations
 

@@ -29,10 +29,15 @@ are sequential on the TensorCore, so per-lane while_loops of different trip
 counts simply take different time; no cross-lane synchronization exists to
 drag a fast lane to the slowest one's iteration count.
 
-Three entry points (wrapped with padding/dispatch by ``ops``):
+Four entry points (wrapped with padding/dispatch by ``ops``):
 
 - ``resident_solve``: one-shot batched solve returning per-lane iteration
   counts and final drift alongside (P, colsum).
+- ``resident_solve_pc``: the implicit-geometry twin — each lane's tile is
+  COMPUTED in VMEM from point-cloud coordinates (``repro.geometry``
+  tile arithmetic, bit-identical to the dense mirror) instead of DMA'd,
+  so per-solve coupling traffic is ``write MN`` only and the VMEM budget
+  shrinks to the coupling (``ops.resident_fits(implicit=True)``).
 - ``resident_solve_jnp``: the pure-XLA mirror of the same iteration fusion
   (single jit, fp32 throughout, one downcast) so non-TPU backends get the
   fused-iteration win without interpret-mode overhead and CPU CI can
@@ -54,6 +59,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.geometry.pointcloud import gibbs_tile
 from repro.kernels.uot_fused import _safe_pow
 
 
@@ -72,10 +78,16 @@ def _one_iteration(A, colsum, a, b, fi):
     return A, colsum, frow
 
 
-def _resident_solve_kernel(a_ref, b_ref, A_ref, out_ref, colsum_ref,
-                           iters_ref, err_ref, *, fi: float, num_iters: int,
-                           tol, acc_dtype):
-    A = A_ref[...].astype(acc_dtype)              # upcast ONCE
+def _solve_to_convergence(A, a_ref, b_ref, *, fi: float, num_iters: int,
+                          tol, acc_dtype):
+    """The shared in-VMEM solve loop: Algorithm-1 iterations on an already
+    loaded (or computed) ``acc_dtype`` tile, with the row-factor
+    stationarity check folded into the loop condition.
+
+    Returns (A, colsum, it, err). Both the dense-load kernel and the
+    implicit-geometry kernel (``_resident_pc_kernel``) run exactly this
+    loop — the tile source is the only difference between the tiers.
+    """
     a = a_ref[...].astype(acc_dtype)              # (1, Mp, 1)
     b = b_ref[...].astype(acc_dtype)              # (1, 1, Np)
     colsum = jnp.sum(A, axis=1, keepdims=True)    # Algorithm-1 preprocessing
@@ -101,11 +113,26 @@ def _resident_solve_kernel(a_ref, b_ref, A_ref, out_ref, colsum_ref,
             return A, colsum, frow, it + 1, jnp.max(jnp.abs(frow - prev))
         A, colsum, prev, it, err = jax.lax.while_loop(
             cond, body, (A, colsum, prev, jnp.int32(0), err0))
+    return A, colsum, it, err
 
+
+def _store_solution(A, colsum, it, err, out_ref, colsum_ref, iters_ref,
+                    err_ref):
     out_ref[...] = A.astype(out_ref.dtype)        # downcast ONCE
     colsum_ref[...] = colsum.astype(colsum_ref.dtype)
     iters_ref[...] = jnp.full(iters_ref.shape, it, iters_ref.dtype)
     err_ref[...] = jnp.full(err_ref.shape, err, err_ref.dtype)
+
+
+def _resident_solve_kernel(a_ref, b_ref, A_ref, out_ref, colsum_ref,
+                           iters_ref, err_ref, *, fi: float, num_iters: int,
+                           tol, acc_dtype):
+    A = A_ref[...].astype(acc_dtype)              # upcast ONCE
+    A, colsum, it, err = _solve_to_convergence(
+        A, a_ref, b_ref, fi=fi, num_iters=num_iters, tol=tol,
+        acc_dtype=acc_dtype)
+    _store_solution(A, colsum, it, err, out_ref, colsum_ref, iters_ref,
+                    err_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("fi", "num_iters", "tol",
@@ -152,6 +179,89 @@ def resident_solve(A: jax.Array, a: jax.Array, b: jax.Array, *, fi: float,
         ],
         interpret=interpret,
     )(a.reshape(B, M, 1), b.reshape(B, 1, N), A)
+    return out, colsum.reshape(B, N), iters.reshape(B), err.reshape(B)
+
+
+def _resident_pc_kernel(a_ref, b_ref, x_ref, xn_ref, y_ref, yn_ref,
+                        mv_ref, nv_ref, out_ref, colsum_ref, iters_ref,
+                        err_ref, *, fi: float, reg: float, scale: float,
+                        num_iters: int, tol, acc_dtype):
+    # the Gibbs tile never exists in HBM: computed here, in VMEM, from the
+    # O((M + N) * d) coordinate operands, then iterated on like the loaded
+    # tile of _resident_solve_kernel (same loop, bit-for-bit)
+    A = gibbs_tile(x_ref[...], xn_ref[...], y_ref[...], yn_ref[...],
+                   reg=reg, scale=scale)
+    rows = jax.lax.broadcasted_iota(jnp.int32, A.shape, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, A.shape, 2)
+    A = jnp.where((rows < mv_ref[0, 0]) & (cols < nv_ref[0, 0]), A, 0.0)
+    if jnp.dtype(out_ref.dtype) != jnp.dtype(acc_dtype):
+        # round through the storage dtype so the iterate matches what the
+        # dense path reads back from an HBM tile stored in that dtype
+        A = A.astype(out_ref.dtype)
+    A = A.astype(acc_dtype)
+    A, colsum, it, err = _solve_to_convergence(
+        A, a_ref, b_ref, fi=fi, num_iters=num_iters, tol=tol,
+        acc_dtype=acc_dtype)
+    _store_solution(A, colsum, it, err, out_ref, colsum_ref, iters_ref,
+                    err_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("fi", "reg", "scale",
+                                             "num_iters", "tol", "interpret",
+                                             "acc_dtype", "out_dtype"))
+def resident_solve_pc(x, xn, y, yn, a, b, m_valid, n_valid, *, fi: float,
+                      reg: float, scale: float = 1.0, num_iters: int,
+                      tol: float | None = None, interpret: bool = False,
+                      acc_dtype=jnp.float32, out_dtype=jnp.float32):
+    """Whole-solve resident kernel for an implicit point-cloud geometry.
+
+    Like ``resident_solve``, but each lane's tile is COMPUTED in VMEM from
+    its coordinates (x: (B, Mp, d), xn: (B, Mp), y/yn likewise; m_valid /
+    n_valid: (B,) valid counts masking the zero-padded region to exact
+    zeros) instead of DMA'd from HBM. Per-solve coupling HBM traffic is
+    therefore ``write MN`` — the dense resident tier's ``read MN`` input
+    leg becomes an O((M + N) * d) coordinate read — and, because the input
+    tile no longer occupies a VMEM slot, the budget test that gates this
+    tier shrinks to the coupling alone (``ops.resident_fits`` with
+    ``implicit=True``), admitting shapes the dense tier must stream.
+
+    Returns (P, colsum, iters, err) exactly like ``resident_solve`` — same
+    in-VMEM loop, same convergence criterion, same per-lane counts.
+    """
+    B, M, d = x.shape
+    N = y.shape[1]
+    kernel = functools.partial(_resident_pc_kernel, fi=fi, reg=reg,
+                               scale=scale, num_iters=num_iters, tol=tol,
+                               acc_dtype=acc_dtype)
+    out, colsum, iters, err = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, M, 1), lambda i: (i, 0, 0)),   # a (RPD)
+            pl.BlockSpec((1, 1, N), lambda i: (i, 0, 0)),   # b (CPD)
+            pl.BlockSpec((1, M, d), lambda i: (i, 0, 0)),   # x coords
+            pl.BlockSpec((1, M, 1), lambda i: (i, 0, 0)),   # x sq norms
+            pl.BlockSpec((1, N, d), lambda i: (i, 0, 0)),   # y coords
+            pl.BlockSpec((1, 1, N), lambda i: (i, 0, 0)),   # y sq norms
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),         # m_valid
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),         # n_valid
+        ],
+        out_specs=[
+            pl.BlockSpec((1, M, N), lambda i: (i, 0, 0)),   # converged tile
+            pl.BlockSpec((1, 1, N), lambda i: (i, 0, 0)),   # colsum
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),         # iters
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),         # err
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, M, N), out_dtype),
+            jax.ShapeDtypeStruct((B, 1, N), acc_dtype),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), acc_dtype),
+        ],
+        interpret=interpret,
+    )(a.reshape(B, M, 1), b.reshape(B, 1, N), x, xn.reshape(B, M, 1),
+      y, yn.reshape(B, 1, N), m_valid.astype(jnp.int32).reshape(B, 1),
+      n_valid.astype(jnp.int32).reshape(B, 1))
     return out, colsum.reshape(B, N), iters.reshape(B), err.reshape(B)
 
 

@@ -16,7 +16,16 @@ Tier 3 — continuous scheduler (``UOTScheduler``): fixed lane pools advance
   earliest-deadline-first, and ``submit`` applies backpressure. Use for
   online serving under live traffic — it trades a small per-chunk host
   round trip for tail latency and deadline awareness (deadline misses are
-  counted per request and aggregated in ``stats()``).
+  counted per request and aggregated in ``stats()``, and
+  ``shed_policy='drop'/'degrade'`` refuses or down-budgets requests whose
+  deadline already passed at admission).
+
+Both request tiers accept **coordinate payloads** (``submit_points``) for
+point-cloud costs: a request ships ``(M + N) * (d + 1)`` floats instead of
+the ``M * N`` kernel matrix, the Gibbs kernel is evaluated on-device
+(on-chip tiles on the TPU kernel path — see ``repro.geometry``), and
+results are bit-identical to dense submission of the same geometry's
+``kernel(cfg.reg)``.
 
 Every tier accepts ``impl='auto'``: problems whose padded tile fits the
 VMEM budget run on the resident kernel tier (whole solve — or whole

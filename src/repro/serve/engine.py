@@ -110,9 +110,22 @@ class ServeEngine:
 @dataclasses.dataclass
 class UOTRequest:
     rid: int
-    K: np.ndarray               # (M, N) initial coupling / Gibbs kernel
+    K: np.ndarray | None        # (M, N) initial coupling / Gibbs kernel
     a: np.ndarray               # (M,) row marginal
     b: np.ndarray               # (N,) column marginal
+    # coordinate payload (set iff K is None — see submit_points): the
+    # request ships (M + N) * (d + 1) floats instead of M * N
+    x: np.ndarray | None = None
+    y: np.ndarray | None = None
+    xn: np.ndarray | None = None
+    yn: np.ndarray | None = None
+    scale: float = 1.0
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        if self.K is not None:
+            return tuple(self.K.shape)
+        return (self.x.shape[0], self.y.shape[0])
 
 
 class UOTBatchEngine:
@@ -149,6 +162,28 @@ class UOTBatchEngine:
                                       np.asarray(b)))
         return rid
 
+    def submit_points(self, x, y, a, b, *, scale: float = 1.0) -> int:
+        """Enqueue a point-cloud problem (squared-Euclidean cost
+        ``C = ||x - y||^2 / scale`` of the (M, d) / (N, d) clouds).
+
+        The request payload — and the per-request host->device transfer at
+        flush — is ``(M + N) * (d + 1)`` floats (coordinates + squared
+        norms) instead of the ``M * N`` kernel matrix; the flush solves
+        these requests through ``ops.solve_fused_batched(geometry=...)``,
+        whose kernel path computes the Gibbs tiles on-chip (no M*N cost
+        array in HBM). Results are bit-identical to submitting
+        ``geometry.kernel(cfg.reg)`` densely.
+        """
+        from repro.geometry import PointCloudGeometry
+        g = PointCloudGeometry.from_points(x, y, scale=scale)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(UOTRequest(
+            rid, None, np.asarray(a), np.asarray(b),
+            x=np.asarray(g.x), y=np.asarray(g.y), xn=np.asarray(g.xn),
+            yn=np.asarray(g.yn), scale=float(scale)))
+        return rid
+
     @property
     def pending(self) -> int:
         return len(self._queue)
@@ -158,12 +193,76 @@ class UOTBatchEngine:
         reqs, self._queue = self._queue, []
         if not reqs:
             return {}
-        results = uot_ops.solve_fused_bucketed(
-            [(r.K, r.a, r.b) for r in reqs], self.cfg,
-            interpret=self.interpret, storage_dtype=self.storage_dtype,
-            impl=self.impl, max_batch=self.max_batch,
-            m_bucket=self.m_bucket, n_bucket=self.n_bucket)
-        return {r.rid: P for r, (P, _) in zip(reqs, results)}
+        dense = [r for r in reqs if r.K is not None]
+        points = [r for r in reqs if r.K is None]
+        out: dict[int, jax.Array] = {}
+        if dense:
+            results = uot_ops.solve_fused_bucketed(
+                [(r.K, r.a, r.b) for r in dense], self.cfg,
+                interpret=self.interpret, storage_dtype=self.storage_dtype,
+                impl=self.impl, max_batch=self.max_batch,
+                m_bucket=self.m_bucket, n_bucket=self.n_bucket)
+            out.update({r.rid: P for r, (P, _) in zip(dense, results)})
+        if points:
+            out.update(self._flush_points(points))
+        return out
+
+    def _flush_points(self, reqs) -> dict[int, np.ndarray]:
+        """Bucketed batched solving of coordinate-payload requests.
+
+        Mirrors ``ops.solve_fused_bucketed``'s chunking (padded-shape
+        buckets, ``canonical_batch`` pow2 batch canonicalization, numpy
+        host assembly) but the assembled stack is the ``O((M + N) * d)``
+        coordinate operands + per-problem valid counts, handed to
+        ``solve_fused_batched`` as a batched ``PointCloudGeometry``.
+        Zero-padding exactness comes from the kernels' validity masks
+        instead of zero matrix entries. Requests are additionally grouped
+        by (d, scale), which brand the geometry's jit signature.
+        """
+        from repro.geometry import PointCloudGeometry
+        results: dict[int, np.ndarray] = {}
+        groups: dict[tuple, list] = {}
+        for r in reqs:
+            M, N = r.shape
+            bucket = uot_ops.bucket_shape(M, N, self.m_bucket,
+                                          self.n_bucket)
+            groups.setdefault((bucket, r.x.shape[1], r.scale),
+                              []).append(r)
+        for (bucket, d, scale), members in groups.items():
+            Mb, Nb = bucket
+            for lo in range(0, len(members), self.max_batch):
+                chunk = members[lo:lo + self.max_batch]
+                Bpad = uot_ops.canonical_batch(len(chunk), self.max_batch)
+                xs = np.zeros((Bpad, Mb, d), np.float32)
+                xns = np.zeros((Bpad, Mb), np.float32)
+                ys = np.zeros((Bpad, Nb, d), np.float32)
+                yns = np.zeros((Bpad, Nb), np.float32)
+                mv = np.zeros(Bpad, np.int32)
+                nv = np.zeros(Bpad, np.int32)
+                a = np.zeros((Bpad, Mb), np.float32)
+                b = np.zeros((Bpad, Nb), np.float32)
+                for k, r in enumerate(chunk):
+                    M, N = r.shape
+                    xs[k, :M], xns[k, :M] = r.x, r.xn
+                    ys[k, :N], yns[k, :N] = r.y, r.yn
+                    mv[k], nv[k] = M, N
+                    a[k, :M] = r.a
+                    b[k, :N] = r.b
+                geom = PointCloudGeometry(
+                    x=jnp.asarray(xs), y=jnp.asarray(ys),
+                    xn=jnp.asarray(xns), yn=jnp.asarray(yns),
+                    m_valid=jnp.asarray(mv), n_valid=jnp.asarray(nv),
+                    scale=scale)
+                P, _ = uot_ops.solve_fused_batched(
+                    None, jnp.asarray(a), jnp.asarray(b), self.cfg,
+                    interpret=self.interpret,
+                    storage_dtype=self.storage_dtype, impl=self.impl,
+                    geometry=geom)
+                P = np.asarray(P)
+                for k, r in enumerate(chunk):
+                    M, N = r.shape
+                    results[r.rid] = P[k, :M, :N].copy()
+        return results
 
     @staticmethod
     def cache_stats() -> dict:

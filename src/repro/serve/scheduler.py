@@ -30,11 +30,25 @@ tests/test_scheduler.py asserts this property for both impls.
 
 Telemetry: every completed request carries a ``RequestTelemetry`` (wait
 time, solve iterations, lane, converged-vs-cap, deadline + whether it was
-missed), ``occupancy_log`` snapshots lane utilization and the running
-deadline-miss total per step, and ``stats()`` reports ``deadline_misses``
-/ ``miss_rate`` — the inputs for the latency/occupancy/miss numbers in
-``benchmarks/bench_serve.py`` and the accounting half of deadline-aware
-shedding (the drop/downgrade half is a ROADMAP follow-on).
+missed, shed disposition), ``occupancy_log`` snapshots lane utilization
+and the running deadline-miss total per step, and ``stats()`` reports
+``deadline_misses`` / ``miss_rate`` / ``shed_dropped`` / ``shed_degraded``
+— the inputs for the latency/occupancy/miss numbers in
+``benchmarks/bench_serve.py``.
+
+Deadline-aware shedding (``shed_policy``): a request whose deadline has
+already passed when it reaches admission cannot meet it no matter what —
+``'drop'`` refuses it a lane entirely (telemetry-only completion,
+``lane=-1``), ``'degrade'`` admits it with a reduced iteration budget
+(``degrade_iters``, default one chunk) so it returns a coarse answer
+after a single scheduling quantum. ``'none'`` (default) keeps the
+serve-everything behavior.
+
+Point-cloud requests (``submit_points``) carry coordinates + precomputed
+squared norms — ``(M + N) * (d + 1)`` floats instead of ``M * N`` — and
+materialize their Gibbs kernel on-device at admission via the geometry
+mirror, so a coordinate request's lane trajectory is bit-identical to
+dense submission of ``geometry.kernel(cfg.reg)`` (tests assert it).
 
 With ``impl='auto'`` each pool's chunk advance is routed per bucket shape
 by ``ops.resident_fits``: fp32 pools that fit the VMEM budget run their
@@ -52,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.problem import UOTConfig
+from repro.geometry import PointCloudGeometry
 from repro.kernels import ops
 
 
@@ -65,10 +80,13 @@ class ScheduledRequest:
 
     Payload stays host-side numpy while queued; the single host->device
     transfer happens at admission (already padded to the bucket shape).
+    Point-cloud requests (``submit_points``) carry coordinates + squared
+    norms instead of ``K`` — ``(M + N) * (d + 1)`` floats instead of
+    ``M * N`` — and materialize their Gibbs kernel on-device at admission.
     """
 
     rid: int
-    K: np.ndarray               # (M, N) initial coupling / Gibbs kernel
+    K: np.ndarray | None        # (M, N) initial coupling / Gibbs kernel
     a: np.ndarray               # (M,) row marginal
     b: np.ndarray               # (N,) column marginal
     shape: tuple[int, int]
@@ -76,6 +94,16 @@ class ScheduledRequest:
     arrival: float
     deadline: float | None = None   # absolute time; None = no deadline
     priority: int = 0               # higher = more urgent (EDF tie-break)
+    # coordinate payload (set iff K is None): the geometry-sourced request
+    x: np.ndarray | None = None     # (M, d)
+    y: np.ndarray | None = None     # (N, d)
+    xn: np.ndarray | None = None    # (M,) precomputed squared norms
+    yn: np.ndarray | None = None    # (N,)
+    scale: float = 1.0
+    # deadline-aware shedding state (set at admission time)
+    max_iters: int | None = None    # reduced budget for degraded requests
+    shed: str | None = None         # None | 'degraded' ('dropped' never
+    #                                 occupies a lane, only telemetry)
 
     def edf_key(self):
         """Earliest-deadline-first with priority then FIFO tie-breaks."""
@@ -89,13 +117,14 @@ class RequestTelemetry:
 
     rid: int
     bucket: tuple[int, int]
-    lane: int
+    lane: int                   # -1 for requests dropped at admission
     arrival: float
     admitted: float
     completed: float
     iters: int
     converged: bool             # False = hit the num_iters cap
     deadline: float | None = None   # the request's absolute deadline
+    shed: str | None = None     # 'dropped' / 'degraded' / None
 
     @property
     def wait(self) -> float:
@@ -169,11 +198,16 @@ class UOTScheduler:
                  storage_dtype=None, interpret: bool | None = None,
                  impl: str | None = None, max_log: int = 10_000,
                  max_results: int = 256, pool_idle_ttl: int | None = 100,
+                 shed_policy: str = "none",
+                 degrade_iters: int | None = None,
                  clock: Callable[[], float] = time.monotonic):
         if lanes_per_pool < 1:
             raise ValueError("lanes_per_pool must be >= 1")
         if chunk_iters < 1:
             raise ValueError("chunk_iters must be >= 1")
+        if shed_policy not in ("none", "drop", "degrade"):
+            raise ValueError(f"shed_policy must be 'none', 'drop' or "
+                             f"'degrade', got {shed_policy!r}")
         self.cfg = cfg
         self.lanes_per_pool = lanes_per_pool
         self.chunk_iters = chunk_iters
@@ -186,6 +220,18 @@ class UOTScheduler:
         self.max_log = max_log
         self.max_results = max_results
         self.pool_idle_ttl = pool_idle_ttl
+        # Deadline-aware shedding: a request whose deadline has ALREADY
+        # passed when it reaches the head of the admission queue cannot
+        # meet it no matter what — 'drop' refuses it the lane entirely
+        # (telemetry-only completion), 'degrade' admits it with a reduced
+        # iteration budget (``degrade_iters``, default one chunk) so it
+        # returns a coarse answer after a single scheduling quantum
+        # instead of occupying a lane for a full solve. 'none' keeps the
+        # historical serve-everything behavior. The budget is enforced at
+        # chunk granularity (lanes advance ``chunk_iters`` at a time).
+        self.shed_policy = shed_policy
+        self.degrade_iters = (chunk_iters if degrade_iters is None
+                              else degrade_iters)
         self.clock = clock
 
         self._queue: list[ScheduledRequest] = []
@@ -200,6 +246,8 @@ class UOTScheduler:
         # bench_serve report miss-rate alongside p99.
         self._deadline_misses = 0
         self._deadlined_completed = 0
+        self._shed_dropped = 0
+        self._shed_degraded = 0
 
     # ---- submission -------------------------------------------------------
 
@@ -222,6 +270,39 @@ class UOTScheduler:
             rid=rid, K=K, a=np.asarray(a), b=np.asarray(b), shape=(M, N),
             bucket=ops.bucket_shape(M, N, self.m_bucket, self.n_bucket),
             arrival=self.clock(), deadline=deadline, priority=priority))
+        return rid
+
+    def submit_points(self, x, y, a, b, *, scale: float = 1.0,
+                      deadline: float | None = None,
+                      priority: int = 0) -> int:
+        """Enqueue a point-cloud problem: squared-Euclidean cost of the
+        (M, d) / (N, d) coordinate clouds, ``C = ||x - y||^2 / scale``.
+
+        The request payload is ``(M + N) * (d + 1)`` floats (coordinates +
+        precomputed squared norms) instead of the dense ``M * N`` kernel —
+        the Gibbs kernel is materialized on-DEVICE at admission, straight
+        into the lane pool. A lane's trajectory is bit-identical to
+        ``submit(K=geometry.kernel(cfg.reg), ...)`` for the same
+        coordinates (asserted in tests): same mirror arithmetic, same
+        pool, same math.
+        """
+        if len(self._queue) >= self.max_queue:
+            raise QueueFullError(
+                f"queue at max_queue={self.max_queue}; retry later")
+        # from_points computes the squared norms ONCE with the shared
+        # jitted helper — reusing them at admission is what keeps the
+        # batched device materialization bit-identical to a per-request
+        # geometry's kernel() (see repro.geometry.pointcloud rule 1)
+        g = PointCloudGeometry.from_points(x, y, scale=scale)
+        M, N = g.shape
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(ScheduledRequest(
+            rid=rid, K=None, a=np.asarray(a), b=np.asarray(b), shape=(M, N),
+            bucket=ops.bucket_shape(M, N, self.m_bucket, self.n_bucket),
+            arrival=self.clock(), deadline=deadline, priority=priority,
+            x=np.asarray(g.x), y=np.asarray(g.y), xn=np.asarray(g.xn),
+            yn=np.asarray(g.yn), scale=float(scale)))
         return rid
 
     @property
@@ -292,12 +373,18 @@ class UOTScheduler:
         for pool in self._pools.values():
             if not pool.requests:
                 continue
-            done = np.asarray(ops.lane_done(pool.state, self.cfg.num_iters))
-            if not done.any():
-                continue
             iters = np.asarray(pool.state.iters)
             conv = np.asarray(pool.state.converged)
-            finished = [l for l in list(pool.requests) if done[l]]
+            # a degraded request finishes at its reduced budget, not the
+            # global cap (the budget is enforced at chunk granularity —
+            # the device gate still runs lanes toward cfg.num_iters)
+            finished = [
+                l for l, req in list(pool.requests.items())
+                if conv[l] or iters[l] >= (req.max_iters
+                                           if req.max_iters is not None
+                                           else self.cfg.num_iters)]
+            if not finished:
+                continue
             for lane in finished:
                 req = pool.requests.pop(lane)
                 M, N = req.shape
@@ -317,7 +404,8 @@ class UOTScheduler:
                     arrival=req.arrival,
                     admitted=pool.admitted_at.pop(lane),
                     completed=now, iters=int(iters[lane]),
-                    converged=bool(conv[lane]), deadline=req.deadline)
+                    converged=bool(conv[lane]), deadline=req.deadline,
+                    shed=req.shed)
                 if rec.deadline is not None:
                     self._deadlined_completed += 1
                     self._deadline_misses += rec.missed
@@ -332,6 +420,25 @@ class UOTScheduler:
                                         jnp.asarray(lanes, jnp.int32))
         return completed
 
+    def _shed_at_admission(self, req: ScheduledRequest, now: float) -> bool:
+        """Apply the shed policy to a request whose deadline already
+        passed; returns True when the request was dropped entirely."""
+        if (self.shed_policy == "none" or req.deadline is None
+                or now <= req.deadline):
+            return False
+        if self.shed_policy == "drop":
+            self._shed_dropped += 1
+            self.request_log.append(RequestTelemetry(
+                rid=req.rid, bucket=req.bucket, lane=-1,
+                arrival=req.arrival, admitted=now, completed=now,
+                iters=0, converged=False, deadline=req.deadline,
+                shed="dropped"))
+            return True
+        self._shed_degraded += 1          # 'degrade'
+        req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
+        req.shed = "degraded"
+        return False
+
     def _admit_queued(self) -> None:
         if not self._queue:
             return
@@ -340,6 +447,8 @@ class UOTScheduler:
         placements: dict[tuple[int, int], list[tuple[int, ScheduledRequest]]]
         placements = {}
         for req in sorted(self._queue, key=ScheduledRequest.edf_key):
+            if req.shed is None and self._shed_at_admission(req, now):
+                continue                  # dropped: telemetry only, no lane
             pool = self._pools.get(req.bucket)
             if pool is None:
                 pool = self._pools[req.bucket] = _LanePool(
@@ -354,33 +463,83 @@ class UOTScheduler:
             pool.requests[lane] = req
             pool.admitted_at[lane] = now
         for bucket, placed in placements.items():
-            pool = self._pools[bucket]
             # Normalize to the bucket shape host-side (numpy) so lane_admit
-            # never traces per request shape, and land the whole round's
-            # admissions for this pool in ONE pool update. The batch is
+            # never traces per request shape, and land a round's admissions
+            # in as few pool updates as possible. Each group's batch is
             # padded to the pool size by repeating the last admission
             # (duplicate scatter indices with identical payloads are
-            # harmless), so each pool compiles exactly ONE admit signature
-            # — not one per admission count.
-            Mb, Nb = bucket
-            L = pool.num_lanes
-            Kp = np.zeros((L, Mb, Nb), np.float32)
-            ap = np.zeros((L, Mb), np.float32)
-            bp = np.zeros((L, Nb), np.float32)
-            lanes = np.empty(L, np.int32)
-            for j in range(L):
-                lane, req = placed[min(j, len(placed) - 1)]
-                M, N = req.shape
-                Kp[j, :M, :N] = req.K
-                ap[j, :M] = req.a
-                bp[j, :N] = req.b
-                lanes[j] = lane
-            pool.state = ops.lane_admit(
-                pool.state, jnp.asarray(lanes), jnp.asarray(Kp),
-                jnp.asarray(ap), jnp.asarray(bp))
+            # harmless), so each pool compiles ONE admit signature per
+            # payload kind — not one per admission count. Dense requests
+            # ship their K; point requests ship coordinates + norms
+            # ((M + N) * (d + 1) floats) and materialize K on-device,
+            # grouped by (d, scale) since those shape/brand the
+            # materializer.
+            dense = [(l, r) for l, r in placed if r.K is not None]
+            points: dict[tuple[int, float], list] = {}
+            for l, r in placed:
+                if r.K is None:
+                    points.setdefault((r.x.shape[1], r.scale),
+                                      []).append((l, r))
+            if dense:
+                self._admit_dense(bucket, dense)
+            for (d, scale), group in points.items():
+                self._admit_points(bucket, group, d, scale)
         # EDF order (which already ends in the rid FIFO tie-break) is
         # recomputed from scratch next round, so storage order is free.
         self._queue = remaining
+
+    def _admit_dense(self, bucket, placed) -> None:
+        pool = self._pools[bucket]
+        Mb, Nb = bucket
+        L = pool.num_lanes
+        Kp = np.zeros((L, Mb, Nb), np.float32)
+        ap = np.zeros((L, Mb), np.float32)
+        bp = np.zeros((L, Nb), np.float32)
+        lanes = np.empty(L, np.int32)
+        for j in range(L):
+            lane, req = placed[min(j, len(placed) - 1)]
+            M, N = req.shape
+            Kp[j, :M, :N] = req.K
+            ap[j, :M] = req.a
+            bp[j, :N] = req.b
+            lanes[j] = lane
+        pool.state = ops.lane_admit(
+            pool.state, jnp.asarray(lanes), jnp.asarray(Kp),
+            jnp.asarray(ap), jnp.asarray(bp))
+
+    def _admit_points(self, bucket, placed, d: int, scale: float) -> None:
+        """Admit a round's point-cloud requests: transfer coordinates,
+        materialize the masked Gibbs stack on-device (the geometry
+        mirror's arithmetic, so lanes are bit-identical to dense
+        submission of ``geometry.kernel(cfg.reg)``), one pool update."""
+        pool = self._pools[bucket]
+        Mb, Nb = bucket
+        L = pool.num_lanes
+        xs = np.zeros((L, Mb, d), np.float32)
+        xns = np.zeros((L, Mb), np.float32)
+        ys = np.zeros((L, Nb, d), np.float32)
+        yns = np.zeros((L, Nb), np.float32)
+        mv = np.zeros(L, np.int32)
+        nv = np.zeros(L, np.int32)
+        ap = np.zeros((L, Mb), np.float32)
+        bp = np.zeros((L, Nb), np.float32)
+        lanes = np.empty(L, np.int32)
+        for j in range(L):
+            lane, req = placed[min(j, len(placed) - 1)]
+            M, N = req.shape
+            xs[j, :M], xns[j, :M] = req.x, req.xn
+            ys[j, :N], yns[j, :N] = req.y, req.yn
+            mv[j], nv[j] = M, N
+            ap[j, :M] = req.a
+            bp[j, :N] = req.b
+            lanes[j] = lane
+        g = PointCloudGeometry(
+            x=jnp.asarray(xs), y=jnp.asarray(ys), xn=jnp.asarray(xns),
+            yn=jnp.asarray(yns), m_valid=jnp.asarray(mv),
+            n_valid=jnp.asarray(nv), scale=scale)
+        pool.state = ops.lane_admit(
+            pool.state, jnp.asarray(lanes), g.kernel(self.cfg.reg),
+            jnp.asarray(ap), jnp.asarray(bp))
 
     def _snapshot_occupancy(self) -> None:
         self.occupancy_log.append({
@@ -404,19 +563,27 @@ class UOTScheduler:
             "deadline_misses": self._deadline_misses,
             "miss_rate": (self._deadline_misses / self._deadlined_completed
                           if self._deadlined_completed else 0.0),
+            # running shed totals (drop: refused a lane at admission;
+            # degrade: admitted with the reduced iteration budget)
+            "shed_dropped": self._shed_dropped,
+            "shed_degraded": self._shed_degraded,
         }
-        if not self.request_log:
+        # dropped requests never solved anything: they appear in the log
+        # (shed='dropped', lane=-1) but are excluded from the latency /
+        # iteration aggregates, which describe served work
+        served = [t for t in self.request_log if t.shed != "dropped"]
+        if not served:
             return {"completed": 0, "steps": self._steps, "wait_mean": 0.0,
                     "wait_p99": 0.0, "latency_p50": 0.0, "latency_p99": 0.0,
                     "iters_mean": 0.0, "iters_max": 0,
                     "converged_frac": 0.0, "occupancy_mean": 0.0, **misses}
-        waits = np.array([t.wait for t in self.request_log])
-        lats = np.array([t.latency for t in self.request_log])
-        iters = np.array([t.iters for t in self.request_log])
+        waits = np.array([t.wait for t in served])
+        lats = np.array([t.latency for t in served])
+        iters = np.array([t.iters for t in served])
         occ = [o for snap in self.occupancy_log
                for o in snap["pools"].values()]
         return {
-            "completed": len(self.request_log),
+            "completed": len(served),
             "steps": self._steps,
             "wait_mean": float(waits.mean()),
             "wait_p99": float(np.percentile(waits, 99)),
@@ -424,8 +591,7 @@ class UOTScheduler:
             "latency_p99": float(np.percentile(lats, 99)),
             "iters_mean": float(iters.mean()),
             "iters_max": int(iters.max()),
-            "converged_frac": float(np.mean(
-                [t.converged for t in self.request_log])),
+            "converged_frac": float(np.mean([t.converged for t in served])),
             "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
             **misses,
         }

@@ -315,3 +315,78 @@ class TestScheduling:
         # running counters survive log trimming
         sched.request_log.clear()
         assert sched.stats()["deadline_misses"] == 1
+
+
+class TestDeadlineShedding:
+    """Deadline-aware shedding: requests whose deadline has already passed
+    at admission time stop wasting lanes — dropped outright
+    (shed_policy='drop') or solved on a reduced iteration budget
+    ('degrade'), with the shed accounting in stats() / RequestTelemetry."""
+
+    CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=24)
+
+    def _sched(self, t, **kw):
+        return UOTScheduler(self.CFG, lanes_per_pool=2, chunk_iters=4,
+                            m_bucket=32, impl="jnp",
+                            clock=lambda: t[0], **kw)
+
+    def test_invalid_policy_rejected(self):
+        with pytest.raises(ValueError, match="shed_policy"):
+            UOTScheduler(self.CFG, shed_policy="maybe")
+
+    def test_drop_policy_refuses_expired_requests_a_lane(self):
+        t = [10.0]
+        sched = self._sched(t, shed_policy="drop")
+        K, a, b = make_problem(16, 100, 5)
+        r_dead = sched.submit(K, a, b, deadline=9.0)    # already passed
+        r_live = sched.submit(K, a, b, deadline=1e9)
+        out = sched.run()
+        assert r_live in out and r_dead not in out
+        assert sched.poll(r_dead) is None
+        s = sched.stats()
+        assert s["shed_dropped"] == 1 and s["shed_degraded"] == 0
+        # served-work aggregates exclude the drop; the log records it
+        assert s["completed"] == 1
+        rec = {tt.rid: tt for tt in sched.request_log}[r_dead]
+        assert rec.shed == "dropped" and rec.lane == -1 and rec.iters == 0
+
+    def test_degrade_policy_caps_iterations_at_one_chunk(self):
+        t = [10.0]
+        sched = self._sched(t, shed_policy="degrade")
+        K, a, b = make_problem(16, 100, 6)
+        r_deg = sched.submit(K, a, b, deadline=9.0)
+        r_full = sched.submit(K, a, b, deadline=1e9)
+        out = sched.run()
+        assert r_deg in out and r_full in out       # degraded still answers
+        by_rid = {tt.rid: tt for tt in sched.request_log}
+        assert by_rid[r_deg].shed == "degraded"
+        assert by_rid[r_deg].iters == sched.degrade_iters == 4
+        assert by_rid[r_full].shed is None
+        assert by_rid[r_full].iters == self.CFG.num_iters
+        s = sched.stats()
+        assert s["shed_degraded"] == 1 and s["shed_dropped"] == 0
+        # the degraded answer is the genuine 4-iteration iterate
+        cfg4 = UOTConfig(reg=0.1, reg_m=1.0, num_iters=4)
+        P_ref, _ = sinkhorn_uot_fused(jnp.asarray(K), jnp.asarray(a),
+                                      jnp.asarray(b), cfg4)
+        np.testing.assert_allclose(out[r_deg], np.asarray(P_ref),
+                                   rtol=1e-5, atol=1e-9)
+
+    def test_default_policy_serves_expired_requests_in_full(self):
+        t = [10.0]
+        sched = self._sched(t)                      # shed_policy='none'
+        K, a, b = make_problem(16, 100, 7)
+        rid = sched.submit(K, a, b, deadline=9.0)
+        out = sched.run()
+        assert rid in out
+        s = sched.stats()
+        assert s["shed_dropped"] == s["shed_degraded"] == 0
+        assert s["deadline_misses"] == 1            # still counted missed
+
+    def test_future_deadlines_are_never_shed(self):
+        t = [0.0]
+        sched = self._sched(t, shed_policy="drop")
+        K, a, b = make_problem(16, 100, 8)
+        rid = sched.submit(K, a, b, deadline=1e9)
+        out = sched.run()
+        assert rid in out and sched.stats()["shed_dropped"] == 0
