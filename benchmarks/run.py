@@ -21,6 +21,10 @@ across PRs. Mapping to the paper:
                         payloads + on-chip cost tiles vs host-materialized
                         dense C; BENCH_GEOMETRY_SMOKE=1 for the CI smoke
                         run)
+  bench_cluster      -> beyond-paper (multi-device serving: 8 sharded lane
+                        pool devices vs the 1-device scheduler, measured
+                        -service DES; BENCH_CLUSTER_SMOKE=1 for the CI
+                        smoke run on 8 forced host devices)
 """
 import argparse
 import json
@@ -44,10 +48,12 @@ def main(argv=None) -> None:
     from benchmarks import (common, bench_uot, bench_traffic, bench_kernel,
                             bench_memory, bench_distributed,
                             bench_application, bench_moe_router, bench_batch,
-                            bench_serve, bench_resident, bench_geometry)
+                            bench_serve, bench_resident, bench_geometry,
+                            bench_cluster)
     mods = [bench_uot, bench_traffic, bench_kernel, bench_memory,
             bench_distributed, bench_application, bench_moe_router,
-            bench_batch, bench_serve, bench_resident, bench_geometry]
+            bench_batch, bench_serve, bench_resident, bench_geometry,
+            bench_cluster]
     if args.suite:
         known = {m.__name__.split(".")[-1] for m in mods}
         unknown = set(args.suite) - known

@@ -1,0 +1,35 @@
+"""Multi-device UOT serving runtime — the fourth serving tier.
+
+``repro.serve`` ends at one device's lane pool; ``repro.core.distributed``
+starts at one problem spanning the whole mesh. This package is the layer
+between them: live traffic served across EVERY device in a mesh, with the
+over-sized tail routed into the distributed gang solvers — one submit API
+over both regimes.
+
+* ``lanes`` — ``ClusterLaneState``: per-device ``ops.LaneState`` pools
+  stacked along a mesh axis, all advanced in ONE ``shard_map``-ped chunk
+  launch (``cluster_stepped``; collective-free — per-lane math never
+  crosses devices), with (device, lane)-addressed admit/evict and a
+  per-device-loop fallback for 1-chip hosts that doubles as the
+  bit-identity oracle.
+* ``scheduler`` — ``ClusterScheduler``: the request router. Least-loaded /
+  bucket-affinity placement onto device shards, cross-bucket lane sharing
+  into wider pools (``share_pools``), per-device backpressure + telemetry
+  rolled into cluster-wide ``stats()``, an async double-buffered step loop
+  (host admission prep for chunk t+1 overlaps device chunk t), and the
+  large-problem escape hatch into ``core.distributed.gang_solve``.
+
+Serving results are placement-, order-, and step-mode-invariant and
+bit-identical to the single-device ``UOTScheduler`` (tested on 8 forced
+host devices; ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+reproduces the CI mesh on any machine).
+"""
+from repro.cluster.lanes import (ClusterLaneState, cluster_admit,
+                                 cluster_done, cluster_evict, cluster_mesh,
+                                 cluster_stepped, make_cluster_lane_state)
+from repro.cluster.scheduler import ClusterRequestTelemetry, ClusterScheduler
+
+__all__ = ["ClusterLaneState", "ClusterScheduler",
+           "ClusterRequestTelemetry", "cluster_admit", "cluster_done",
+           "cluster_evict", "cluster_mesh", "cluster_stepped",
+           "make_cluster_lane_state"]

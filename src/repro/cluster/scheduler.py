@@ -1,0 +1,754 @@
+"""Multi-device UOT serving: a request router over sharded lane pools.
+
+``ClusterScheduler`` is the fourth serving tier (see ``repro.serve``'s
+ladder): ``UOTScheduler``'s continuous batching, scaled from one device's
+lane pool to every device in a mesh, plus an escape hatch into the
+row-sharded gang solvers for problems no lane pool can hold. One submit
+API covers the whole range — a request is never rejected for its shape.
+
+Architecture, in the order a request experiences it:
+
+* **routing** — ``submit`` classifies by padded bucket shape: problems
+  within the lane-pool budget join the (global, EDF-ordered) lane queue;
+  over-budget problems join the gang queue and run on
+  ``core.distributed.gang_solve`` (the paper's Tianhe-1 row-sharded
+  design) instead of being refused. ``submit_points`` ships coordinate
+  payloads — O((M+N)*(d+1)) floats, so routing them to ANY device shard
+  costs the same handful of bytes; the Gibbs kernel materializes on-device
+  at admission exactly as in the single-device scheduler.
+* **placement** — at admission the router picks a device shard for each
+  request: ``placement='least_loaded'`` balances active lanes across the
+  mesh; ``'bucket_affinity'`` packs a bucket's traffic onto the devices
+  already serving it (fewer pools per device, warmer reuse), spilling
+  least-loaded when the affinity set is full. With ``share_pools=True``
+  the affinity path may drop a request into a *wider* existing pool using
+  per-lane ``m_valid``/``n_valid`` masking (cross-bucket lane sharing) —
+  zero-padding is exact, so the answer is bit-identical either way.
+  Placement cannot change results — per-lane math is placement-invariant
+  (property-tested) — only latency and memory layout.
+* **advance** — each bucket's ``ClusterLaneState`` pool stack advances ALL
+  devices' lanes in one ``shard_map``-ped chunk launch
+  (``cluster_stepped``); between chunks finished lanes are evicted
+  (results returned immediately) and freed slots refilled EDF, exactly the
+  single-device loop but with (device, lane) slots.
+* **backpressure** — cluster-wide: ``max_queue`` waiting requests raise
+  ``QueueFullError``. Per-device: a device at ``device_active_cap`` (or
+  with no free lane) refuses placements and the router spills or leaves
+  the request queued (``router['placement_stalls']``), so one hot device
+  sheds load to the rest of the mesh instead of queueing it privately.
+* **telemetry** — per-request ``ClusterRequestTelemetry`` (device + route
+  on top of the single-device record), per-device placement/completion
+  counters and occupancy, router decision counts, and the scheduler's own
+  ``impl='auto'`` dispatch decisions (via ``ops.dispatch_counters`` — the
+  per-context counters, so concurrent schedulers don't clobber each
+  other) — all rolled up in ``stats()``.
+
+The async double-buffered step loop (``step_mode='async'``): a scheduling
+round's *decision-free* host work — EDF presort and payload padding for the
+next admissions — runs while the previous chunk is still executing on the
+devices, and the ``jax.block_until_ready`` barrier of the sync loop is
+deferred to the moment eviction actually reads the chunk's lifecycle flags.
+Decisions consume exactly the values the sync loop consumes, so results
+and iteration counts are bit-identical between the modes (tested); only
+wall-clock overlap differs. ``step_mode='sync'`` is the fallback that
+blocks right after each dispatch.
+
+Bit-identity contract (the acceptance property): for any trace, every
+request's coupling equals — bit for bit — what a single-device
+``UOTScheduler`` returns for the same problem, whatever the placement,
+arrival order, chunk interleaving, device count, or step mode
+(tests/test_cluster.py in-process, tests/_cluster_check.py on 8 forced
+host devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import UOTConfig
+from repro.core import distributed
+from repro.geometry import PointCloudGeometry
+from repro.kernels import ops
+from repro.serve.scheduler import (QueueFullError, RequestTelemetry,
+                                   ScheduledRequest)
+from repro.cluster.lanes import (ClusterLaneState, cluster_admit,
+                                 cluster_done, cluster_evict,
+                                 cluster_stepped, make_cluster_lane_state)
+
+
+@dataclasses.dataclass
+class ClusterRequestTelemetry(RequestTelemetry):
+    """Per-request record with the cluster placement on top: which device
+    shard served the lanes (-1 for gang/dropped requests) and which route
+    the request took ('lane', 'gang', or 'dropped')."""
+
+    device: int = -1
+    route: str = "lane"
+
+
+class _ClusterPool:
+    """One bucket's device-stacked lane pools + host-side bookkeeping.
+
+    ``requests`` / ``admitted_at`` are keyed by (device, lane) slots. The
+    pool may be *wider* than a resident request's own bucket when the
+    router shares pools cross-bucket — per-slot valid extents live in the
+    device state (``m_valid``/``n_valid``) and in each request's shape.
+    """
+
+    def __init__(self, bucket: tuple[int, int], num_devices: int,
+                 lanes_per_device: int, cfg: UOTConfig, *, mesh, axis,
+                 storage_dtype=None):
+        self.bucket = bucket
+        self.cfg = cfg
+        self.state = make_cluster_lane_state(
+            num_devices, lanes_per_device, bucket[0], bucket[1], cfg,
+            mesh=mesh, axis=axis, storage_dtype=storage_dtype)
+        self.requests: dict[tuple[int, int], ScheduledRequest] = {}
+        self.admitted_at: dict[tuple[int, int], float] = {}
+        self.idle_steps = 0
+
+    @property
+    def num_devices(self) -> int:
+        return self.state.num_devices
+
+    @property
+    def lanes_per_device(self) -> int:
+        return self.state.lanes_per_device
+
+    def free_lanes(self, device: int) -> list[int]:
+        return [l for l in range(self.lanes_per_device)
+                if (device, l) not in self.requests]
+
+    def device_active(self, device: int) -> int:
+        return sum(1 for d, _ in self.requests if d == device)
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.requests) / (self.num_devices
+                                     * self.lanes_per_device)
+
+    def per_device_occupancy(self) -> list[float]:
+        return [self.device_active(d) / self.lanes_per_device
+                for d in range(self.num_devices)]
+
+
+class ClusterScheduler:
+    """Deadline-aware continuous batching across a device mesh.
+
+    Usage::
+
+        mesh = cluster_mesh()                      # all local devices
+        sched = ClusterScheduler(UOTConfig(num_iters=100, tol=1e-4),
+                                 mesh=mesh, lanes_per_device=8)
+        rid = sched.submit(K, a, b, deadline=now + 0.5)
+        big = sched.submit(K_huge, a2, b2)         # -> row-sharded gang
+        results = sched.run()                      # {rid: coupling}
+
+    Without a mesh (``num_devices=`` instead) the device axis is simulated
+    with per-device launches — same results, no shard_map — which is the
+    1-chip fallback and the oracle the mesh path is tested against.
+
+    Constructor knobs beyond ``UOTScheduler``'s: ``placement``
+    ('least_loaded' | 'bucket_affinity'), ``share_pools`` (cross-bucket
+    lane sharing on the affinity path), ``device_active_cap`` (per-device
+    admission ceiling), ``step_mode`` ('sync' | 'async' double-buffered
+    loop), and the gang escape hatch (``gang='auto'`` routes lane-budget
+    failures to ``core.distributed.gang_solve``; ``lane_budget`` overrides
+    the predicate, default ``ops.resident_fits`` on the bucket shape;
+    ``gang_per_step`` bounds how many gang solves one round runs).
+    """
+
+    def __init__(self, cfg: UOTConfig, *, mesh=None, axis: str = "devices",
+                 num_devices: int | None = None, lanes_per_device: int = 8,
+                 chunk_iters: int = 4, max_queue: int = 1024,
+                 m_bucket: int = 64, n_bucket: int = 128,
+                 storage_dtype=None, interpret: bool | None = None,
+                 impl: str | None = None, max_log: int = 10_000,
+                 max_results: int = 256, pool_idle_ttl: int | None = 100,
+                 shed_policy: str = "none", degrade_iters: int | None = None,
+                 placement: str = "least_loaded", share_pools: bool = False,
+                 device_active_cap: int | None = None,
+                 step_mode: str = "sync", gang: str = "auto",
+                 gang_per_step: int = 1, gang_overlapped: bool = False,
+                 lane_budget: Callable[[int, int], bool] | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if lanes_per_device < 1:
+            raise ValueError("lanes_per_device must be >= 1")
+        if chunk_iters < 1:
+            raise ValueError("chunk_iters must be >= 1")
+        if placement not in ("least_loaded", "bucket_affinity"):
+            raise ValueError(f"placement must be 'least_loaded' or "
+                             f"'bucket_affinity', got {placement!r}")
+        if step_mode not in ("sync", "async"):
+            raise ValueError(f"step_mode must be 'sync' or 'async', "
+                             f"got {step_mode!r}")
+        if shed_policy not in ("none", "drop", "degrade"):
+            raise ValueError(f"shed_policy must be 'none', 'drop' or "
+                             f"'degrade', got {shed_policy!r}")
+        if gang not in ("auto", "never"):
+            raise ValueError(f"gang must be 'auto' or 'never', got {gang!r}")
+        if share_pools and placement != "bucket_affinity":
+            # documented scope: cross-bucket sharing is an affinity-path
+            # feature (full generalization is a ROADMAP item) — refuse
+            # loudly rather than silently sharing under another policy
+            raise ValueError("share_pools requires "
+                             "placement='bucket_affinity'")
+        if mesh is not None:
+            if axis not in mesh.shape:
+                raise ValueError(f"mesh has no axis {axis!r}")
+            mesh_n = mesh.shape[axis]
+            if num_devices is not None and num_devices != mesh_n:
+                raise ValueError(f"num_devices={num_devices} != mesh axis "
+                                 f"size {mesh_n}")
+            num_devices = mesh_n
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        self.num_devices = num_devices or 1
+        self.lanes_per_device = lanes_per_device
+        self.chunk_iters = chunk_iters
+        self.max_queue = max_queue
+        self.m_bucket = m_bucket
+        self.n_bucket = n_bucket
+        self.storage_dtype = storage_dtype
+        self.interpret = interpret
+        self.impl = impl
+        self.max_log = max_log
+        self.max_results = max_results
+        self.pool_idle_ttl = pool_idle_ttl
+        self.shed_policy = shed_policy
+        self.degrade_iters = (chunk_iters if degrade_iters is None
+                              else degrade_iters)
+        self.placement = placement
+        self.share_pools = share_pools
+        self.device_active_cap = device_active_cap
+        self.step_mode = step_mode
+        self.gang = gang
+        self.gang_per_step = gang_per_step
+        self.gang_overlapped = gang_overlapped
+        # lane-pool budget: buckets failing it route to the gang. The
+        # default is the resident-tier VMEM predicate — a conservative
+        # proxy for "small enough to multiplex a lane pool with"; pass
+        # your own (Mb, Nb) -> bool to widen or tighten the boundary.
+        self._lane_budget = lane_budget or (
+            lambda Mb, Nb: ops.resident_fits(
+                Mb, Nb, cfg, storage_dtype=storage_dtype))
+        self.clock = clock
+
+        self._queue: list[ScheduledRequest] = []
+        self._gang_queue: list[ScheduledRequest] = []
+        self._pools: dict[tuple[int, int], _ClusterPool] = {}
+        self._prepped: dict[int, tuple] = {}   # rid -> bucket-padded payload
+        self._next_rid = 0
+        self._results: dict[int, np.ndarray] = {}
+        self._steps = 0
+        self.request_log: list[ClusterRequestTelemetry] = []
+        self.occupancy_log: list[dict] = []
+        self._deadline_misses = 0
+        self._deadlined_completed = 0
+        self._shed_dropped = 0
+        self._shed_degraded = 0
+        self._gang_completed = 0
+        self._device_placed = [0] * self.num_devices
+        self._device_completed = [0] * self.num_devices
+        self._router_stats = {"least_loaded": 0, "affinity_hits": 0,
+                              "affinity_spills": 0, "shared_pool": 0,
+                              "placement_stalls": 0, "gang_routed": 0}
+        self._dispatch = {"resident": 0, "streamed": 0}
+
+    # ---- submission -------------------------------------------------------
+
+    def _check_backpressure(self) -> None:
+        if len(self._queue) + len(self._gang_queue) >= self.max_queue:
+            raise QueueFullError(
+                f"queue at max_queue={self.max_queue}; retry later")
+
+    def _route(self, req: ScheduledRequest) -> None:
+        """Lane pool or gang, by the lane-pool budget of the bucket."""
+        if self.gang == "auto" and not self._lane_budget(*req.bucket):
+            self._router_stats["gang_routed"] += 1
+            self._gang_queue.append(req)
+        else:
+            self._queue.append(req)
+
+    def submit(self, K, a, b, *, deadline: float | None = None,
+               priority: int = 0) -> int:
+        """Enqueue a problem; returns its request id. Problems too large
+        for any lane pool are routed to the row-sharded gang solver
+        instead of being rejected (``gang='auto'``); ``QueueFullError``
+        applies cluster-wide across both queues."""
+        self._check_backpressure()
+        K = np.asarray(K)
+        M, N = K.shape
+        rid = self._next_rid
+        self._next_rid += 1
+        self._route(ScheduledRequest(
+            rid=rid, K=K, a=np.asarray(a), b=np.asarray(b), shape=(M, N),
+            bucket=ops.bucket_shape(M, N, self.m_bucket, self.n_bucket),
+            arrival=self.clock(), deadline=deadline, priority=priority))
+        return rid
+
+    def submit_points(self, x, y, a, b, *, scale: float = 1.0,
+                      deadline: float | None = None,
+                      priority: int = 0) -> int:
+        """Enqueue a point-cloud problem (squared-Euclidean cost of the
+        coordinate clouds). The payload is ``(M + N) * (d + 1)`` floats —
+        which is what makes coordinate requests cheap to route to ANY
+        device shard: the kernel matrix materializes on the owning device
+        at admission, bit-identical to dense submission of
+        ``geometry.kernel(cfg.reg)`` (single-device contract, inherited)."""
+        self._check_backpressure()
+        g = PointCloudGeometry.from_points(x, y, scale=scale)
+        M, N = g.shape
+        rid = self._next_rid
+        self._next_rid += 1
+        self._route(ScheduledRequest(
+            rid=rid, K=None, a=np.asarray(a), b=np.asarray(b), shape=(M, N),
+            bucket=ops.bucket_shape(M, N, self.m_bucket, self.n_bucket),
+            arrival=self.clock(), deadline=deadline, priority=priority,
+            x=np.asarray(g.x), y=np.asarray(g.y), xn=np.asarray(g.xn),
+            yn=np.asarray(g.yn), scale=float(scale)))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        """Requests waiting for a lane or a gang slot."""
+        return len(self._queue) + len(self._gang_queue)
+
+    @property
+    def in_flight(self) -> int:
+        """Requests currently occupying lanes."""
+        return sum(len(p.requests) for p in self._pools.values())
+
+    def poll(self, rid: int):
+        """The finished coupling for ``rid`` (take semantics), or None."""
+        return self._results.pop(rid, None)
+
+    # ---- the scheduling loop ---------------------------------------------
+
+    def step(self) -> dict[int, np.ndarray]:
+        """One scheduling round: prep -> evict -> admit -> gang -> advance.
+
+        Returns this round's completions ``{rid: P (M, N)}`` (host numpy,
+        also retained for ``poll``). In the async double-buffered mode the
+        previous round's chunk is typically still running on the devices
+        when this round's payload prep executes; the first device-blocking
+        read is eviction's lifecycle-flag fetch. The sync mode blocks at
+        the end of the round instead, right after dispatch.
+        """
+        self._prep_admissions()
+        completed = self._evict_finished()
+        self._admit_queued()
+        completed.update(self._solve_gang())
+        self._advance_pools()
+        if self.step_mode == "sync":
+            for pool in self._pools.values():
+                jax.block_until_ready(pool.state.lanes.P)
+        self._steps += 1
+        self._snapshot_occupancy()
+        return completed
+
+    def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
+        """Step until queues and lanes drain (or ``max_steps`` more steps
+        ran); returns all completions."""
+        start = self._steps
+        out: dict[int, np.ndarray] = {}
+        while self.pending or self.in_flight:
+            out.update(self.step())
+            if max_steps is not None and self._steps - start >= max_steps:
+                break
+        out.update(self._evict_finished())   # final chunk's completions
+        return out
+
+    # ---- internals --------------------------------------------------------
+
+    def _prep_admissions(self) -> None:
+        """Decision-free host work for the NEXT admissions: pad each queued
+        dense payload to its bucket shape once and cache it. In the async
+        loop this runs while the previous chunk is still executing on the
+        devices — the 'host admission for chunk t+1 overlaps device chunk
+        t' half of the double buffer. Cached payloads are consumed (and
+        the cache pruned) at admission; re-padding to a *wider* shared
+        pool, when the router goes that way, starts from the cached bucket
+        copy."""
+        for req in self._queue:
+            if req.K is not None and req.rid not in self._prepped:
+                Mb, Nb = req.bucket
+                M, N = req.shape
+                Kp = np.zeros((Mb, Nb), np.float32)
+                ap = np.zeros(Mb, np.float32)
+                bp = np.zeros(Nb, np.float32)
+                Kp[:M, :N] = req.K
+                ap[:M] = req.a
+                bp[:N] = req.b
+                self._prepped[req.rid] = (Kp, ap, bp)
+
+    def _evict_finished(self) -> dict[int, np.ndarray]:
+        completed: dict[int, np.ndarray] = {}
+        now = self.clock()
+        for pool in self._pools.values():
+            if not pool.requests:
+                continue
+            # the first (and in async mode, only) device-blocking read of
+            # the in-flight chunk: O(D*L) lifecycle flags
+            iters = np.asarray(pool.state.lanes.iters)
+            conv = np.asarray(pool.state.lanes.converged)
+            finished = [
+                slot for slot, req in list(pool.requests.items())
+                if conv[slot] or iters[slot] >= (
+                    req.max_iters if req.max_iters is not None
+                    else self.cfg.num_iters)]
+            if not finished:
+                continue
+            for slot in finished:
+                d, l = slot
+                req = pool.requests.pop(slot)
+                M, N = req.shape
+                P = np.asarray(pool.state.lanes.P[d, l])[:M, :N].copy()
+                completed[req.rid] = self._results[req.rid] = P
+                while len(self._results) > self.max_results:
+                    self._results.pop(next(iter(self._results)))
+                rec = ClusterRequestTelemetry(
+                    rid=req.rid, bucket=pool.bucket, lane=l,
+                    arrival=req.arrival,
+                    admitted=pool.admitted_at.pop(slot),
+                    completed=now, iters=int(iters[slot]),
+                    converged=bool(conv[slot]), deadline=req.deadline,
+                    shed=req.shed, device=d, route="lane")
+                self._record(rec)
+                self._device_completed[d] += 1
+            # one pool update for the round's evictions across all
+            # devices; indices padded with duplicates -> one jit signature
+            pad = (pool.num_devices * pool.lanes_per_device
+                   - len(finished))
+            slots = finished + [finished[-1]] * pad
+            devs = jnp.asarray([s[0] for s in slots], jnp.int32)
+            lns = jnp.asarray([s[1] for s in slots], jnp.int32)
+            pool.state = cluster_evict(pool.state, devs, lns)
+        return completed
+
+    def _record(self, rec: ClusterRequestTelemetry) -> None:
+        if rec.deadline is not None and rec.route != "dropped":
+            self._deadlined_completed += 1
+            self._deadline_misses += rec.missed
+        self.request_log.append(rec)
+
+    def _shed_at_admission(self, req: ScheduledRequest, now: float) -> bool:
+        """Same deadline shedding as the single-device scheduler; dropped
+        requests get a telemetry-only cluster record."""
+        if (self.shed_policy == "none" or req.deadline is None
+                or now <= req.deadline):
+            return False
+        if self.shed_policy == "drop":
+            self._shed_dropped += 1
+            self._prepped.pop(req.rid, None)
+            self.request_log.append(ClusterRequestTelemetry(
+                rid=req.rid, bucket=req.bucket, lane=-1,
+                arrival=req.arrival, admitted=now, completed=now,
+                iters=0, converged=False, deadline=req.deadline,
+                shed="dropped", device=-1, route="dropped"))
+            return True
+        self._shed_degraded += 1          # 'degrade'
+        req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
+        req.shed = "degraded"
+        return False
+
+    def _device_active(self, device: int) -> int:
+        return sum(p.device_active(device) for p in self._pools.values())
+
+    def _pool_for(self, req: ScheduledRequest) -> tuple[_ClusterPool, bool]:
+        """The pool this request solves in (created on demand); True when
+        an existing *wider* pool is shared cross-bucket instead."""
+        pool = self._pools.get(req.bucket)
+        if pool is not None:
+            return pool, False
+        if self.share_pools:
+            # bucket-affinity cross-bucket sharing: a wider existing pool
+            # with a free slot hosts the request via valid-extent masking
+            # (zero-padding is exact -> bit-identical results), instead of
+            # allocating a new D-device pool stack for a one-off shape
+            Mb, Nb = req.bucket
+            for bucket in sorted(self._pools):
+                cand = self._pools[bucket]
+                if (bucket[0] >= Mb and bucket[1] >= Nb
+                        and any(cand.free_lanes(d)
+                                for d in range(self.num_devices))):
+                    self._router_stats["shared_pool"] += 1
+                    return cand, True
+        pool = self._pools[req.bucket] = _ClusterPool(
+            req.bucket, self.num_devices, self.lanes_per_device, self.cfg,
+            mesh=self.mesh, axis=self.axis,
+            storage_dtype=self.storage_dtype)
+        return pool, False
+
+    def _pick_device(self, pool: _ClusterPool) -> int | None:
+        """Placement policy: the device shard that takes the next lane."""
+        cap = self.device_active_cap
+        candidates = [d for d in range(self.num_devices)
+                      if pool.free_lanes(d)
+                      and (cap is None or self._device_active(d) < cap)]
+        if not candidates:
+            return None
+        if self.placement == "bucket_affinity":
+            hot = [d for d in candidates if pool.device_active(d) > 0]
+            if hot:
+                self._router_stats["affinity_hits"] += 1
+                # pack: the busiest shard of THIS bucket that still has room
+                return max(hot, key=lambda d: (pool.device_active(d), -d))
+            self._router_stats["affinity_spills"] += 1
+        else:
+            self._router_stats["least_loaded"] += 1
+        return min(candidates, key=lambda d: (self._device_active(d), d))
+
+    def _admit_queued(self) -> None:
+        if not self._queue:
+            return
+        now = self.clock()
+        remaining: list[ScheduledRequest] = []
+        placements: dict[tuple[int, int], list] = {}   # pool bucket -> slots
+        stalled = False
+        for req in sorted(self._queue, key=ScheduledRequest.edf_key):
+            if req.shed is None and self._shed_at_admission(req, now):
+                continue
+            pool, _shared = self._pool_for(req)
+            device = self._pick_device(pool)
+            if device is None:
+                stalled = True
+                remaining.append(req)
+                continue
+            lane = pool.free_lanes(device)[0]
+            pool.requests[(device, lane)] = req
+            pool.admitted_at[(device, lane)] = now
+            self._device_placed[device] += 1
+            placements.setdefault(pool.bucket, []).append(
+                (device, lane, req))
+        if stalled:
+            self._router_stats["placement_stalls"] += 1
+        for bucket, placed in placements.items():
+            dense = [p for p in placed if p[2].K is not None]
+            points: dict[tuple[int, float], list] = {}
+            for d, l, r in placed:
+                if r.K is None:
+                    points.setdefault((r.x.shape[1], r.scale),
+                                      []).append((d, l, r))
+            if dense:
+                self._admit_dense(bucket, dense)
+            for (dim, scale), group in points.items():
+                self._admit_points(bucket, group, dim, scale)
+        self._queue = remaining
+
+    def _admit_dense(self, bucket, placed) -> None:
+        pool = self._pools[bucket]
+        Mb, Nb = bucket
+        # pow2-canonical batch (the bucketed-flush trick), NOT the full
+        # D*L capacity: one admission ships one bucket-sized payload, not
+        # 64, while jit signatures stay O(log capacity) per payload kind;
+        # the index tail is duplicate slots (idempotent scatter)
+        cap = ops.canonical_batch(
+            len(placed), pool.num_devices * pool.lanes_per_device)
+        Kp = np.zeros((cap, Mb, Nb), np.float32)
+        ap = np.zeros((cap, Mb), np.float32)
+        bp = np.zeros((cap, Nb), np.float32)
+        mv = np.zeros(cap, np.int32)
+        nv = np.zeros(cap, np.int32)
+        devs = np.empty(cap, np.int32)
+        lns = np.empty(cap, np.int32)
+        for j in range(cap):
+            d, l, req = placed[min(j, len(placed) - 1)]
+            M, N = req.shape
+            prep = self._prepped.pop(req.rid, None)
+            if prep is not None and prep[0].shape == (Mb, Nb):
+                Kp[j], ap[j], bp[j] = prep
+            else:
+                # shared wider pool (or unprepped request): pad from the
+                # bucket-padded cache if present, else from the raw payload
+                src = prep[0] if prep is not None else req.K
+                sm, sn = src.shape
+                Kp[j, :sm, :sn] = src
+                ap[j, :M] = req.a
+                bp[j, :N] = req.b
+            mv[j], nv[j] = M, N
+            devs[j], lns[j] = d, l
+        pool.state = cluster_admit(
+            pool.state, jnp.asarray(devs), jnp.asarray(lns),
+            jnp.asarray(Kp), jnp.asarray(ap), jnp.asarray(bp),
+            m_valid=jnp.asarray(mv), n_valid=jnp.asarray(nv))
+
+    def _admit_points(self, bucket, placed, dim: int, scale: float) -> None:
+        """Coordinate-payload admission: ship O((M+N)*(d+1)) floats per
+        request, materialize the masked Gibbs stack on-device through the
+        geometry mirror (bit-identical to dense submission), one pool
+        update per (d, scale) group."""
+        pool = self._pools[bucket]
+        Mb, Nb = bucket
+        cap = ops.canonical_batch(
+            len(placed), pool.num_devices * pool.lanes_per_device)
+        xs = np.zeros((cap, Mb, dim), np.float32)
+        xns = np.zeros((cap, Mb), np.float32)
+        ys = np.zeros((cap, Nb, dim), np.float32)
+        yns = np.zeros((cap, Nb), np.float32)
+        mv = np.zeros(cap, np.int32)
+        nv = np.zeros(cap, np.int32)
+        ap = np.zeros((cap, Mb), np.float32)
+        bp = np.zeros((cap, Nb), np.float32)
+        devs = np.empty(cap, np.int32)
+        lns = np.empty(cap, np.int32)
+        for j in range(cap):
+            d, l, req = placed[min(j, len(placed) - 1)]
+            M, N = req.shape
+            xs[j, :M], xns[j, :M] = req.x, req.xn
+            ys[j, :N], yns[j, :N] = req.y, req.yn
+            mv[j], nv[j] = M, N
+            ap[j, :M] = req.a
+            bp[j, :N] = req.b
+            devs[j], lns[j] = d, l
+        g = PointCloudGeometry(
+            x=jnp.asarray(xs), y=jnp.asarray(ys), xn=jnp.asarray(xns),
+            yn=jnp.asarray(yns), m_valid=jnp.asarray(mv),
+            n_valid=jnp.asarray(nv), scale=scale)
+        pool.state = cluster_admit(
+            pool.state, jnp.asarray(devs), jnp.asarray(lns),
+            g.kernel(self.cfg.reg), jnp.asarray(ap), jnp.asarray(bp),
+            m_valid=jnp.asarray(mv), n_valid=jnp.asarray(nv))
+
+    def _solve_gang(self) -> dict[int, np.ndarray]:
+        """Run up to ``gang_per_step`` over-budget requests on the
+        row-sharded gang (the whole mesh per solve). Without a mesh the
+        escape hatch degrades to the per-request tier-1 solve — still
+        served, still one submit API."""
+        if not self._gang_queue:
+            return {}
+        completed: dict[int, np.ndarray] = {}
+        self._gang_queue.sort(key=ScheduledRequest.edf_key)
+        budget = self.gang_per_step
+        while self._gang_queue and budget > 0:
+            req = self._gang_queue.pop(0)
+            now = self.clock()
+            if req.shed is None and self._shed_at_admission(req, now):
+                continue
+            budget -= 1
+            if req.K is None:
+                g = PointCloudGeometry(
+                    x=jnp.asarray(req.x), y=jnp.asarray(req.y),
+                    xn=jnp.asarray(req.xn), yn=jnp.asarray(req.yn),
+                    scale=req.scale)
+                K = g.kernel(self.cfg.reg)
+            else:
+                K = req.K
+            # a degraded gang request runs its reduced budget, like a lane
+            iters = (self.cfg.num_iters if req.max_iters is None
+                     else min(req.max_iters, self.cfg.num_iters))
+            cfg = (self.cfg if iters == self.cfg.num_iters
+                   else dataclasses.replace(self.cfg, num_iters=iters))
+            if self.mesh is not None:
+                P, _ = distributed.gang_solve(
+                    self.mesh, self.axis, K, req.a, req.b, cfg,
+                    storage_dtype=self.storage_dtype,
+                    overlapped=self.gang_overlapped)
+            else:
+                P, _ = ops.solve_fused(
+                    jnp.asarray(K), jnp.asarray(req.a), jnp.asarray(req.b),
+                    cfg, interpret=self.interpret,
+                    storage_dtype=self.storage_dtype)
+                P = np.asarray(P)
+            done = self.clock()
+            completed[req.rid] = self._results[req.rid] = P
+            while len(self._results) > self.max_results:
+                self._results.pop(next(iter(self._results)))
+            self._gang_completed += 1
+            self._record(ClusterRequestTelemetry(
+                rid=req.rid, bucket=req.bucket, lane=-1,
+                arrival=req.arrival, admitted=now, completed=done,
+                iters=iters, converged=False, deadline=req.deadline,
+                shed=req.shed, device=-1, route="gang"))
+        return completed
+
+    def _advance_pools(self) -> None:
+        for bucket, pool in list(self._pools.items()):
+            if pool.requests:
+                pool.idle_steps = 0
+                with ops.dispatch_counters() as counters:
+                    pool.state = cluster_stepped(
+                        pool.state, self.chunk_iters, self.cfg,
+                        mesh=self.mesh, axis=self.axis,
+                        interpret=self.interpret, impl=self.impl)
+                for k, v in counters.items():
+                    self._dispatch[k] += v
+            else:
+                pool.idle_steps += 1
+                if (self.pool_idle_ttl is not None
+                        and pool.idle_steps > self.pool_idle_ttl):
+                    del self._pools[bucket]
+
+    def _snapshot_occupancy(self) -> None:
+        self.occupancy_log.append({
+            "step": self._steps,
+            "queued": len(self._queue),
+            "gang_queued": len(self._gang_queue),
+            "deadline_misses": self._deadline_misses,
+            "pools": {str(b): p.occupancy for b, p in self._pools.items()},
+            "device_active": [self._device_active(d)
+                              for d in range(self.num_devices)],
+        })
+        del self.occupancy_log[:-self.max_log]
+        del self.request_log[:-self.max_log]
+
+    # ---- telemetry --------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Cluster-wide serving telemetry: the single-device aggregate keys
+        (over the retained window; running deadline/shed counters exact),
+        plus per-device placement/completion/occupancy rollups, router
+        decision counts, gang totals, and this scheduler's own
+        ``impl='auto'`` dispatch decisions."""
+        lanes_cap = self.lanes_per_device
+        device_occ = [[] for _ in range(self.num_devices)]
+        for snap in self.occupancy_log:
+            for d, active in enumerate(snap["device_active"]):
+                device_occ[d].append(active / max(1, lanes_cap))
+        cluster = {
+            "deadline_misses": self._deadline_misses,
+            "miss_rate": (self._deadline_misses / self._deadlined_completed
+                          if self._deadlined_completed else 0.0),
+            "shed_dropped": self._shed_dropped,
+            "shed_degraded": self._shed_degraded,
+            "gang_completed": self._gang_completed,
+            "router": dict(self._router_stats),
+            "dispatch": dict(self._dispatch),
+            "devices": {
+                d: {"placed": self._device_placed[d],
+                    "completed": self._device_completed[d],
+                    "active": self._device_active(d),
+                    "occupancy_mean": (float(np.mean(device_occ[d]))
+                                       if device_occ[d] else 0.0)}
+                for d in range(self.num_devices)},
+        }
+        served = [t for t in self.request_log if t.shed != "dropped"]
+        if not served:
+            return {"completed": 0, "steps": self._steps, "wait_mean": 0.0,
+                    "wait_p99": 0.0, "latency_p50": 0.0, "latency_p99": 0.0,
+                    "iters_mean": 0.0, "iters_max": 0,
+                    "converged_frac": 0.0, "occupancy_mean": 0.0, **cluster}
+        waits = np.array([t.wait for t in served])
+        lats = np.array([t.latency for t in served])
+        iters = np.array([t.iters for t in served])
+        occ = [o for snap in self.occupancy_log
+               for o in snap["pools"].values()]
+        return {
+            "completed": len(served),
+            "steps": self._steps,
+            "wait_mean": float(waits.mean()),
+            "wait_p99": float(np.percentile(waits, 99)),
+            "latency_p50": float(np.percentile(lats, 50)),
+            "latency_p99": float(np.percentile(lats, 99)),
+            "iters_mean": float(iters.mean()),
+            "iters_max": int(iters.max()),
+            "converged_frac": float(np.mean([t.converged for t in served])),
+            "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+            **cluster,
+        }

@@ -15,10 +15,19 @@ Beyond the paper we add:
     column sums psum over the row axis;
   * an overlapped variant that hides the column-sum reduction behind the
     next row-block's compute using a ppermute ring (compute/comm overlap);
-  * optional bf16 storage with fp32 reduction.
+  * optional bf16 storage with fp32 reduction (``storage_dtype=`` on every
+    solver builder): each row block lives in the storage dtype between
+    iterations, is upcast once per iteration for the rescale math, and
+    every sum / psum / ppermute reduction accumulates fp32 — halving the
+    resident bytes per device while the collectives stay fp32-exact;
+  * ``gang_solve`` — the serving-tier entry adapter: pad rows to the mesh
+    size, shard, run the row-sharded gang, hand back trimmed host numpy.
+    ``repro.cluster.ClusterScheduler`` routes problems too large for any
+    lane pool here instead of rejecting them.
 
 All variants produce iterates identical to ``sinkhorn_uot_fused`` (up to
-float reduction order) — asserted in tests on 8 forced host devices.
+float reduction order; bf16 storage to the documented bf16 bars) —
+asserted in tests on 8 forced host devices.
 """
 from __future__ import annotations
 
@@ -26,36 +35,51 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.problem import UOTConfig, rescale_factors
 
 
+def _storage(cfg: UOTConfig, storage_dtype) -> jnp.dtype:
+    return jnp.dtype(storage_dtype if storage_dtype is not None
+                     else cfg.dtype)
+
+
 # ---------------------------------------------------------------------------
 # 1-D row-sharded MAP-UOT (the paper's cluster design)
 # ---------------------------------------------------------------------------
 
-def rowsharded_fused_solver(mesh: Mesh, axis: str, cfg: UOTConfig):
+def rowsharded_fused_solver(mesh: Mesh, axis: str, cfg: UOTConfig, *,
+                            storage_dtype=None):
     """Build a jit-able solver fn over a row-sharded coupling matrix.
 
     Returns solve(A, a, b) -> (A, colsum) where A is sharded P(axis, None)
     and a is sharded P(axis); b is replicated. One psum (== MPI_Allreduce)
     per iteration.
+
+    ``storage_dtype`` (default ``cfg.dtype``) is the dtype each device
+    carries its row block in between iterations; the rescale math and
+    every reduction (local sums AND the psum) run fp32, so a bf16 gang
+    halves per-device residency without touching collective precision.
+    The returned coupling is in the storage dtype, the colsum fp32.
     """
     fi = cfg.fi
+    sdt = _storage(cfg, storage_dtype)
 
     def local_iter(A_blk, colsum, a_blk, b):
         # Column rescale with globally-reduced column sums (already psum'ed)
-        A_blk = A_blk * rescale_factors(b, colsum, fi)[None, :]
-        rowsum = A_blk.sum(axis=1)
-        A_blk = A_blk * rescale_factors(a_blk, rowsum, fi)[:, None]
-        # Partial column sums of the local row block -> allreduce
-        partial = A_blk.sum(axis=0)
-        return A_blk, jax.lax.psum(partial, axis)
+        blk = A_blk.astype(jnp.float32) * rescale_factors(b, colsum, fi)[None, :]
+        rowsum = blk.sum(axis=1)
+        blk = blk * rescale_factors(a_blk, rowsum, fi)[:, None]
+        # Partial column sums of the local row block -> allreduce (fp32)
+        partial = blk.sum(axis=0)
+        return blk.astype(sdt), jax.lax.psum(partial, axis)
 
     def solve_shard(A_blk, a_blk, b):
-        colsum = jax.lax.psum(A_blk.sum(axis=0), axis)
+        A_blk = A_blk.astype(sdt)
+        colsum = jax.lax.psum(A_blk.astype(jnp.float32).sum(axis=0), axis)
 
         def body(_, carry):
             A_blk, colsum = carry
@@ -78,26 +102,31 @@ def rowsharded_fused_solver(mesh: Mesh, axis: str, cfg: UOTConfig):
 # ---------------------------------------------------------------------------
 
 def sharded2d_fused_solver(mesh: Mesh, row_axis: str, col_axis: str,
-                           cfg: UOTConfig):
+                           cfg: UOTConfig, *, storage_dtype=None):
     """2-D sharded solver: A sharded P(row_axis, col_axis).
 
     Row sums need a psum over ``col_axis``; column sums a psum over
     ``row_axis``. Marginals a sharded on row_axis, b on col_axis. Two small
     vector collectives per iteration — still O(M/Pr + N/Pc) bytes, never the
-    matrix itself.
+    matrix itself. ``storage_dtype`` as in ``rowsharded_fused_solver``:
+    blocks stored in it, all math and both psums fp32.
     """
     fi = cfg.fi
+    sdt = _storage(cfg, storage_dtype)
 
     def solve_shard(A_blk, a_blk, b_blk):
-        colsum = jax.lax.psum(A_blk.sum(axis=0), row_axis)
+        A_blk = A_blk.astype(sdt)
+        colsum = jax.lax.psum(A_blk.astype(jnp.float32).sum(axis=0),
+                              row_axis)
 
         def body(_, carry):
             A_blk, colsum = carry
-            A_blk = A_blk * rescale_factors(b_blk, colsum, fi)[None, :]
-            rowsum = jax.lax.psum(A_blk.sum(axis=1), col_axis)
-            A_blk = A_blk * rescale_factors(a_blk, rowsum, fi)[:, None]
-            colsum = jax.lax.psum(A_blk.sum(axis=0), row_axis)
-            return A_blk, colsum
+            blk = A_blk.astype(jnp.float32)
+            blk = blk * rescale_factors(b_blk, colsum, fi)[None, :]
+            rowsum = jax.lax.psum(blk.sum(axis=1), col_axis)
+            blk = blk * rescale_factors(a_blk, rowsum, fi)[:, None]
+            colsum = jax.lax.psum(blk.sum(axis=0), row_axis)
+            return blk.astype(sdt), colsum
 
         A_blk, colsum = jax.lax.fori_loop(
             0, cfg.num_iters, body, (A_blk, colsum))
@@ -116,7 +145,8 @@ def sharded2d_fused_solver(mesh: Mesh, row_axis: str, col_axis: str,
 # ---------------------------------------------------------------------------
 
 def rowsharded_overlapped_solver(mesh: Mesh, axis: str, cfg: UOTConfig,
-                                 num_chunks: int = 4):
+                                 num_chunks: int = 4, *,
+                                 storage_dtype=None):
     """Row-sharded solver that overlaps the column-sum reduction with compute.
 
     The local row block is split into ``num_chunks`` chunks. After chunk k's
@@ -127,11 +157,15 @@ def rowsharded_overlapped_solver(mesh: Mesh, axis: str, cfg: UOTConfig,
 
     This mirrors (and improves on) the paper's blocking MPI_Allreduce: on
     Tianhe-1 the allreduce serializes after the pass; here it rides along.
+    ``storage_dtype`` as in ``rowsharded_fused_solver``: chunks are upcast
+    to fp32 for the rescale math and the ring partials stay fp32.
     """
     fi = cfg.fi
     n_dev = mesh.shape[axis]
+    sdt = _storage(cfg, storage_dtype)
 
     def solve_shard(A_blk, a_blk, b):
+        A_blk = A_blk.astype(sdt)
         Mloc = A_blk.shape[0]
         chunk = Mloc // num_chunks
 
@@ -142,12 +176,13 @@ def rowsharded_overlapped_solver(mesh: Mesh, axis: str, cfg: UOTConfig,
             def chunk_body(k, state):
                 A_blk, acc = state
                 blk = jax.lax.dynamic_slice_in_dim(A_blk, k * chunk, chunk, 0)
-                blk = blk * fcol[None, :]
+                blk = blk.astype(jnp.float32) * fcol[None, :]
                 rowsum = blk.sum(axis=1)
                 a_chunk = jax.lax.dynamic_slice_in_dim(a_blk, k * chunk, chunk, 0)
                 blk = blk * rescale_factors(a_chunk, rowsum, fi)[:, None]
                 acc = acc + blk.sum(axis=0)
-                A_blk = jax.lax.dynamic_update_slice_in_dim(A_blk, blk, k * chunk, 0)
+                A_blk = jax.lax.dynamic_update_slice_in_dim(
+                    A_blk, blk.astype(sdt), k * chunk, 0)
                 return A_blk, acc
 
             A_blk, partial = jax.lax.fori_loop(
@@ -164,7 +199,7 @@ def rowsharded_overlapped_solver(mesh: Mesh, axis: str, cfg: UOTConfig,
                 acc = acc + recv
             return (A_blk, acc), None
 
-        colsum0 = jax.lax.psum(A_blk.sum(axis=0), axis)
+        colsum0 = jax.lax.psum(A_blk.astype(jnp.float32).sum(axis=0), axis)
         (A_blk, colsum), _ = jax.lax.scan(
             one_iter, (A_blk, colsum0), None, length=cfg.num_iters)
         return A_blk, colsum
@@ -187,3 +222,65 @@ def shard_inputs(mesh: Mesh, axis: str, A, a, b):
     sa = jax.device_put(a, NamedSharding(mesh, P(axis)))
     sb = jax.device_put(b, NamedSharding(mesh, P()))
     return sA, sa, sb
+
+
+# ---------------------------------------------------------------------------
+# Serving-tier gang entry: one adapter from a raw request to the row gang
+# ---------------------------------------------------------------------------
+
+# Built solver fns per (mesh, axis, cfg, storage dtype, num_chunks-or-None):
+# building re-traces shard_map + jit, so serving traffic must reuse them.
+_GANG_SOLVERS: dict = {}
+
+
+def gang_solve(mesh: Mesh, axis: str, K, a, b, cfg: UOTConfig, *,
+               storage_dtype=None, overlapped: bool = False,
+               num_chunks: int = 4):
+    """Solve one over-sized request on the row-sharded device gang.
+
+    The serving-tier entry adapter that unifies the lane-pool and
+    distributed tiers behind one submit API: ``repro.cluster``'s router
+    sends problems whose shape fails the lane-pool budget here instead of
+    rejecting them. Handles the impedance mismatch a raw request carries:
+
+      * rows are zero-padded so M divides the gang size (zero rows have
+        zero marginal mass -> unit factors -> stay zero: exact no-ops,
+        the same invariant the lane pools rest on);
+      * inputs are placed with ``shard_inputs`` (one host->device scatter
+        of O(M*N/D) bytes per device), the compiled gang solver is built
+        once per (mesh, axis, cfg, storage dtype) and cached;
+      * the result is trimmed back to (M, N) host numpy.
+
+    Runs the fixed ``cfg.num_iters`` budget (the gang's fori_loop has no
+    tol early-exit — one over-sized solve saturates the mesh, so there is
+    no lane-mate to stop dragging). Returns ``(P, colsum)`` numpy arrays.
+    ``overlapped=True`` uses the ring-reduce compute/comm-overlap variant.
+    """
+    K = np.asarray(K)
+    M, N = K.shape
+    n_dev = mesh.shape[axis]
+    # the overlapped solver's chunk loop covers Mloc // num_chunks * num_chunks
+    # local rows, so rows must also divide into whole chunks per device —
+    # otherwise tail rows are never rescaled and silently corrupt the
+    # ring-reduced column sums
+    row_mult = n_dev * num_chunks if overlapped else n_dev
+    pm = (-M) % row_mult
+    if pm:
+        K = np.pad(K, ((0, pm), (0, 0)))
+        a = np.pad(np.asarray(a), (0, pm))
+    sdt = _storage(cfg, storage_dtype)
+    key = (mesh, axis, cfg, sdt.name, num_chunks if overlapped else None)
+    solver = _GANG_SOLVERS.get(key)
+    if solver is None:
+        solver = _GANG_SOLVERS[key] = (
+            rowsharded_overlapped_solver(mesh, axis, cfg,
+                                         num_chunks=num_chunks,
+                                         storage_dtype=storage_dtype)
+            if overlapped
+            else rowsharded_fused_solver(mesh, axis, cfg,
+                                         storage_dtype=storage_dtype))
+    sA, sa, sb = shard_inputs(mesh, axis, jnp.asarray(K, sdt),
+                              jnp.asarray(a, jnp.float32),
+                              jnp.asarray(b, jnp.float32))
+    A, colsum = solver(sA, sa, sb)
+    return np.asarray(A)[:M], np.asarray(colsum)

@@ -197,6 +197,24 @@ class PointCloudGeometry(Geometry):
     def dim(self) -> int:
         return self.x.shape[-1]
 
+    def payload_nbytes(self) -> int:
+        """Bytes a serving request carrying this geometry ships —
+        coordinates + precomputed squared norms, ``(M + N) * (d + 1)``
+        fp32 values per problem — vs ``M * N * 4`` for the dense kernel.
+
+        This O(M + N) payload is what makes coordinate requests cheap to
+        *route*: the cluster scheduler can place (or re-place) them on any
+        device shard for the cost of a vector transfer, and the M*N Gibbs
+        kernel only ever materializes on the owning device at admission
+        (``repro.cluster``'s routing decision table cites this number).
+        """
+        M, N = self.shape
+        per_problem = 4 * (M + N) * (self.dim + 1)
+        batch = 1
+        for dim in self.batch_shape:
+            batch *= int(dim)
+        return batch * per_problem
+
     def _lane_padded_cols(self):
         """Eagerly zero-pad the column cloud to the 128-lane multiple the
         kernel path computes at; the mirrors evaluate on the padded shape

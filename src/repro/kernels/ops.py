@@ -31,6 +31,11 @@ substrate for ``repro.serve.scheduler``'s continuous batching. With
 ``cfg.tol`` set, both the stepped and the one-shot batched solves freeze
 each lane at the iterate where its row-factor stationarity reaches tol
 (identical to the single-problem solvers' early exit, per lane).
+``repro.cluster`` stacks per-device ``LaneState`` pools along a mesh axis
+and advances every device's pool in one ``shard_map``-ped stepped launch
+(the multi-device serving tier); per-lane ``m_valid`` / ``n_valid``
+extents let one physical pool host several padded shapes (cross-bucket
+lane sharing — see ``lane_admit``).
 
 Resident tier & auto-dispatch
 -----------------------------
@@ -87,7 +92,12 @@ stepped``             stay streamed to keep       (admission pays ``G``
 backends the resident tier is the jnp mirror — same iteration fusion in one
 XLA executable — and implicit geometries materialize their masked Gibbs
 mirror on-device (the host still never ships an M*N operand); the table's
-traffic formulas describe the TPU kernels.)
+traffic formulas describe the TPU kernels. The cluster tier —
+``repro.cluster``'s sharded lane pools — is the scheduler row times D
+devices: per-device traffic is unchanged, the only cross-device bytes are
+admission payloads to the owning shard. Problems too large for any lane
+pool bypass this table entirely and run on the row-sharded gang solvers,
+``core.distributed.gang_solve``: O(N) allreduce bytes per iteration.)
 
 bf16 storage on the resident tier upcasts once at load and downcasts once
 at store, so the per-iteration bf16 rounding of the streamed path
@@ -95,6 +105,8 @@ disappears: resident bf16 iterates are the fp32 trajectory rounded once.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 import functools
 
@@ -203,16 +215,53 @@ def resident_fits(M: int, N: int, cfg: UOTConfig, *, storage_dtype=None,
 # ``impl='auto'`` routing decisions, observable so the dispatch boundary is
 # assertable in tests and visible in benchmarks. Only 'auto' counts — an
 # explicit impl is the caller's decision, not the dispatcher's.
-_DISPATCH_STATS = {"resident": 0, "streamed": 0}
+#
+# Counters are *per-context*: the historical module-global dict is only the
+# base of a contextvar-held stack, and ``dispatch_counters()`` pushes a fresh
+# dict for the dynamic extent of a ``with`` block. Every decision increments
+# every dict on the stack (outer scopes aggregate inner activity), and
+# ``dispatch_stats()`` / ``reset_dispatch_stats()`` address the *innermost*
+# scope — so two schedulers (or two tests) observing their own dispatch
+# decisions no longer clobber each other's counts, and contextvars give each
+# thread / asyncio task its own stack on top of the shared global base.
+_DISPATCH_GLOBAL = {"resident": 0, "streamed": 0}
+_DISPATCH_CTX: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "uot_dispatch_counters", default=(_DISPATCH_GLOBAL,))
+
+
+@contextlib.contextmanager
+def dispatch_counters():
+    """Isolated ``impl='auto'`` decision counters for a ``with`` block.
+
+    Yields a ``{'resident': 0, 'streamed': 0}`` dict that counts only the
+    decisions made inside the block (in this thread/task); enclosing scopes
+    — including the process-global base that ``dispatch_stats()`` reports
+    outside any block — keep counting too.
+    """
+    counters = {"resident": 0, "streamed": 0}
+    token = _DISPATCH_CTX.set(_DISPATCH_CTX.get() + (counters,))
+    try:
+        yield counters
+    finally:
+        _DISPATCH_CTX.reset(token)
+
+
+def _count_dispatch(kind: str) -> None:
+    for counters in _DISPATCH_CTX.get():
+        counters[kind] += 1
 
 
 def dispatch_stats() -> dict:
-    """{'resident': ..., 'streamed': ...} decisions made by ``impl='auto'``."""
-    return dict(_DISPATCH_STATS)
+    """{'resident': ..., 'streamed': ...} decisions made by ``impl='auto'``
+    in the innermost active ``dispatch_counters()`` scope (the process-wide
+    totals when no scope is active)."""
+    return dict(_DISPATCH_CTX.get()[-1])
 
 
 def reset_dispatch_stats() -> None:
-    _DISPATCH_STATS.update(resident=0, streamed=0)
+    """Zero the innermost active scope's counters (the process-wide totals
+    when no ``dispatch_counters()`` scope is active)."""
+    _DISPATCH_CTX.get()[-1].update(resident=0, streamed=0)
 
 
 def pad_to(x: jax.Array, m_mult: int, n_mult: int) -> jax.Array:
@@ -363,7 +412,7 @@ def _resolve_auto(impl, M, N, cfg, storage_dtype, *, stepped_sdt=None,
         return True
     resident = fits and not (stepped_sdt is not None
                              and jnp.dtype(stepped_sdt).itemsize < 4)
-    _DISPATCH_STATS["resident" if resident else "streamed"] += 1
+    _count_dispatch("resident" if resident else "streamed")
     return resident
 
 
@@ -827,6 +876,19 @@ class LaneState:
       converged: (L,) bool — the lane's factor drift fell to ``cfg.tol``
                  (never set when ``cfg.tol`` is None).
       active:    (L,) bool — lane holds a live problem.
+      m_valid:   (L,) int32 valid row count of each lane's problem (0 for a
+                 free lane). Everything beyond it is exact zero padding.
+      n_valid:   (L,) int32 valid column count, likewise.
+
+    ``m_valid`` / ``n_valid`` are what let one *physical* pool host lanes of
+    several padded shapes (cross-bucket lane sharing): zero-padding is an
+    exact no-op for the rescaling math — padded rows/cols carry zero mass,
+    get unit factors, and appended zeros are exact identities of every float
+    reduction — so a lane admitted into a pool wider than its own bucket
+    produces the bit-identical iterate on its valid region, and the counts
+    record where that region ends without consulting host-side request
+    metadata. ``lane_admit`` *enforces* the mask (zeroes everything beyond
+    the counts) so a sloppy caller cannot leak payload into the padding.
     """
 
     P: jax.Array
@@ -837,6 +899,8 @@ class LaneState:
     iters: jax.Array
     converged: jax.Array
     active: jax.Array
+    m_valid: jax.Array
+    n_valid: jax.Array
 
     @property
     def num_lanes(self) -> int:
@@ -846,7 +910,7 @@ class LaneState:
 jax.tree_util.register_dataclass(
     LaneState,
     data_fields=["P", "colsum", "a", "b", "frow", "iters", "converged",
-                 "active"],
+                 "active", "m_valid", "n_valid"],
     meta_fields=[])
 
 
@@ -872,12 +936,49 @@ def make_lane_state(num_lanes: int, M: int, N: int, cfg: UOTConfig, *,
         frow=jnp.ones((L, Mp), jnp.float32),
         iters=jnp.zeros((L,), jnp.int32),
         converged=jnp.zeros((L,), bool),
-        active=jnp.zeros((L,), bool))
+        active=jnp.zeros((L,), bool),
+        m_valid=jnp.zeros((L,), jnp.int32),
+        n_valid=jnp.zeros((L,), jnp.int32))
+
+
+def _pad_admit_payload(Mp: int, Np: int, K: jax.Array, a: jax.Array,
+                       b: jax.Array, m_valid, n_valid, storage_dtype):
+    """Zero-pad (and validity-mask) an admission payload to a pool shape.
+
+    K (..., M, N), a (..., M), b (..., N); ``m_valid`` / ``n_valid`` are
+    optional per-problem valid counts (int scalars or (...,) vectors,
+    default: the payload's own M, N — i.e. the whole payload is live).
+    Returns (Kp, ap, bp, mv, nv) padded to (Mp, Np) with everything beyond
+    the valid counts forced to exactly 0.0 — the invariant cross-bucket
+    lane sharing rests on. Shared by ``lane_admit`` and the cluster-tier
+    admission (``repro.cluster``).
+    """
+    M, N = K.shape[-2:]
+    lead = K.shape[:-2]
+    mv = (jnp.full(lead, M, jnp.int32) if m_valid is None
+          else jnp.broadcast_to(jnp.asarray(m_valid, jnp.int32), lead))
+    nv = (jnp.full(lead, N, jnp.int32) if n_valid is None
+          else jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), lead))
+    Kp = jnp.zeros(lead + (Mp, Np), storage_dtype).at[..., :M, :N].set(
+        K.astype(storage_dtype))
+    ap = jnp.zeros(lead + (Mp,), jnp.float32).at[..., :M].set(
+        a.astype(jnp.float32))
+    bp = jnp.zeros(lead + (Np,), jnp.float32).at[..., :N].set(
+        b.astype(jnp.float32))
+    # enforce the mask: rows/cols beyond the per-problem valid counts are
+    # exact zeros even if the caller's payload carried junk there (a no-op
+    # — where(True, x, 0) is x — for the default whole-payload counts)
+    rmask = jnp.arange(Mp) < mv[..., None]
+    cmask = jnp.arange(Np) < nv[..., None]
+    Kp = jnp.where(rmask[..., :, None] & cmask[..., None, :], Kp, 0)
+    ap = jnp.where(rmask, ap, 0)
+    bp = jnp.where(cmask, bp, 0)
+    return Kp, ap, bp, mv, nv
 
 
 @jax.jit
 def lane_admit(state: LaneState, lane, K: jax.Array, a: jax.Array,
-               b: jax.Array) -> LaneState:
+               b: jax.Array, m_valid=None, n_valid=None) -> LaneState:
     """Load one problem — or a batch — into lane(s) ``lane`` of the pool.
 
     ``lane`` is a traced int (K (M, N), a (M,), b (N,)) or a (k,) int
@@ -887,16 +988,19 @@ def lane_admit(state: LaneState, lane, K: jax.Array, a: jax.Array,
     initialized from the *stored* (possibly bf16-downcast) matrix, so a
     lane's trajectory is bit-identical to ``solve_fused_batched`` on the
     same problem.
+
+    ``m_valid`` / ``n_valid`` (optional, int or (k,) vectors) record — and
+    enforce, by masking the payload to exact zeros beyond them — each
+    problem's live extent, which may be strictly smaller than the payload
+    shape: the cross-bucket lane-sharing groundwork. A problem admitted
+    with valid counts (M', N') into any pool wide enough for them computes
+    the bit-identical iterate on its valid region as in a pool of its own
+    bucket shape (appended zeros are exact identities of every reduction;
+    property-tested in tests/test_cluster.py).
     """
     Mp, Np = state.P.shape[1:]
-    M, N = K.shape[-2:]
-    lead = K.shape[:-2]
-    Kp = jnp.zeros(lead + (Mp, Np), state.P.dtype).at[..., :M, :N].set(
-        K.astype(state.P.dtype))
-    ap = jnp.zeros(lead + (Mp,), jnp.float32).at[..., :M].set(
-        a.astype(jnp.float32))
-    bp = jnp.zeros(lead + (Np,), jnp.float32).at[..., :N].set(
-        b.astype(jnp.float32))
+    Kp, ap, bp, mv, nv = _pad_admit_payload(Mp, Np, K, a, b, m_valid,
+                                            n_valid, state.P.dtype)
     return LaneState(
         P=state.P.at[lane].set(Kp),
         colsum=state.colsum.at[lane].set(Kp.astype(jnp.float32).sum(-2)),
@@ -905,7 +1009,9 @@ def lane_admit(state: LaneState, lane, K: jax.Array, a: jax.Array,
         frow=state.frow.at[lane].set(1.0),
         iters=state.iters.at[lane].set(0),
         converged=state.converged.at[lane].set(False),
-        active=state.active.at[lane].set(True))
+        active=state.active.at[lane].set(True),
+        m_valid=state.m_valid.at[lane].set(mv),
+        n_valid=state.n_valid.at[lane].set(nv))
 
 
 @jax.jit
@@ -924,7 +1030,9 @@ def lane_evict(state: LaneState, lane) -> LaneState:
         frow=state.frow.at[lane].set(1.0),
         iters=state.iters.at[lane].set(0),
         converged=state.converged.at[lane].set(False),
-        active=state.active.at[lane].set(False))
+        active=state.active.at[lane].set(False),
+        m_valid=state.m_valid.at[lane].set(0),
+        n_valid=state.n_valid.at[lane].set(0))
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters",))
@@ -1009,7 +1117,8 @@ def solve_fused_stepped_resident(state: LaneState, n_iters: int,
         state.active, state.a, state.b, fi=cfg.fi, n_iters=n_iters,
         num_iters=cfg.num_iters, tol=cfg.tol, interpret=interpret)
     return LaneState(P=P, colsum=colsum, a=state.a, b=state.b, frow=frow,
-                     iters=iters, converged=conv > 0, active=state.active)
+                     iters=iters, converged=conv > 0, active=state.active,
+                     m_valid=state.m_valid, n_valid=state.n_valid)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "cfg", "block_m",
@@ -1040,7 +1149,8 @@ def _solve_fused_stepped_streamed(state: LaneState, n_iters: int,
         frow = jnp.where(upd[:, None], frow, st.frow)
         return LaneState(P=P, colsum=colsum, a=st.a, b=st.b, frow=frow,
                          iters=st.iters + upd.astype(jnp.int32),
-                         converged=conv, active=st.active)
+                         converged=conv, active=st.active,
+                         m_valid=st.m_valid, n_valid=st.n_valid)
 
     return jax.lax.fori_loop(0, n_iters, body, state)
 

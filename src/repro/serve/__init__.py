@@ -1,4 +1,4 @@
-"""UOT + LLM serving engines — three tiers of request batching.
+"""UOT + LLM serving engines — four tiers of request batching.
 
 Tier 1 — per-request (``kernels.ops.solve_fused``): one launch per problem.
   Use for one-off solves, offline analysis, or problems too large to share
@@ -14,18 +14,53 @@ Tier 3 — continuous scheduler (``UOTScheduler``): fixed lane pools advance
   chunk-by-chunk; converged lanes are evicted and their results returned
   immediately, freed lanes are refilled from the queue
   earliest-deadline-first, and ``submit`` applies backpressure. Use for
-  online serving under live traffic — it trades a small per-chunk host
-  round trip for tail latency and deadline awareness (deadline misses are
-  counted per request and aggregated in ``stats()``, and
-  ``shed_policy='drop'/'degrade'`` refuses or down-budgets requests whose
-  deadline already passed at admission).
+  online serving under live traffic on ONE device — it trades a small
+  per-chunk host round trip for tail latency and deadline awareness
+  (deadline misses are counted per request and aggregated in ``stats()``,
+  and ``shed_policy='drop'/'degrade'`` refuses or down-budgets requests
+  whose deadline already passed at admission).
 
-Both request tiers accept **coordinate payloads** (``submit_points``) for
+Tier 4 — cluster scheduler (``repro.cluster.ClusterScheduler``): tier 3
+  scaled across a device mesh. Per-device lane pools are stacked into a
+  ``ClusterLaneState`` and ALL advance in one ``shard_map``-ped chunk
+  launch; a router places each request on a device shard (least-loaded or
+  bucket-affinity, optionally sharing one physical pool across buckets via
+  valid-extent masking), an async double-buffered step loop overlaps host
+  admission with the in-flight device chunk, and problems too large for
+  any lane pool escape to the row-sharded gang solvers
+  (``core.distributed.gang_solve`` — the paper's Tianhe-1 design) behind
+  the same submit API. Results are bit-identical to tier 3 per request.
+
+Traffic / placement decision table — pick the lowest row your traffic
+needs; every row serves the rows above it too:
+
+  =====================  ==================  ==========================
+  traffic shape          tier                why
+  =====================  ==================  ==========================
+  one-off / huge         1 (``solve_fused``  no queue to amortize; gang
+                         or the distributed  (``gang_solve``) when one
+                         solvers)            device can't hold M*N
+  batch job, all known   2 (``UOTBatch-      one launch per bucket beats
+  up front               Engine``)           per-request dispatch; the
+                                             flush barrier is acceptable
+  live traffic, one      3 (``UOT-           per-lane eviction + EDF
+  device's worth         Scheduler``)        admission: tail latency,
+                                             deadlines, backpressure
+  live traffic beyond    4 (``Cluster-       D devices' pools in one
+  one device; mixed      Scheduler``)        launch; router places small
+  sizes incl. over-                          problems, gang absorbs the
+  budget                                     over-sized tail — nothing
+                                             is rejected by shape
+  =====================  ==================  ==========================
+
+All request tiers accept **coordinate payloads** (``submit_points``) for
 point-cloud costs: a request ships ``(M + N) * (d + 1)`` floats instead of
-the ``M * N`` kernel matrix, the Gibbs kernel is evaluated on-device
-(on-chip tiles on the TPU kernel path — see ``repro.geometry``), and
-results are bit-identical to dense submission of the same geometry's
-``kernel(cfg.reg)``.
+the ``M * N`` kernel matrix (``PointCloudGeometry.payload_nbytes``), the
+Gibbs kernel is evaluated on-device (on-chip tiles on the TPU kernel path
+— see ``repro.geometry``), and results are bit-identical to dense
+submission of the same geometry's ``kernel(cfg.reg)``. The O(M + N)
+payload is also what makes tier 4's routing cheap: placing a coordinate
+request on any device shard costs a vector transfer, never a matrix.
 
 Every tier accepts ``impl='auto'``: problems whose padded tile fits the
 VMEM budget run on the resident kernel tier (whole solve — or whole

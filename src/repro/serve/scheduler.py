@@ -55,6 +55,11 @@ by ``ops.resident_fits``: fp32 pools that fit the VMEM budget run their
 whole chunk with each lane's tile resident
 (``ops.solve_fused_stepped_resident`` — one launch, no per-iteration HBM
 round trips), larger or sub-fp32 pools keep the streamed masked kernel.
+
+This scheduler is single-device; ``repro.cluster.ClusterScheduler`` (the
+fourth tier) stacks one such lane-pool set per mesh device, advances them
+all in one ``shard_map`` launch, and routes over-sized problems to the
+distributed gang — with results bit-identical to this class per request.
 """
 from __future__ import annotations
 

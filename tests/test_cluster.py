@@ -1,0 +1,397 @@
+"""Multi-device cluster serving: sharded lane pools + request router.
+
+The load-bearing property, one tier up from tests/test_scheduler.py: a
+request's answer must not depend on WHERE it was served — which device
+shard, which lane, how many devices, which placement policy, sync or async
+step loop, own-bucket pool or a shared wider one. Per-lane math is
+placement-invariant, so the cluster scheduler's output is required to
+EQUAL the single-device ``UOTScheduler``'s bit for bit. (The shard_map
+mesh path needs real multi-device XLA — tests/_cluster_check.py covers it
+on 8 forced host devices; here the per-device-loop mode, which
+tests/_cluster_check.py asserts is bit-identical to the mesh path.)
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import UOTConfig, sinkhorn_uot_fused
+from repro.kernels import ops
+from repro.serve import QueueFullError, UOTScheduler
+from repro.cluster import (ClusterScheduler, cluster_admit, cluster_done,
+                           cluster_evict, cluster_stepped,
+                           make_cluster_lane_state)
+
+from benchmarks.common import make_problem as _common_problem
+
+
+def make_problem(m, n, seed, peak=1.0, reg=0.1):
+    return _common_problem(m, n, reg=reg, seed=seed, peak=peak)
+
+
+def ragged_workload(seed, n_requests=8):
+    r = np.random.default_rng(seed)
+    shapes = [(8, 100), (20, 128), (32, 64), (16, 90), (24, 120)]
+    out = []
+    for i in range(n_requests):
+        m, n = shapes[r.integers(len(shapes))]
+        out.append(make_problem(m, n, seed * 1000 + i,
+                                peak=float(r.uniform(1.0, 8.0))))
+    return out
+
+
+class TestClusterLanes:
+    CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=40, tol=1e-3)
+
+    def _admit_single(self, cs, d, l, K, a, b):
+        return cluster_admit(cs, jnp.int32(d), jnp.int32(l),
+                             jnp.asarray(K), jnp.asarray(a), jnp.asarray(b))
+
+    def test_matches_single_device_pool_bitwise(self):
+        """A cluster slot's trajectory == the same problem in a plain
+        single-device lane pool, bit for bit."""
+        K, a, b = make_problem(30, 100, 1, peak=4.0)
+        st = ops.lane_admit(ops.make_lane_state(2, 32, 128, self.CFG),
+                            jnp.int32(1), K, a, b)
+        cs = self._admit_single(
+            make_cluster_lane_state(3, 2, 32, 128, self.CFG), 2, 1, K, a, b)
+        for _ in range(10):
+            st = ops.solve_fused_stepped(st, 4, self.CFG, impl="jnp")
+            cs = cluster_stepped(cs, 4, self.CFG, impl="jnp")
+        np.testing.assert_array_equal(np.asarray(cs.lanes.P[2, 1]),
+                                      np.asarray(st.P[1]))
+        assert int(cs.lanes.iters[2, 1]) == int(st.iters[1])
+        assert bool(cluster_done(cs, self.CFG.num_iters)[2, 1]) == \
+            bool(ops.lane_done(st, self.CFG.num_iters)[1])
+
+    def test_placement_invariance_across_slots(self):
+        """Same problem admitted to any (device, lane) slot -> same bits,
+        whatever else shares the stack."""
+        K, a, b = make_problem(24, 120, 2, peak=2.0)
+        K2, a2, b2 = make_problem(30, 90, 3, peak=8.0)
+        results = []
+        for (d, l), (d2, l2) in [((0, 0), (1, 1)), ((2, 1), (0, 0)),
+                                 ((1, 0), (2, 0))]:
+            cs = make_cluster_lane_state(3, 2, 32, 128, self.CFG)
+            cs = self._admit_single(cs, d, l, K, a, b)
+            cs = self._admit_single(cs, d2, l2, K2, a2, b2)
+            for _ in range(12):
+                cs = cluster_stepped(cs, 4, self.CFG, impl="jnp")
+            results.append((np.asarray(cs.lanes.P[d, l]),
+                            int(cs.lanes.iters[d, l])))
+        for P, iters in results[1:]:
+            np.testing.assert_array_equal(P, results[0][0])
+            assert iters == results[0][1]
+
+    def test_evicted_slot_is_noop_and_reusable(self):
+        K, a, b = make_problem(20, 100, 4)
+        cs = self._admit_single(
+            make_cluster_lane_state(2, 2, 32, 128, self.CFG), 1, 0, K, a, b)
+        cs = cluster_evict(cs, jnp.int32(1), jnp.int32(0))
+        assert not bool(cs.lanes.active.any())
+        assert int(cs.lanes.m_valid[1, 0]) == 0
+        np.testing.assert_array_equal(np.asarray(cs.lanes.P), 0.0)
+        cs2 = cluster_stepped(cs, 3, self.CFG, impl="jnp")
+        np.testing.assert_array_equal(np.asarray(cs2.lanes.P),
+                                      np.asarray(cs.lanes.P))
+
+    def test_cross_bucket_admit_into_wider_pool_bitwise(self):
+        """Cross-bucket lane sharing groundwork: a problem admitted with
+        valid-extent masking into a WIDER pool (both dims) produces the
+        bit-identical iterate on its valid region — appended zeros are
+        exact identities of every reduction."""
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=60, tol=1e-4)
+        K, a, b = make_problem(24, 60, 5, peak=4.0)
+        # own-bucket pool: (32, 64)-shaped lanes
+        own = ops.lane_admit(ops.make_lane_state(2, 32, 64, cfg),
+                             jnp.int32(0), K, a, b)
+        # wider shared pool: (64, 128)-shaped lanes, valid counts recorded
+        wide = ops.lane_admit(ops.make_lane_state(2, 64, 128, cfg),
+                              jnp.int32(1), K, a, b,
+                              m_valid=jnp.int32(24), n_valid=jnp.int32(60))
+        assert int(wide.m_valid[1]) == 24 and int(wide.n_valid[1]) == 60
+        for _ in range(20):
+            own = ops.solve_fused_stepped(own, 4, cfg, impl="jnp")
+            wide = ops.solve_fused_stepped(wide, 4, cfg, impl="jnp")
+        assert int(own.iters[0]) == int(wide.iters[1])
+        np.testing.assert_array_equal(np.asarray(own.P[0, :24, :60]),
+                                      np.asarray(wide.P[1, :24, :60]))
+        np.testing.assert_array_equal(np.asarray(wide.P[1, 24:, :]), 0.0)
+        np.testing.assert_array_equal(np.asarray(wide.P[1, :, 60:]), 0.0)
+
+    def test_admit_masks_payload_junk_beyond_valid_counts(self):
+        """lane_admit enforces the mask: payload garbage beyond the valid
+        extents cannot leak into the pool."""
+        cfg = self.CFG
+        K, a, b = make_problem(16, 64, 6)
+        junk = np.full((32, 128), 7.0, np.float32)
+        junk[:16, :64] = np.asarray(K)
+        aj = np.full(32, 3.0, np.float32)
+        aj[:16] = np.asarray(a)
+        bj = np.full(128, 3.0, np.float32)
+        bj[:64] = np.asarray(b)
+        st = ops.lane_admit(ops.make_lane_state(1, 32, 128, cfg),
+                            jnp.int32(0), jnp.asarray(junk),
+                            jnp.asarray(aj), jnp.asarray(bj),
+                            m_valid=jnp.int32(16), n_valid=jnp.int32(64))
+        clean = ops.lane_admit(ops.make_lane_state(1, 32, 128, cfg),
+                               jnp.int32(0), K, a, b)
+        np.testing.assert_array_equal(np.asarray(st.P), np.asarray(clean.P))
+        np.testing.assert_array_equal(np.asarray(st.colsum),
+                                      np.asarray(clean.colsum))
+
+
+class TestClusterSchedulerProperty:
+    """Cluster output == single-device UOTScheduler output, bit for bit."""
+
+    CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=40, tol=1e-3)
+
+    def _reference(self, probs):
+        ref = UOTScheduler(self.CFG, lanes_per_pool=2, chunk_iters=3,
+                           m_bucket=32, impl="jnp")
+        rids = [ref.submit(*p) for p in probs]
+        out = ref.run()
+        return [out[r] for r in rids]
+
+    @pytest.mark.parametrize("kwargs", [
+        dict(num_devices=1),
+        dict(num_devices=3),
+        dict(num_devices=4, placement="bucket_affinity"),
+        dict(num_devices=3, step_mode="async"),
+    ])
+    def test_bit_identical_to_single_device_scheduler(self, kwargs):
+        probs = ragged_workload(11)
+        ref = self._reference(probs)
+        cs = ClusterScheduler(self.CFG, lanes_per_device=2, chunk_iters=3,
+                              m_bucket=32, impl="jnp", **kwargs)
+        rids = [cs.submit(*p) for p in probs]
+        out = cs.run()
+        assert cs.pending == 0 and cs.in_flight == 0
+        for rid, expect in zip(rids, ref):
+            np.testing.assert_array_equal(out[rid], expect)
+
+    def test_async_equals_sync_including_iteration_counts(self):
+        """The double-buffered loop makes the same decisions on the same
+        data as the sync loop: bit-identical couplings AND identical
+        per-request iteration counts."""
+        probs = ragged_workload(13, n_requests=10)
+        outs, iters = [], []
+        for mode in ("sync", "async"):
+            cs = ClusterScheduler(self.CFG, num_devices=2,
+                                  lanes_per_device=2, chunk_iters=3,
+                                  m_bucket=32, impl="jnp", step_mode=mode,
+                                  clock=lambda: 0.0)
+            rids = [cs.submit(*p) for p in probs]
+            out = cs.run()
+            outs.append([out[r] for r in rids])
+            by_rid = {t.rid: t.iters for t in cs.request_log}
+            iters.append([by_rid[r] for r in rids])
+        for a, b in zip(outs[0], outs[1]):
+            np.testing.assert_array_equal(a, b)
+        assert iters[0] == iters[1]
+
+    def test_points_requests_match_dense_submission(self):
+        """Coordinate payloads through the cluster == dense submission of
+        the same geometry's kernel (single-device contract, inherited)."""
+        from repro.geometry import PointCloudGeometry
+        cfg = self.CFG
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(24, 3)).astype(np.float32)
+        y = rng.normal(size=(100, 3)).astype(np.float32) + 0.3
+        a = rng.uniform(0.5, 1.5, 24).astype(np.float32)
+        b = rng.uniform(0.5, 1.5, 100).astype(np.float32)
+        a, b = a / a.sum(), b / b.sum() * 1.2
+        g = PointCloudGeometry.from_points(x, y, scale=2.0)
+        dense = ClusterScheduler(cfg, num_devices=2, lanes_per_device=2,
+                                 m_bucket=32, impl="jnp")
+        rd = dense.submit(np.asarray(g.kernel(cfg.reg)), a, b)
+        pts = ClusterScheduler(cfg, num_devices=2, lanes_per_device=2,
+                               m_bucket=32, impl="jnp")
+        rp = pts.submit_points(x, y, a, b, scale=2.0)
+        np.testing.assert_array_equal(dense.run()[rd], pts.run()[rp])
+
+
+class TestClusterScheduling:
+    CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=6)
+
+    def test_router_least_loaded_spreads_devices(self):
+        cs = ClusterScheduler(self.CFG, num_devices=4, lanes_per_device=1,
+                              m_bucket=32, impl="jnp")
+        K, a, b = make_problem(16, 100, 0)
+        for _ in range(4):
+            cs.submit(K, a, b)
+        cs.step()
+        st = cs.stats()
+        assert st["router"]["least_loaded"] == 4
+        assert all(v["placed"] == 1 for v in st["devices"].values())
+
+    def test_bucket_affinity_packs_then_spills(self):
+        cs = ClusterScheduler(self.CFG, num_devices=3, lanes_per_device=2,
+                              m_bucket=32, impl="jnp",
+                              placement="bucket_affinity")
+        K, a, b = make_problem(16, 100, 1)
+        for _ in range(3):
+            cs.submit(K, a, b)
+        cs.step()
+        st = cs.stats()
+        # first placement spills (no hot device), next two pack device 0
+        # then spill to a fresh device once it is full
+        assert st["router"]["affinity_hits"] == 1
+        assert st["router"]["affinity_spills"] == 2
+        assert st["devices"][0]["placed"] == 2
+
+    def test_device_active_cap_limits_placement(self):
+        cs = ClusterScheduler(self.CFG, num_devices=2, lanes_per_device=4,
+                              m_bucket=32, impl="jnp", device_active_cap=1)
+        K, a, b = make_problem(16, 100, 2)
+        rids = [cs.submit(K, a, b) for _ in range(4)]
+        cs.step()
+        st = cs.stats()
+        assert all(v["active"] <= 1 for v in st["devices"].values())
+        assert st["router"]["placement_stalls"] >= 1
+        out = cs.run()
+        assert all(r in out for r in rids)     # capped, not starved
+
+    def test_cluster_backpressure(self):
+        cs = ClusterScheduler(self.CFG, num_devices=2, lanes_per_device=1,
+                              m_bucket=32, impl="jnp", max_queue=2)
+        K, a, b = make_problem(16, 100, 3)
+        cs.submit(K, a, b)
+        cs.submit(K, a, b)
+        with pytest.raises(QueueFullError):
+            cs.submit(K, a, b)
+        cs.step()
+        rid = cs.submit(K, a, b)
+        out = cs.run()
+        assert rid in out and len(out) == 3
+
+    def test_gang_escape_hatch_no_mesh(self):
+        """Over-budget shapes are served (per-request tier without a mesh),
+        not rejected, and recorded with the gang route."""
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=12)
+        cs = ClusterScheduler(cfg, num_devices=2, lanes_per_device=2,
+                              impl="jnp", interpret=True,
+                              lane_budget=lambda Mb, Nb: Mb * Nb <= 64 * 128)
+        K, a, b = make_problem(16, 100, 4)
+        Kb, ab, bb = make_problem(150, 200, 5)
+        r_lane = cs.submit(K, a, b)
+        r_gang = cs.submit(Kb, ab, bb)
+        out = cs.run()
+        assert r_lane in out and r_gang in out
+        ref, _ = sinkhorn_uot_fused(jnp.asarray(Kb), jnp.asarray(ab),
+                                    jnp.asarray(bb), cfg)
+        np.testing.assert_allclose(out[r_gang], np.asarray(ref),
+                                   rtol=1e-5, atol=1e-8)
+        st = cs.stats()
+        assert st["gang_completed"] == 1
+        assert st["router"]["gang_routed"] == 1
+        by_rid = {t.rid: t for t in cs.request_log}
+        assert by_rid[r_gang].route == "gang"
+        assert by_rid[r_gang].device == -1
+        assert by_rid[r_lane].route == "lane"
+        assert by_rid[r_lane].device >= 0
+
+    def test_shared_pool_bit_identical_and_counted(self):
+        """share_pools: a one-off narrow bucket rides an existing wider
+        pool (masked lanes) instead of allocating a new pool stack, with
+        bit-identical results."""
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=30, tol=1e-3)
+        wide = make_problem(24, 120, 6, peak=4.0)    # bucket (32, 128)
+        narrow = make_problem(20, 60, 7, peak=2.0)   # bucket (32, 64)
+        own = ClusterScheduler(cfg, num_devices=2, lanes_per_device=2,
+                               m_bucket=32, n_bucket=64, impl="jnp")
+        r0 = own.submit(*narrow)
+        expect = own.run()[r0]
+        shared = ClusterScheduler(cfg, num_devices=2, lanes_per_device=2,
+                                  m_bucket=32, n_bucket=64, impl="jnp",
+                                  share_pools=True,
+                                  placement="bucket_affinity")
+        r_wide = shared.submit(*wide)
+        shared.step()                     # wide pool now exists
+        r_narrow = shared.submit(*narrow)
+        out = shared.run()
+        np.testing.assert_array_equal(out[r_narrow], expect)
+        assert shared.stats()["router"]["shared_pool"] == 1
+        assert len(shared._pools) == 1    # no second pool stack allocated
+
+    def test_share_pools_requires_bucket_affinity(self):
+        with pytest.raises(ValueError, match="bucket_affinity"):
+            ClusterScheduler(self.CFG, num_devices=2, share_pools=True)
+
+    def test_shed_policies_cluster(self):
+        t = [10.0]
+        cs = ClusterScheduler(self.CFG, num_devices=2, lanes_per_device=2,
+                              m_bucket=32, impl="jnp", shed_policy="drop",
+                              clock=lambda: t[0])
+        K, a, b = make_problem(16, 100, 8)
+        r_dead = cs.submit(K, a, b, deadline=9.0)
+        r_live = cs.submit(K, a, b, deadline=1e9)
+        out = cs.run()
+        assert r_live in out and r_dead not in out
+        st = cs.stats()
+        assert st["shed_dropped"] == 1 and st["completed"] == 1
+        rec = {tt.rid: tt for tt in cs.request_log}[r_dead]
+        assert rec.route == "dropped" and rec.device == -1
+
+    def test_poll_take_semantics_and_device_telemetry(self):
+        t = [0.0]
+        cs = ClusterScheduler(self.CFG, num_devices=2, lanes_per_device=1,
+                              m_bucket=32, impl="jnp", clock=lambda: t[0])
+        K, a, b = make_problem(16, 100, 9)
+        rids = [cs.submit(K, a, b) for _ in range(4)]
+        while cs.pending or cs.in_flight:
+            cs.step()
+        assert cs.poll(rids[0]) is not None
+        assert cs.poll(rids[0]) is None
+        st = cs.stats()
+        assert st["completed"] == 4
+        assert sum(v["completed"] for v in st["devices"].values()) == 4
+        assert sum(v["placed"] for v in st["devices"].values()) == 4
+        assert st["occupancy_mean"] > 0
+        assert len(cs.occupancy_log) == st["steps"]
+        assert cs.occupancy_log[-1]["device_active"] == [0, 0]
+
+
+class TestDispatchCounters:
+    """The dispatch_stats() footgun fix: per-context counters."""
+
+    def test_nested_contexts_do_not_clobber(self):
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=4)
+        K, a, b = make_problem(16, 100, 0)
+        ops.reset_dispatch_stats()
+        before = ops.dispatch_stats()
+        with ops.dispatch_counters() as outer:
+            ops.solve_fused(K, a, b, cfg, interpret=True, impl="auto")
+            with ops.dispatch_counters() as inner:
+                ops.solve_fused(K, a, b, cfg, interpret=True, impl="auto")
+                # innermost scope is what dispatch_stats() reports
+                assert ops.dispatch_stats() == inner
+            assert sum(inner.values()) == 1
+        assert sum(outer.values()) == 2       # outer aggregates inner
+        after = ops.dispatch_stats()
+        # the global base also counted both, and was not reset by the
+        # scopes closing
+        assert (sum(after.values()) - sum(before.values())) == 2
+
+    def test_two_schedulers_track_their_own_decisions(self):
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=4)
+        K, a, b = make_problem(16, 100, 1)
+        s1 = ClusterScheduler(cfg, num_devices=1, lanes_per_device=1,
+                              m_bucket=32, impl="auto", interpret=True)
+        s2 = ClusterScheduler(cfg, num_devices=1, lanes_per_device=1,
+                              m_bucket=32, impl="auto", interpret=True)
+        r1 = s1.submit(K, a, b)
+        r2 = s2.submit(K, a, b)
+        # interleave the two schedulers' steps: each counts only its own
+        # pool advances
+        while s1.pending or s1.in_flight or s2.pending or s2.in_flight:
+            if s1.pending or s1.in_flight:
+                s1.step()
+            if s2.pending or s2.in_flight:
+                s2.step()
+        assert s1.poll(r1) is not None and s2.poll(r2) is not None
+        # num_iters=4 == chunk_iters: each scheduler advanced its pool
+        # exactly once, and — the footgun fix — counted only its OWN
+        # advance despite the interleaving (the shared global would say 2)
+        d1, d2 = s1.stats()["dispatch"], s2.stats()["dispatch"]
+        assert sum(d1.values()) == 1
+        assert sum(d2.values()) == 1

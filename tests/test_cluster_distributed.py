@@ -1,0 +1,24 @@
+"""Cluster serving runtime on a real 8-device mesh — run in a subprocess
+with 8 forced host devices (XLA device count is locked at first jax init,
+so the flag must be set in a fresh interpreter; see
+tests/_cluster_check.py for what is asserted)."""
+import os
+import subprocess
+import sys
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_cluster_runtime_on_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_cluster_check.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "CLUSTER_CHECK_PASSED" in proc.stdout
