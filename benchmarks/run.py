@@ -25,6 +25,12 @@ across PRs. Mapping to the paper:
                         pool devices vs the 1-device scheduler, measured
                         -service DES; BENCH_CLUSTER_SMOKE=1 for the CI
                         smoke run on 8 forced host devices)
+  bench_chaos        -> beyond-paper (fault-containment chaos harness: NaN
+                        payloads + overflow configs + a device blackout
+                        through the 8-device scheduler; hard-asserts zero
+                        lost requests, bit-identical healthy results, and
+                        goodput >= 0.9x fault-free; BENCH_CHAOS_SMOKE=1
+                        for the CI smoke run)
 """
 import argparse
 import json
@@ -49,11 +55,11 @@ def main(argv=None) -> None:
                             bench_memory, bench_distributed,
                             bench_application, bench_moe_router, bench_batch,
                             bench_serve, bench_resident, bench_geometry,
-                            bench_cluster)
+                            bench_cluster, bench_chaos)
     mods = [bench_uot, bench_traffic, bench_kernel, bench_memory,
             bench_distributed, bench_application, bench_moe_router,
             bench_batch, bench_serve, bench_resident, bench_geometry,
-            bench_cluster]
+            bench_cluster, bench_chaos]
     if args.suite:
         known = {m.__name__.split(".")[-1] for m in mods}
         unknown = set(args.suite) - known

@@ -138,7 +138,8 @@ def cluster_admit(cstate: ClusterLaneState, device, lane, K: jax.Array,
         converged=st.converged.at[idx].set(False),
         active=st.active.at[idx].set(True),
         m_valid=st.m_valid.at[idx].set(mv),
-        n_valid=st.n_valid.at[idx].set(nv)))
+        n_valid=st.n_valid.at[idx].set(nv),
+        healthy=st.healthy.at[idx].set(True)))
 
 
 @jax.jit
@@ -157,12 +158,35 @@ def cluster_evict(cstate: ClusterLaneState, device, lane) -> ClusterLaneState:
         converged=st.converged.at[idx].set(False),
         active=st.active.at[idx].set(False),
         m_valid=st.m_valid.at[idx].set(0),
-        n_valid=st.n_valid.at[idx].set(0)))
+        n_valid=st.n_valid.at[idx].set(0),
+        healthy=st.healthy.at[idx].set(True)))
 
 
 def cluster_done(cstate: ClusterLaneState, max_iters: int) -> jax.Array:
-    """(D, L) bool: slot holds a finished problem (converged or capped)."""
+    """(D, L) bool: slot holds a finished problem (converged, capped, or
+    frozen unhealthy — see ``ops.lane_done``)."""
     return ops.lane_done(cstate.lanes, max_iters)
+
+
+@jax.jit
+def cluster_poison_device(cstate: ClusterLaneState,
+                          device) -> ClusterLaneState:
+    """Corrupt device ``device``'s entire pool slice with NaN — the
+    device-blackout fault model (an HBM/interconnect failure clobbering
+    one shard's resident state, while the host-side request payloads stay
+    intact). The chaos harness (``repro.serve.faults``) injects through
+    this; the lane-health detector then flags every active lane of the
+    device in its next chunk, which is the signature
+    ``ClusterScheduler`` quarantines on. Inactive lanes' NaNs are inert:
+    admission overwrites P/colsum/frow wholesale, so a blacked-out slot
+    is clean again the moment it is refilled (tested)."""
+    st = cstate.lanes
+    nan = jnp.nan
+    return ClusterLaneState(lanes=dataclasses.replace(
+        st,
+        P=st.P.at[device].set(jnp.asarray(nan, st.P.dtype)),
+        colsum=st.colsum.at[device].set(nan),
+        frow=st.frow.at[device].set(nan)))
 
 
 @functools.lru_cache(maxsize=None)

@@ -59,6 +59,41 @@ request's coupling equals — bit for bit — what a single-device
 arrival order, chunk interleaving, device count, or step mode
 (tests/test_cluster.py in-process, tests/_cluster_check.py on 8 forced
 host devices).
+
+Fault containment (on top of ``UOTScheduler``'s ladder — admission
+validation, lane-health detection, typed dispositions, chaos hook — all
+inherited with the same semantics):
+
+* **device quarantine** — the blackout signature is *every* active lane
+  of a device (>= 2 of them) unhealthy in the same round: that is not a
+  bad payload, it is bad HARDWARE state (HBM/interconnect corruption of
+  one shard — the ``cluster_poison_device`` fault model). The device is
+  quarantined: drained (its in-flight requests leave their lanes),
+  excluded from all future placement, and surfaced as
+  ``stats()['device_health']``. Quarantine is one-way — returning a
+  flapping device to service is an operator decision, not a scheduler
+  heuristic.
+* **drain = requeue-first** — a drained (or individually poisoned)
+  request whose host-side payload is intact simply goes back in the
+  admission queue (``retries`` 0 -> 1) and lands on a healthy device,
+  where its fresh lane solve is bit-identical to the fault-free answer
+  (``status='ok'``, ``retries=1``). Only a SECOND corruption of the same
+  request escalates to the log-domain tier
+  (``status='retried_ok'``/'failed') — so transient device faults cost a
+  bounce, not a semantics change, and a poisonous payload (NaN kernel)
+  cannot ping-pong between devices forever.
+* **all-quarantined fallback** — if no healthy device shard remains, the
+  lane queue drains into the gang path (``gang='auto'``), which solves
+  per request without lane pools; serving capacity degrades, requests
+  still resolve.
+* **gang wall-clock timeout** — ``gang_timeout=`` bounds the gang tier's
+  latency at solve granularity (a fused launch cannot be preempted
+  mid-flight): a breaching solve still delivers its coupling but is
+  recorded ``status='timed_out'``, and subsequent gang solves run the
+  degraded ``degrade_iters`` budget — coarse answers at bounded latency,
+  the ``shed_policy='degrade'`` contract applied to the gang. The gang
+  mesh itself is NOT narrowed by quarantine: the blackout model poisons
+  lane-pool *state*, which gang solves never read.
 """
 from __future__ import annotations
 
@@ -72,13 +107,16 @@ import numpy as np
 
 from repro.core.problem import UOTConfig
 from repro.core import distributed
+from repro.core.health import (InvalidProblemError, escalate_log_solve,
+                               validate_problem)
 from repro.geometry import PointCloudGeometry
 from repro.kernels import ops
-from repro.serve.scheduler import (QueueFullError, RequestTelemetry,
-                                   ScheduledRequest)
+from repro.serve.scheduler import (QueueFullError, RequestFailure,
+                                   RequestTelemetry, ScheduledRequest)
 from repro.cluster.lanes import (ClusterLaneState, cluster_admit,
                                  cluster_done, cluster_evict,
-                                 cluster_stepped, make_cluster_lane_state)
+                                 cluster_poison_device, cluster_stepped,
+                                 make_cluster_lane_state)
 
 
 @dataclasses.dataclass
@@ -175,7 +213,10 @@ class ClusterScheduler:
                  device_active_cap: int | None = None,
                  step_mode: str = "sync", gang: str = "auto",
                  gang_per_step: int = 1, gang_overlapped: bool = False,
+                 gang_timeout: float | None = None,
                  lane_budget: Callable[[int, int], bool] | None = None,
+                 validate: bool = True, retry_escalate: bool = True,
+                 escalate_factor: int = 2, fault_injector=None,
                  clock: Callable[[], float] = time.monotonic):
         if lanes_per_device < 1:
             raise ValueError("lanes_per_device must be >= 1")
@@ -231,6 +272,14 @@ class ClusterScheduler:
         self.gang = gang
         self.gang_per_step = gang_per_step
         self.gang_overlapped = gang_overlapped
+        self.gang_timeout = gang_timeout
+        # Fault containment (same knobs as UOTScheduler): typed admission
+        # validation, the log-domain escalation gate for twice-corrupted
+        # requests, and the chaos hook (repro.serve.faults).
+        self.validate = validate
+        self.retry_escalate = retry_escalate
+        self.escalate_factor = escalate_factor
+        self.fault_injector = fault_injector
         # lane-pool budget: buckets failing it route to the gang. The
         # default is the resident-tier VMEM predicate — a conservative
         # proxy for "small enough to multiplex a lane pool with"; pass
@@ -256,6 +305,20 @@ class ClusterScheduler:
         self._gang_completed = 0
         self._device_placed = [0] * self.num_devices
         self._device_completed = [0] * self.num_devices
+        # rid -> RequestFailure, kept apart from the size-bounded coupling
+        # store (same rationale as UOTScheduler._dispositions)
+        self._dispositions: dict[int, RequestFailure] = {}
+        self._rejected = 0
+        self._failed = 0
+        self._retried_ok = 0
+        self._timed_out = 0
+        self._unhealthy_evictions = 0
+        self._lost_results = 0
+        self._requeued = 0
+        self._gang_timeouts = 0
+        self._gang_degrade = False      # latched by a gang_timeout breach
+        # per-device serving state: 'ok' | 'quarantined' (one-way)
+        self._device_health = ["ok"] * self.num_devices
         self._router_stats = {"least_loaded": 0, "affinity_hits": 0,
                               "affinity_spills": 0, "shared_pool": 0,
                               "placement_stalls": 0, "gang_routed": 0}
@@ -276,21 +339,51 @@ class ClusterScheduler:
         else:
             self._queue.append(req)
 
+    def _store_disposition(self, failure: RequestFailure) -> None:
+        self._dispositions[failure.rid] = failure
+        while len(self._dispositions) > self.max_log:
+            self._dispositions.pop(next(iter(self._dispositions)))
+
+    def _reject(self, rid: int, bucket, deadline,
+                err: InvalidProblemError, now: float) -> None:
+        """Refused admission: telemetry + a typed disposition so
+        ``poll(rid)`` resolves, then re-raise (rid attached)."""
+        self._rejected += 1
+        self.request_log.append(ClusterRequestTelemetry(
+            rid=rid, bucket=bucket, lane=-1, arrival=now, admitted=now,
+            completed=now, iters=0, converged=False, deadline=deadline,
+            status="rejected", device=-1, route="rejected"))
+        self._store_disposition(RequestFailure(
+            rid=rid, status="rejected", reason=f"{err.reason}: {err}"))
+        raise err
+
     def submit(self, K, a, b, *, deadline: float | None = None,
                priority: int = 0) -> int:
         """Enqueue a problem; returns its request id. Problems too large
         for any lane pool are routed to the row-sharded gang solver
         instead of being rejected (``gang='auto'``); ``QueueFullError``
-        applies cluster-wide across both queues."""
+        applies cluster-wide across both queues. ``InvalidProblemError``
+        semantics match ``UOTScheduler.submit``."""
         self._check_backpressure()
         K = np.asarray(K)
-        M, N = K.shape
+        a = np.asarray(a)
+        b = np.asarray(b)
         rid = self._next_rid
         self._next_rid += 1
+        fault = None
+        if self.fault_injector is not None:
+            K, a, b, fault = self.fault_injector.on_submit(rid, K, a, b)
+        M, N = K.shape
+        bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
+        now = self.clock()
+        if self.validate:
+            try:
+                validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
+            except InvalidProblemError as err:
+                self._reject(rid, bucket, deadline, err, now)
         self._route(ScheduledRequest(
-            rid=rid, K=K, a=np.asarray(a), b=np.asarray(b), shape=(M, N),
-            bucket=ops.bucket_shape(M, N, self.m_bucket, self.n_bucket),
-            arrival=self.clock(), deadline=deadline, priority=priority))
+            rid=rid, K=K, a=a, b=b, shape=(M, N), bucket=bucket,
+            arrival=now, deadline=deadline, priority=priority, fault=fault))
         return rid
 
     def submit_points(self, x, y, a, b, *, scale: float = 1.0,
@@ -305,14 +398,25 @@ class ClusterScheduler:
         self._check_backpressure()
         g = PointCloudGeometry.from_points(x, y, scale=scale)
         M, N = g.shape
+        a = np.asarray(a)
+        b = np.asarray(b)
         rid = self._next_rid
         self._next_rid += 1
+        fault = None
+        if self.fault_injector is not None:
+            _, a, b, fault = self.fault_injector.on_submit(rid, None, a, b)
+        bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
+        now = self.clock()
+        if self.validate:
+            try:
+                validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
+            except InvalidProblemError as err:
+                self._reject(rid, bucket, deadline, err, now)
         self._route(ScheduledRequest(
-            rid=rid, K=None, a=np.asarray(a), b=np.asarray(b), shape=(M, N),
-            bucket=ops.bucket_shape(M, N, self.m_bucket, self.n_bucket),
-            arrival=self.clock(), deadline=deadline, priority=priority,
+            rid=rid, K=None, a=a, b=b, shape=(M, N), bucket=bucket,
+            arrival=now, deadline=deadline, priority=priority,
             x=np.asarray(g.x), y=np.asarray(g.y), xn=np.asarray(g.xn),
-            yn=np.asarray(g.yn), scale=float(scale)))
+            yn=np.asarray(g.yn), scale=float(scale), fault=fault))
         return rid
 
     @property
@@ -326,8 +430,13 @@ class ClusterScheduler:
         return sum(len(p.requests) for p in self._pools.values())
 
     def poll(self, rid: int):
-        """The finished coupling for ``rid`` (take semantics), or None."""
-        return self._results.pop(rid, None)
+        """The terminal disposition of ``rid``: the finished coupling, a
+        ``RequestFailure`` (failed / rejected / lost), or None only while
+        genuinely pending. Take semantics — handed out exactly once."""
+        out = self._results.pop(rid, None)
+        if out is not None:
+            return out
+        return self._dispositions.pop(rid, None)
 
     # ---- the scheduling loop ---------------------------------------------
 
@@ -341,6 +450,8 @@ class ClusterScheduler:
         read is eviction's lifecycle-flag fetch. The sync mode blocks at
         the end of the round instead, right after dispatch.
         """
+        if self.fault_injector is not None:
+            self.fault_injector.on_step(self)
         self._prep_admissions()
         completed = self._evict_finished()
         self._admit_queued()
@@ -388,19 +499,128 @@ class ClusterScheduler:
                 bp[:N] = req.b
                 self._prepped[req.rid] = (Kp, ap, bp)
 
+    def _request_kernel(self, req: ScheduledRequest) -> np.ndarray:
+        """The request's (M, N) matrix for an off-lane re-solve (dense
+        payload or the geometry's Gibbs mirror)."""
+        if req.K is not None:
+            return req.K
+        g = PointCloudGeometry(
+            x=jnp.asarray(req.x), y=jnp.asarray(req.y),
+            xn=jnp.asarray(req.xn), yn=jnp.asarray(req.yn),
+            scale=req.scale)
+        return np.asarray(g.kernel(self.cfg.reg))
+
+    def _escalate(self, req: ScheduledRequest):
+        """Log-domain retry of a twice-corrupted request (the requeue
+        bounce is the FIRST retry — see the module docstring); returns
+        ``(P or None, iters)``."""
+        if not self.retry_escalate or req.retries >= 2:
+            return None, 0
+        req.retries += 1
+        P, stats, ok = escalate_log_solve(
+            self._request_kernel(req), req.a, req.b, self.cfg,
+            factor=self.escalate_factor)
+        return (P if ok else None), stats["iters"]
+
+    def _requeue(self, req: ScheduledRequest) -> None:
+        """Bounce an intact-payload request back through admission: the
+        quarantine/poison recovery whose eventual answer is bit-identical
+        to the fault-free lane solve (placement invariance). The
+        bucket-padded ``_prepped`` cache entry, if any, is still valid."""
+        req.retries += 1
+        self._requeued += 1
+        self._queue.append(req)
+
+    def _trim_results(self) -> None:
+        while len(self._results) > self.max_results:
+            old = next(iter(self._results))
+            self._results.pop(old)
+            self._lost_results += 1
+            self._store_disposition(RequestFailure(
+                rid=old, status="lost",
+                reason="coupling evicted from the bounded result store "
+                       "(max_results) before it was polled"))
+
+    def _scan_device_health(self, flags: dict, completed: dict) -> None:
+        """Quarantine devices showing the blackout signature: EVERY active
+        lane of the device (>= 2) unhealthy in the same round. A single
+        bad lane on an otherwise-fine device is payload/lane poison and is
+        handled per-request at eviction; all-lanes-at-once is hardware.
+        Quarantined devices are drained (requests bounce back through
+        admission) and never receive another placement."""
+        active = [0] * self.num_devices
+        unhealthy = [0] * self.num_devices
+        for bucket, (iters_, conv_, healthy_) in flags.items():
+            pool = self._pools[bucket]
+            for (d, l) in pool.requests:
+                active[d] += 1
+                unhealthy[d] += int(not healthy_[d, l])
+        for d in range(self.num_devices):
+            if (self._device_health[d] == "ok" and active[d] >= 2
+                    and unhealthy[d] == active[d]):
+                self._device_health[d] = "quarantined"
+                for bucket in flags:
+                    pool = self._pools[bucket]
+                    drained = [s for s in pool.requests if s[0] == d]
+                    for slot in drained:
+                        req = pool.requests.pop(slot)
+                        pool.admitted_at.pop(slot)
+                        self._unhealthy_evictions += 1
+                        if req.retries == 0:
+                            self._requeue(req)
+                        else:
+                            self._finish_escalated(req, slot,
+                                                   pool.bucket,
+                                                   completed)
+                # no cluster_evict scrub for the drained slots: the whole
+                # device slice is already poison and will never be placed
+                # to again — scrubbing it would only burn a launch
+
+    def _finish_escalated(self, req: ScheduledRequest, slot, bucket,
+                          completed: dict) -> None:
+        """Terminal handling for a request past its requeue bounce: one
+        log-domain escalation, then a typed failure."""
+        d, l = slot
+        now = self.clock()
+        P, n_iters = self._escalate(req)
+        if P is not None:
+            self._retried_ok += 1
+            completed[req.rid] = self._results[req.rid] = P
+            self._trim_results()
+            status = "retried_ok"
+        else:
+            self._failed += 1
+            self._store_disposition(RequestFailure(
+                rid=req.rid, status="failed",
+                reason="lane state went non-finite twice and the "
+                       "log-domain escalation did not recover",
+                retries=req.retries))
+            status = "failed"
+        self._record(ClusterRequestTelemetry(
+            rid=req.rid, bucket=bucket, lane=l, arrival=req.arrival,
+            admitted=req.arrival, completed=now, iters=n_iters,
+            converged=False, deadline=req.deadline, shed=req.shed,
+            status=status, retries=req.retries, device=d, route="lane"))
+
     def _evict_finished(self) -> dict[int, np.ndarray]:
         completed: dict[int, np.ndarray] = {}
         now = self.clock()
-        for pool in self._pools.values():
-            if not pool.requests:
-                continue
-            # the first (and in async mode, only) device-blocking read of
-            # the in-flight chunk: O(D*L) lifecycle flags
-            iters = np.asarray(pool.state.lanes.iters)
-            conv = np.asarray(pool.state.lanes.converged)
+        # the first (and in async mode, only) device-blocking read of the
+        # in-flight chunk: O(D*L) lifecycle flags per occupied pool
+        flags = {
+            bucket: (np.asarray(pool.state.lanes.iters),
+                     np.asarray(pool.state.lanes.converged),
+                     np.asarray(pool.state.lanes.healthy))
+            for bucket, pool in self._pools.items() if pool.requests}
+        # device-level triage first: the blackout signature drains whole
+        # devices (requests requeue), so the per-lane loop below only ever
+        # sees isolated poison on devices that stay in service
+        self._scan_device_health(flags, completed)
+        for bucket, (iters, conv, healthy) in flags.items():
+            pool = self._pools[bucket]
             finished = [
                 slot for slot, req in list(pool.requests.items())
-                if conv[slot] or iters[slot] >= (
+                if not healthy[slot] or conv[slot] or iters[slot] >= (
                     req.max_iters if req.max_iters is not None
                     else self.cfg.num_iters)]
             if not finished:
@@ -408,22 +628,46 @@ class ClusterScheduler:
             for slot in finished:
                 d, l = slot
                 req = pool.requests.pop(slot)
+                admitted = pool.admitted_at.pop(slot)
                 M, N = req.shape
-                P = np.asarray(pool.state.lanes.P[d, l])[:M, :N].copy()
+                P = None
+                if healthy[slot]:
+                    P = np.asarray(pool.state.lanes.P[d, l])[:M, :N].copy()
+                    # host-side double check on the one evicted slice:
+                    # poison landing after the convergence latch froze the
+                    # lane never crosses the detector's window
+                    if not np.all(np.isfinite(P)):
+                        P = None
+                if P is None:
+                    self._unhealthy_evictions += 1
+                    if req.retries == 0:
+                        # intact host payload -> bounce through admission
+                        # to a healthy device; the eviction scatter below
+                        # scrubs this lane's NaNs out of the pool
+                        self._requeue(req)
+                        continue
+                    self._finish_escalated(req, slot, pool.bucket,
+                                           completed)
+                    continue
+                timed_out = (self.cfg.tol is not None and not conv[slot]
+                             and req.max_iters is None)
+                self._timed_out += timed_out
                 completed[req.rid] = self._results[req.rid] = P
-                while len(self._results) > self.max_results:
-                    self._results.pop(next(iter(self._results)))
+                self._trim_results()
                 rec = ClusterRequestTelemetry(
                     rid=req.rid, bucket=pool.bucket, lane=l,
-                    arrival=req.arrival,
-                    admitted=pool.admitted_at.pop(slot),
+                    arrival=req.arrival, admitted=admitted,
                     completed=now, iters=int(iters[slot]),
                     converged=bool(conv[slot]), deadline=req.deadline,
-                    shed=req.shed, device=d, route="lane")
+                    shed=req.shed,
+                    status="timed_out" if timed_out else "ok",
+                    retries=req.retries, device=d, route="lane")
                 self._record(rec)
                 self._device_completed[d] += 1
             # one pool update for the round's evictions across all
-            # devices; indices padded with duplicates -> one jit signature
+            # devices; indices padded with duplicates -> one jit
+            # signature — and the zeroing scrubs poisoned lanes' NaNs
+            # off devices that remain in service
             pad = (pool.num_devices * pool.lanes_per_device
                    - len(finished))
             slots = finished + [finished[-1]] * pad
@@ -431,6 +675,32 @@ class ClusterScheduler:
             lns = jnp.asarray([s[1] for s in slots], jnp.int32)
             pool.state = cluster_evict(pool.state, devs, lns)
         return completed
+
+    def inject_lane_fault(self, rid: int) -> bool:
+        """Chaos/drill hook: NaN the (device, lane) slot currently holding
+        ``rid`` (state corruption with an intact host payload — recovers
+        via requeue, bit-identical). False when rid is not in a lane."""
+        for pool in self._pools.values():
+            for (d, l), req in pool.requests.items():
+                if req.rid == rid:
+                    st = pool.state.lanes
+                    pool.state = ClusterLaneState(
+                        lanes=dataclasses.replace(
+                            st,
+                            P=st.P.at[d, l].set(
+                                jnp.asarray(jnp.nan, st.P.dtype)),
+                            colsum=st.colsum.at[d, l].set(jnp.nan),
+                            frow=st.frow.at[d, l].set(jnp.nan)))
+                    return True
+        return False
+
+    def inject_device_fault(self, device: int) -> None:
+        """Chaos/drill hook: black out one device shard — NaN its entire
+        pool-slice state in every pool (``cluster_poison_device``). The
+        next eviction round sees every active lane of the device
+        unhealthy and quarantines it."""
+        for pool in self._pools.values():
+            pool.state = cluster_poison_device(pool.state, device)
 
     def _record(self, rec: ClusterRequestTelemetry) -> None:
         if rec.deadline is not None and rec.route != "dropped":
@@ -446,12 +716,18 @@ class ClusterScheduler:
             return False
         if self.shed_policy == "drop":
             self._shed_dropped += 1
+            self._rejected += 1
             self._prepped.pop(req.rid, None)
             self.request_log.append(ClusterRequestTelemetry(
                 rid=req.rid, bucket=req.bucket, lane=-1,
                 arrival=req.arrival, admitted=now, completed=now,
                 iters=0, converged=False, deadline=req.deadline,
-                shed="dropped", device=-1, route="dropped"))
+                shed="dropped", status="rejected", device=-1,
+                route="dropped"))
+            self._store_disposition(RequestFailure(
+                rid=req.rid, status="rejected",
+                reason="deadline already passed at admission "
+                       "(shed_policy='drop')"))
             return True
         self._shed_degraded += 1          # 'degrade'
         req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
@@ -490,7 +766,8 @@ class ClusterScheduler:
         """Placement policy: the device shard that takes the next lane."""
         cap = self.device_active_cap
         candidates = [d for d in range(self.num_devices)
-                      if pool.free_lanes(d)
+                      if self._device_health[d] == "ok"
+                      and pool.free_lanes(d)
                       and (cap is None or self._device_active(d) < cap)]
         if not candidates:
             return None
@@ -507,6 +784,15 @@ class ClusterScheduler:
 
     def _admit_queued(self) -> None:
         if not self._queue:
+            return
+        if (self.gang == "auto"
+                and all(h != "ok" for h in self._device_health)):
+            # no healthy device shard remains: the gang path still solves
+            # per request without touching lane-pool state — degraded
+            # capacity, but every request keeps resolving
+            self._router_stats["gang_routed"] += len(self._queue)
+            self._gang_queue.extend(self._queue)
+            self._queue = []
             return
         now = self.clock()
         remaining: list[ScheduledRequest] = []
@@ -632,6 +918,7 @@ class ClusterScheduler:
             if req.shed is None and self._shed_at_admission(req, now):
                 continue
             budget -= 1
+            t0 = self.clock()
             if req.K is None:
                 g = PointCloudGeometry(
                     x=jnp.asarray(req.x), y=jnp.asarray(req.y),
@@ -643,6 +930,11 @@ class ClusterScheduler:
             # a degraded gang request runs its reduced budget, like a lane
             iters = (self.cfg.num_iters if req.max_iters is None
                      else min(req.max_iters, self.cfg.num_iters))
+            if self._gang_degrade:
+                # a previous solve breached gang_timeout: keep the gang
+                # tier's latency bounded by running the degraded budget
+                # (the shed 'degrade' contract applied to the gang)
+                iters = min(iters, self.degrade_iters)
             cfg = (self.cfg if iters == self.cfg.num_iters
                    else dataclasses.replace(self.cfg, num_iters=iters))
             if self.mesh is not None:
@@ -657,15 +949,25 @@ class ClusterScheduler:
                     storage_dtype=self.storage_dtype)
                 P = np.asarray(P)
             done = self.clock()
+            status = "ok"
+            if (self.gang_timeout is not None
+                    and done - t0 > self.gang_timeout):
+                # a fused launch can't be preempted: the breaching solve
+                # still delivers, is recorded timed_out, and latches the
+                # degraded budget for the solves after it
+                self._gang_timeouts += 1
+                self._gang_degrade = True
+                status = "timed_out"
+                self._timed_out += 1
             completed[req.rid] = self._results[req.rid] = P
-            while len(self._results) > self.max_results:
-                self._results.pop(next(iter(self._results)))
+            self._trim_results()
             self._gang_completed += 1
             self._record(ClusterRequestTelemetry(
                 rid=req.rid, bucket=req.bucket, lane=-1,
                 arrival=req.arrival, admitted=now, completed=done,
                 iters=iters, converged=False, deadline=req.deadline,
-                shed=req.shed, device=-1, route="gang"))
+                shed=req.shed, status=status, retries=req.retries,
+                device=-1, route="gang"))
         return completed
 
     def _advance_pools(self) -> None:
@@ -720,15 +1022,33 @@ class ClusterScheduler:
             "gang_completed": self._gang_completed,
             "router": dict(self._router_stats),
             "dispatch": dict(self._dispatch),
+            # fault-containment rollup (running totals, exact)
+            "rejected": self._rejected,
+            "failed": self._failed,
+            "retried_ok": self._retried_ok,
+            "timed_out": self._timed_out,
+            "unhealthy_evictions": self._unhealthy_evictions,
+            "lost_results": self._lost_results,
+            "requeued": self._requeued,
+            "gang_timeouts": self._gang_timeouts,
+            "device_health": list(self._device_health),
             "devices": {
                 d: {"placed": self._device_placed[d],
                     "completed": self._device_completed[d],
                     "active": self._device_active(d),
+                    "health": self._device_health[d],
                     "occupancy_mean": (float(np.mean(device_occ[d]))
                                        if device_occ[d] else 0.0)}
                 for d in range(self.num_devices)},
         }
-        served = [t for t in self.request_log if t.shed != "dropped"]
+        status_counts: dict[str, int] = {}
+        for t in self.request_log:
+            status_counts[t.status] = status_counts.get(t.status, 0) + 1
+        cluster["status_counts"] = status_counts
+        # dropped / admission-rejected requests never solved anything —
+        # excluded from the aggregates, which describe served work
+        served = [t for t in self.request_log
+                  if t.shed != "dropped" and t.status != "rejected"]
         if not served:
             return {"completed": 0, "steps": self._steps, "wait_mean": 0.0,
                     "wait_p99": 0.0, "latency_p50": 0.0, "latency_p99": 0.0,

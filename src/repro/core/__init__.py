@@ -12,6 +12,9 @@ Solver family
 - ``log_domain``: numerically stabilized potentials-space solver.
 - ``distributed``: shard_map row-sharded & 2-D sharded solvers (the paper's
   MPI_Allreduce design mapped to jax.lax.psum).
+- ``health``: typed admission validation (``InvalidProblemError``, the
+  ``uv_safe`` overflow-regime predicate) + the log-domain escalation
+  adapter the serving tiers quarantine-and-retry through.
 """
 from repro.core.problem import (UOTConfig, UOTProblem, gibbs_kernel,
                                 uot_cost)
@@ -22,6 +25,8 @@ from repro.core.sinkhorn_uv import sinkhorn_uot_uv, sinkhorn_uot_uv_fused
 from repro.core.log_domain import sinkhorn_uot_log
 from repro.core.convergence import (factor_drift, lane_factor_drift,
                                     marginal_error, mass)
+from repro.core.health import (InvalidProblemError, escalate_log_solve,
+                               escalation_config, uv_safe, validate_problem)
 
 __all__ = [
     "UOTConfig",
@@ -38,4 +43,9 @@ __all__ = [
     "mass",
     "factor_drift",
     "lane_factor_drift",
+    "InvalidProblemError",
+    "uv_safe",
+    "validate_problem",
+    "escalation_config",
+    "escalate_log_solve",
 ]

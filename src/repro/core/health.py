@@ -1,0 +1,187 @@
+"""Problem-health checks + the log-domain escalation adapter.
+
+The serving tiers (``repro.serve``, ``repro.cluster``) share one lane pool
+across many requests, so a single ill-posed payload has a blast radius far
+beyond its own answer: a NaN marginal poisons the batched rescale factors of
+its lane, and a uv/matrix-scaling solve in the fp32 overflow regime
+documented in ``core.sinkhorn_uv`` returns garbage *silently* (overflowed
+iterates collapse through the safe divisions to a zero coupling with a
+stationary factor trajectory — no NaN ever surfaces). This module is the
+admission side of fault containment:
+
+- ``validate_problem`` raises a typed ``InvalidProblemError`` for the
+  request classes that are cheap to detect BEFORE they touch device state:
+  non-finite / negative marginals, shape or dtype mismatches, empty
+  marginals, and overflow-regime ``(cfg, a, b)`` combinations. Marginal
+  checks are O(M + N); the M*N kernel payload is deliberately NOT scanned
+  here (that would double admission traffic) — non-finite kernel entries
+  are caught in flight by the lane-health detector in
+  ``ops.solve_fused_stepped`` instead.
+- ``uv_safe`` is the overflow-regime predicate, derived from the
+  ``sinkhorn_uv.translate_uv`` amplification bound: the scaling-space
+  iterates carry the mass-imbalance mode as a factor
+  ``(sum(a)/sum(b)) ** (rho/(2*eps))`` (Séjourné et al., arXiv:2201.00730),
+  so its log magnitude ``rho/(2*eps) * |log sum(a) - log sum(b)|`` against
+  the fp32 exponent range is a cheap, conservative classifier for "the
+  scaling-space tiers will overflow / underflow on this problem".
+- ``escalate_log_solve`` is where refused-or-poisoned requests go: one
+  solve on ``sinkhorn_uot_log`` — the numerically robust tier, whose
+  iterates live in potential space where the same mode is an *additive*
+  translation — with an escalated iteration budget. The matrix-scaling
+  lanes iterate on the stored coupling ``A0`` directly, so the adapter
+  reconstructs the cost as ``C = -reg * log(A0)`` and solves the same
+  ``(C, a, b, cfg)`` problem in potential space. NB the escalated answer
+  carries the *potential-form* (POT ``sinkhorn_knopp_unbalanced``)
+  semantics — for ``fi < 1`` that differs from the scaling-form lane
+  answer by the two forms' damping difference (see ``core.problem``'s
+  module docstring); schedulers mark such results ``retried_ok`` rather
+  than ``ok`` precisely because they are a different tier's answer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import UOTConfig
+from repro.core.log_domain import sinkhorn_uot_log
+
+
+class InvalidProblemError(ValueError):
+    """A request refused at admission, with a machine-readable reason.
+
+    ``reason`` is one of: ``'shape'``, ``'dtype'``, ``'non_finite'``,
+    ``'negative'``, ``'empty'``, ``'uv_overflow'``. ``rid`` is the request
+    id the scheduler assigned before refusing (so the refusal is
+    addressable in telemetry), or None outside a scheduler.
+    """
+
+    def __init__(self, reason: str, message: str, *, rid: int | None = None):
+        super().__init__(message)
+        self.reason = reason
+        self.rid = rid
+
+
+def uv_amplification_log(cfg: UOTConfig, a, b) -> float:
+    """log-magnitude of the scaling-space mass-imbalance factor.
+
+    ``translate_uv`` shows the mode the uv/matrix-scaling iterates must
+    represent: ``e^{t/eps} = (Sa/Sb) ** (rho/(2*eps))``, i.e. a log
+    magnitude of ``rho/(2*eps) * |log Sa - log Sb|``. Balanced problems
+    (``reg_m=inf``) have no such mode (gauge freedom) and return 0.
+    Returns +inf for empty marginals (callers reject those separately).
+    """
+    sa = float(np.sum(a))
+    sb = float(np.sum(b))
+    if not (sa > 0.0 and sb > 0.0) or not math.isfinite(sa + sb):
+        return math.inf
+    rho, eps = cfg.reg_m, cfg.reg
+    if rho == math.inf:
+        return 0.0
+    return rho / (2.0 * eps) * abs(math.log(sa) - math.log(sb))
+
+
+def uv_safe(cfg: UOTConfig, a, b, *, dtype=jnp.float32,
+            margin: float = 0.5) -> bool:
+    """True when the scaling-space tiers can represent this problem's
+    mass-imbalance mode in ``dtype`` without overflow/underflow.
+
+    The bound is ``uv_amplification_log`` against ``margin *
+    log(finfo(dtype).max)`` — margin < 1 leaves exponent headroom for the
+    transient iterates, which overshoot the fixed-point factor before TI or
+    the alternating updates rein them in. Problems failing this predicate
+    belong to ``sinkhorn_uot_log`` (see ``escalate_log_solve``), whose
+    potential-space iterates carry the same mode additively.
+    """
+    ceiling = margin * math.log(float(jnp.finfo(dtype).max))
+    return uv_amplification_log(cfg, a, b) <= ceiling
+
+
+def validate_problem(cfg: UOTConfig, a, b, *,
+                     shape: tuple[int, int] | None = None,
+                     rid: int | None = None,
+                     check_overflow: bool = True) -> None:
+    """Raise ``InvalidProblemError`` for requests that would poison a lane.
+
+    O(M + N): marginals only. ``shape`` (M, N), when given, is the payload
+    shape the marginals must match (K's shape for dense requests, the
+    cloud sizes for coordinate requests).
+    """
+    a = np.asarray(a)
+    b = np.asarray(b)
+    for name, v in (("a", a), ("b", b)):
+        if v.ndim != 1:
+            raise InvalidProblemError(
+                "shape", f"marginal {name} must be 1-D, got shape "
+                f"{v.shape}", rid=rid)
+        if not np.issubdtype(v.dtype, np.floating):
+            raise InvalidProblemError(
+                "dtype", f"marginal {name} must be floating, got "
+                f"{v.dtype}", rid=rid)
+        if not np.all(np.isfinite(v)):
+            raise InvalidProblemError(
+                "non_finite", f"marginal {name} has non-finite entries",
+                rid=rid)
+        if np.any(v < 0):
+            raise InvalidProblemError(
+                "negative", f"marginal {name} has negative entries",
+                rid=rid)
+        if not np.sum(v) > 0:
+            raise InvalidProblemError(
+                "empty", f"marginal {name} has zero total mass", rid=rid)
+    if shape is not None:
+        M, N = shape
+        if a.shape != (M,) or b.shape != (N,):
+            raise InvalidProblemError(
+                "shape", f"marginals ({a.shape[0]},)/({b.shape[0]},) do "
+                f"not match problem shape ({M}, {N})", rid=rid)
+    if check_overflow and not uv_safe(cfg, a, b):
+        raise InvalidProblemError(
+            "uv_overflow",
+            f"(cfg, a, b) is in the scaling-space overflow regime "
+            f"(amplification log {uv_amplification_log(cfg, a, b):.1f} "
+            f"exceeds the fp32 budget) — this problem belongs to the "
+            f"log-domain tier", rid=rid)
+
+
+def escalation_config(cfg: UOTConfig, *, factor: int = 2,
+                      num_iters: int | None = None) -> UOTConfig:
+    """The escalated config a quarantined request retries under: same
+    (reg, reg_m) problem, a larger iteration budget (the robust tier is
+    the last stop — give it room), fp32 math."""
+    iters = num_iters if num_iters is not None else factor * cfg.num_iters
+    return dataclasses.replace(cfg, num_iters=iters, dtype=jnp.float32)
+
+
+def escalate_log_solve(K, a, b, cfg: UOTConfig, *,
+                       factor: int = 2, num_iters: int | None = None):
+    """Re-solve a quarantined request on ``sinkhorn_uot_log``.
+
+    ``K`` is the request's stored coupling / Gibbs matrix (the matrix the
+    lane iterated on); the log solve runs from ``C = -reg * log(K)``, the
+    same ``(C, a, b, cfg)`` problem in potential space (with the
+    potential-form damping semantics — see the module docstring). Entries
+    with ``K <= 0`` map to an effectively infinite cost (zero coupling
+    there — exactly what the scaling iteration preserves for a zero
+    entry).
+
+    Returns ``(P, stats, ok)`` where ``ok`` is True iff the escalated solve
+    produced an all-finite coupling — the caller records ``retried_ok`` on
+    True and a typed failure on False. The solve itself never raises on bad
+    numerics; a NaN payload simply comes back ``ok=False``.
+    """
+    ecfg = escalation_config(cfg, factor=factor, num_iters=num_iters)
+    K = jnp.asarray(K, jnp.float32)
+    tiny = float(jnp.finfo(jnp.float32).tiny)
+    C = -ecfg.reg * jnp.log(jnp.maximum(K, tiny))
+    # a non-finite payload entry must stay poisonous (NaN in -> not-ok out),
+    # not be laundered into a large finite cost by the maximum() clamp
+    C = jnp.where(jnp.isfinite(K), C, jnp.nan)
+    P, _, stats = sinkhorn_uot_log(C, jnp.asarray(a, jnp.float32),
+                                   jnp.asarray(b, jnp.float32), ecfg)
+    P = np.asarray(P)
+    ok = bool(np.all(np.isfinite(P)))
+    return P, {"iters": int(stats["iters"]), "err": float(stats["err"]),
+               "num_iters": ecfg.num_iters}, ok

@@ -102,6 +102,17 @@ pool bypass this table entirely and run on the row-sharded gang solvers,
 bf16 storage on the resident tier upcasts once at load and downcasts once
 at store, so the per-iteration bf16 rounding of the streamed path
 disappears: resident bf16 iterates are the fp32 trajectory rounded once.
+
+One dispatch row lives OUTSIDE this table: the log-domain escalation path.
+Every tier above iterates in scaling space, which has a documented fp32
+overflow regime (``core.sinkhorn_uv``: the mass-imbalance mode is a factor
+``(Sa/Sb)**(rho/(2*eps))``). Problems classified into that regime by
+``core.health.uv_safe`` — and lanes whose state goes non-finite in flight
+(``LaneState.healthy``) — are not retried here at all: the serving
+schedulers route them to ``core.sinkhorn_uot_log`` via
+``core.health.escalate_log_solve``, whose potential-space iterates carry
+the same mode additively. That path trades the paper's HBM schedule for
+numerical range; it is the containment tier, not a performance tier.
 """
 from __future__ import annotations
 
@@ -876,6 +887,16 @@ class LaneState:
       converged: (L,) bool — the lane's factor drift fell to ``cfg.tol``
                  (never set when ``cfg.tol`` is None).
       active:    (L,) bool — lane holds a live problem.
+      healthy:   (L,) bool — the lane's iterates are numerically sound.
+                 Cleared (latched False) by the stepped advance when the
+                 lane's freshly computed row factors or carried column
+                 sums go non-finite; an unhealthy lane is frozen exactly
+                 like a converged one (its poison never multiplies back
+                 into the pool) and reads as finished via ``lane_done``,
+                 so a scheduler evicts it at the next chunk boundary.
+                 Detection is traffic-free: the detector folds over the
+                 O(L*(M+N)) frow/colsum values the convergence check
+                 already holds — the M*N tile is never rescanned.
       m_valid:   (L,) int32 valid row count of each lane's problem (0 for a
                  free lane). Everything beyond it is exact zero padding.
       n_valid:   (L,) int32 valid column count, likewise.
@@ -901,6 +922,7 @@ class LaneState:
     active: jax.Array
     m_valid: jax.Array
     n_valid: jax.Array
+    healthy: jax.Array
 
     @property
     def num_lanes(self) -> int:
@@ -910,7 +932,7 @@ class LaneState:
 jax.tree_util.register_dataclass(
     LaneState,
     data_fields=["P", "colsum", "a", "b", "frow", "iters", "converged",
-                 "active", "m_valid", "n_valid"],
+                 "active", "m_valid", "n_valid", "healthy"],
     meta_fields=[])
 
 
@@ -938,7 +960,8 @@ def make_lane_state(num_lanes: int, M: int, N: int, cfg: UOTConfig, *,
         converged=jnp.zeros((L,), bool),
         active=jnp.zeros((L,), bool),
         m_valid=jnp.zeros((L,), jnp.int32),
-        n_valid=jnp.zeros((L,), jnp.int32))
+        n_valid=jnp.zeros((L,), jnp.int32),
+        healthy=jnp.ones((L,), bool))
 
 
 def _pad_admit_payload(Mp: int, Np: int, K: jax.Array, a: jax.Array,
@@ -1011,7 +1034,8 @@ def lane_admit(state: LaneState, lane, K: jax.Array, a: jax.Array,
         converged=state.converged.at[lane].set(False),
         active=state.active.at[lane].set(True),
         m_valid=state.m_valid.at[lane].set(mv),
-        n_valid=state.n_valid.at[lane].set(nv))
+        n_valid=state.n_valid.at[lane].set(nv),
+        healthy=state.healthy.at[lane].set(True))
 
 
 @jax.jit
@@ -1032,13 +1056,17 @@ def lane_evict(state: LaneState, lane) -> LaneState:
         converged=state.converged.at[lane].set(False),
         active=state.active.at[lane].set(False),
         m_valid=state.m_valid.at[lane].set(0),
-        n_valid=state.n_valid.at[lane].set(0))
+        n_valid=state.n_valid.at[lane].set(0),
+        healthy=state.healthy.at[lane].set(True))
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters",))
 def lane_done(state: LaneState, max_iters: int) -> jax.Array:
-    """(L,) bool: lane holds a finished problem (converged or at the cap)."""
-    return state.active & (state.converged | (state.iters >= max_iters))
+    """(L,) bool: lane holds a finished problem — converged, at the cap,
+    or frozen unhealthy (a poisoned lane stops advancing the moment its
+    flag clears, so "unhealthy" is a terminal disposition too)."""
+    return state.active & (state.converged | (state.iters >= max_iters)
+                           | ~state.healthy)
 
 
 def solve_fused_stepped(state: LaneState, n_iters: int, cfg: UOTConfig, *,
@@ -1112,13 +1140,30 @@ def solve_fused_stepped_resident(state: LaneState, n_iters: int,
         st = _solve_fused_stepped_streamed(st, n_iters, cfg,
                                            interpret=interpret, impl="jnp")
         return dataclasses.replace(st, P=st.P.astype(sdt))
+    # The resident kernel predates the health flag and is kept unchanged:
+    # unhealthy lanes are gated out by feeding them in as converged (the
+    # kernel's freeze semantics are exactly the containment we want), and
+    # fresh poison is detected at CHUNK granularity from the returned
+    # frow/colsum — still O(L*(M+N)), still no M*N rescan. A lane that
+    # goes non-finite mid-chunk burns the rest of its own chunk budget
+    # before freezing (per-lane while_loops are independent, so no other
+    # lane pays anything); the streamed path detects per iteration.
     P, colsum, frow, iters, conv = uot_resident.resident_stepped(
-        state.P, state.colsum, state.frow, state.iters, state.converged,
+        state.P, state.colsum, state.frow, state.iters,
+        state.converged | ~state.healthy,
         state.active, state.a, state.b, fi=cfg.fi, n_iters=n_iters,
         num_iters=cfg.num_iters, tol=cfg.tol, interpret=interpret)
+    ran = (state.active & state.healthy & ~state.converged
+           & (state.iters < cfg.num_iters))
+    finite = (jnp.isfinite(frow).all(axis=-1)
+              & jnp.isfinite(colsum).all(axis=-1))
+    healthy = state.healthy & (finite | ~ran)
+    converged = jnp.where(state.healthy, conv > 0, state.converged)
     return LaneState(P=P, colsum=colsum, a=state.a, b=state.b, frow=frow,
-                     iters=iters, converged=conv > 0, active=state.active,
-                     m_valid=state.m_valid, n_valid=state.n_valid)
+                     iters=iters, converged=converged & healthy,
+                     active=state.active,
+                     m_valid=state.m_valid, n_valid=state.n_valid,
+                     healthy=healthy)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "cfg", "block_m",
@@ -1138,19 +1183,36 @@ def _solve_fused_stepped_streamed(state: LaneState, n_iters: int,
     fi = cfg.fi
 
     def body(_, st):
-        upd = st.active & ~st.converged & (st.iters < cfg.num_iters)
+        upd = (st.active & ~st.converged & st.healthy
+               & (st.iters < cfg.num_iters))
         P, colsum, frow = _stepped_iter(
             st.P, st.colsum, upd, ap=st.a, bp=st.b, fi=fi, sdt=sdt,
             impl=impl, bm=bm, interpret=interpret)
+        # Traffic-free lane-health detector: any NaN/Inf a lane produces
+        # must pass through its row factors or carried column sums (the
+        # safe divisions map a poisoned tile to poisoned factors before
+        # they can silently renormalize it), and both are O(L*(M+N))
+        # values this check already holds — the M*N tile is never
+        # rescanned. The flag latches False and drops the lane out of
+        # ``upd``, freezing it exactly like a converged lane: per-lane
+        # math is independent, so every other lane's iterate stays
+        # bit-identical to a fault-free pool (asserted in
+        # tests/test_faults.py). NB a frozen lane's raw frow may itself
+        # be non-finite garbage — gating on ``upd`` keeps stale poison
+        # from re-clearing anything.
+        finite = (jnp.isfinite(frow).all(axis=-1)
+                  & jnp.isfinite(colsum).all(axis=-1))
+        healthy = st.healthy & (finite | ~upd)
         conv = st.converged
         if cfg.tol is not None:
             drift = lane_factor_drift(frow, st.frow)
-            conv = conv | (upd & (drift <= cfg.tol))
-        frow = jnp.where(upd[:, None], frow, st.frow)
+            conv = conv | (upd & healthy & (drift <= cfg.tol))
+        frow = jnp.where((upd & healthy)[:, None], frow, st.frow)
         return LaneState(P=P, colsum=colsum, a=st.a, b=st.b, frow=frow,
                          iters=st.iters + upd.astype(jnp.int32),
                          converged=conv, active=st.active,
-                         m_valid=st.m_valid, n_valid=st.n_valid)
+                         m_valid=st.m_valid, n_valid=st.n_valid,
+                         healthy=healthy)
 
     return jax.lax.fori_loop(0, n_iters, body, state)
 

@@ -68,15 +68,56 @@ scheduler chunk — on-chip, one HBM read + write of the coupling instead of
 one per iteration; see ``repro.kernels.ops``'s dispatch table), larger
 ones stream.
 
+Failure model — what each tier guarantees when requests or hardware
+misbehave (tiers 3 and 4; tiers 1/2 are library calls — exceptions
+propagate to the caller, nothing is shared, nothing to contain):
+
+* **Admission** (tiers 3-4): ``submit``/``submit_points`` validate
+  marginals and config (``core.health.validate_problem`` — non-finite /
+  negative / empty marginals, shape/dtype mismatches, and the ``uv_safe``
+  scaling-space overflow bound) and raise a typed ``InvalidProblemError``
+  with the assigned rid; the refusal is recorded (telemetry
+  ``status='rejected'`` + a pollable ``RequestFailure``) so refused rids
+  still resolve. Backpressure raises ``QueueFullError``;
+  ``submit_with_retry`` is the canonical capped-exponential-backoff
+  client loop.
+* **In flight** (tiers 3-4): per-lane health flags
+  (``ops.LaneState.healthy``) fold a traffic-free non-finite detector
+  over values the chunk advance already holds; a poisoned lane is frozen
+  and quarantined at the next chunk boundary while every other lane stays
+  bit-identical to a fault-free run (per-lane independence — tested).
+* **Recovery**: tier 3 retries a quarantined request once on the
+  log-domain tier (``status='retried_ok'`` — a *different tier's* answer,
+  see the damping note in ``core.health``); tier 4 first bounces it to a
+  healthy device (bit-identical answer, ``retries=1``) and only escalates
+  on a second corruption. Unrecoverable requests end as typed
+  ``RequestFailure`` (``status='failed'``) — never an exception out of
+  ``step()``, never a poisoned neighbor.
+* **Device faults** (tier 4): a device whose every active lane goes
+  unhealthy at once is quarantined — drained, excluded from placement,
+  reported in ``stats()['device_health']``; with no healthy device left,
+  the lane queue drains through the gang path. ``gang_timeout=`` bounds
+  the gang tier's wall clock (breaches deliver + mark ``timed_out`` and
+  latch a degraded budget).
+* **Resolution invariant** (tiers 3-4): every submitted rid resolves via
+  ``poll`` to exactly one of — a coupling (``ok`` / ``retried_ok`` /
+  ``timed_out``), or a ``RequestFailure`` (``failed`` / ``rejected`` /
+  ``lost``) — property-tested under seeded fault schedules
+  (``repro.serve.faults``, tests/test_faults*.py, and the
+  ``benchmarks/bench_chaos.py`` discrete-event chaos harness).
+
 ``ServeEngine`` is the LLM-token sibling of tier 3: slot-based continuous
 batching over ``decode_step`` (the architecture ``UOTScheduler`` mirrors,
 with solver lanes in place of KV-cache slots).
 """
 from repro.serve.engine import (Request, ServeEngine, UOTBatchEngine,
                                 UOTRequest)
-from repro.serve.scheduler import (QueueFullError, RequestTelemetry,
-                                   ScheduledRequest, UOTScheduler)
+from repro.serve.scheduler import (QueueFullError, RequestFailure,
+                                   RequestTelemetry, ScheduledRequest,
+                                   UOTScheduler, submit_with_retry)
+from repro.serve import faults
 
 __all__ = ["ServeEngine", "Request", "UOTBatchEngine", "UOTRequest",
            "UOTScheduler", "ScheduledRequest", "RequestTelemetry",
-           "QueueFullError"]
+           "QueueFullError", "RequestFailure", "submit_with_retry",
+           "faults"]

@@ -1,0 +1,249 @@
+"""Seeded, composable fault injectors — the chaos side of fault containment.
+
+The schedulers' containment ladder (admission validation, lane-health
+detection, quarantine-and-retry, device quarantine — see
+``repro.serve.scheduler``'s and ``repro.cluster.scheduler``'s docstrings)
+is only trustworthy if it is *exercised*: every claim of the form "a NaN
+payload cannot poison its lane-mates" needs a test that actually submits
+NaN payloads next to healthy traffic and bit-compares the healthy answers
+against a fault-free run. This module is that traffic generator.
+
+Protocol (duck-typed; schedulers accept any object with these methods via
+their ``fault_injector=`` constructor hook):
+
+* ``on_submit(rid, K, a, b) -> (K, a, b, tag)`` — called once per
+  submission with the request's payload (``K`` is None for coordinate
+  requests); returns the possibly-mutated payload plus a fault tag
+  (``None`` = untouched). The scheduler stores the tag on the request
+  (chaos bookkeeping only — the runtime never reads it).
+* ``on_step(scheduler) -> None`` — called at the top of every scheduling
+  round with the live scheduler; may corrupt in-flight state through the
+  drill hooks (``inject_lane_fault`` / ``inject_device_fault``).
+
+Determinism contract: every per-request decision draws from a
+``numpy`` Philox stream keyed on ``(seed, rid)`` — NOT on arrival order,
+submission time, or a shared stream — so the same seed produces the same
+fault set for the same rids regardless of how the requests interleave.
+That is what lets the property test assert "any arrival order, same fault
+schedule, every rid resolves" (tests/test_faults_property.py).
+
+Injectors (compose freely with ``Compose``; first injector to tag a
+request wins, so rates are per-injector, applied in order):
+
+* ``NaNPayload`` — a NaN in the kernel matrix: passes O(M+N) admission
+  validation by design, poisons the lane at its first chunk, exercises
+  detector -> quarantine -> escalation-fails -> ``status='failed'``.
+* ``PayloadCorruption`` — a finite bit-flip-style corruption (one entry
+  scaled): solves fine, answers differ. Exercises the *bookkeeping*
+  boundary: tagged rids are excluded from bit-identity comparison; that
+  untagged rids must still match is exactly the blast-radius claim.
+* ``OverflowConfig`` — marginal mass scaled into the scaling-space
+  overflow regime: rejected at admission by the ``uv_safe`` bound
+  (finite ``reg_m``), or served by the containment ladder when the bound
+  does not apply.
+* ``StuckLane`` — the kernel sharpened (entrywise power): a genuinely
+  slow-converging problem that rides its lane to the iteration cap
+  (``status='timed_out'`` under ``tol``) instead of converging —
+  the slow-poke fault, not a numeric one.
+* ``DeviceBlackout`` — one device shard's pool state NaN'd wholesale at
+  a chosen step (cluster only; a no-op on schedulers without the hook):
+  exercises quarantine, drain-and-requeue, and placement exclusion.
+* ``LaneFault`` — seeded in-flight lane corruption of individual
+  requests (intact host payload): exercises the single-device
+  escalation path / the cluster requeue bounce.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class FaultInjector:
+    """Base injector: touches nothing. Subclass and override; schedulers
+    only need the two methods, not this class."""
+
+    def on_submit(self, rid: int, K, a, b):
+        return K, a, b, None
+
+    def on_step(self, scheduler) -> None:
+        pass
+
+
+class _SeededInjector(FaultInjector):
+    """Per-request Philox streams keyed (seed, rid); ``injected`` maps
+    rid -> tag for every request this injector actually touched."""
+
+    tag = "fault"
+
+    def __init__(self, rate: float, seed: int = 0):
+        self.rate = float(rate)
+        self.seed = int(seed)
+        self.injected: dict[int, str] = {}
+
+    def _rng(self, rid: int) -> np.random.Generator:
+        return np.random.default_rng([self.seed, rid])
+
+    def _mark(self, rid: int) -> str:
+        self.injected[rid] = self.tag
+        return self.tag
+
+
+class NaNPayload(_SeededInjector):
+    """With probability ``rate``, one kernel entry becomes NaN (dense
+    requests only — coordinate payloads have no K to poison)."""
+
+    tag = "nan_payload"
+
+    def on_submit(self, rid, K, a, b):
+        rng = self._rng(rid)
+        if K is not None and rng.random() < self.rate:
+            K = np.array(K, dtype=np.float32, copy=True)
+            K[rng.integers(K.shape[0]), rng.integers(K.shape[1])] = np.nan
+            return K, a, b, self._mark(rid)
+        return K, a, b, None
+
+
+class PayloadCorruption(_SeededInjector):
+    """With probability ``rate``, one kernel entry is scaled by
+    ``factor`` — finite, silent corruption: the request solves, the
+    answer is wrong. Tagged so harnesses exclude it from bit-identity
+    checks (and assert untagged neighbors still match)."""
+
+    tag = "corrupt_payload"
+
+    def __init__(self, rate: float, seed: int = 0, factor: float = 32.0):
+        super().__init__(rate, seed)
+        self.factor = float(factor)
+
+    def on_submit(self, rid, K, a, b):
+        rng = self._rng(rid)
+        if K is not None and rng.random() < self.rate:
+            K = np.array(K, dtype=np.float32, copy=True)
+            K[rng.integers(K.shape[0]),
+              rng.integers(K.shape[1])] *= self.factor
+            return K, a, b, self._mark(rid)
+        return K, a, b, None
+
+
+class OverflowConfig(_SeededInjector):
+    """With probability ``rate``, the row marginal's total mass is scaled
+    by ``mass_factor`` — pushing the request into the scaling-space
+    overflow regime for finite-``reg_m`` configs, where the admission
+    bound (``core.health.uv_safe``) refuses it with a typed
+    ``InvalidProblemError('uv_overflow')``."""
+
+    tag = "overflow_cfg"
+
+    def __init__(self, rate: float, seed: int = 0,
+                 mass_factor: float = 1e30):
+        super().__init__(rate, seed)
+        self.mass_factor = float(mass_factor)
+
+    def on_submit(self, rid, K, a, b):
+        rng = self._rng(rid)
+        if rng.random() < self.rate:
+            a = np.asarray(a, dtype=np.float32) * np.float32(
+                self.mass_factor)
+            return K, a, b, self._mark(rid)
+        return K, a, b, None
+
+
+class StuckLane(_SeededInjector):
+    """With probability ``rate``, the kernel is sharpened entrywise
+    (``K ** power``, clamped away from 0): a much peakier problem whose
+    factor trajectory converges far more slowly — the lane rides to the
+    iteration cap instead of converging (``status='timed_out'`` when the
+    scheduler runs with ``tol``). A *slowness* fault: all values stay
+    finite, containment must budget it, not quarantine it."""
+
+    tag = "stuck_lane"
+
+    def __init__(self, rate: float, seed: int = 0, power: float = 8.0):
+        super().__init__(rate, seed)
+        self.power = float(power)
+
+    def on_submit(self, rid, K, a, b):
+        rng = self._rng(rid)
+        if K is not None and rng.random() < self.rate:
+            K = np.asarray(K, dtype=np.float32)
+            tiny = np.float32(np.finfo(np.float32).tiny)
+            K = np.maximum(K, tiny) ** np.float32(self.power)
+            K = np.maximum(K, tiny)
+            return K, a, b, self._mark(rid)
+        return K, a, b, None
+
+
+class DeviceBlackout(FaultInjector):
+    """Black out device ``device`` once, at the first round where the
+    scheduler has taken >= ``at_step`` steps AND the device is running
+    >= ``min_active`` lanes. The busy-ness gate matters: the cluster's
+    blackout signature (quarantine) is *every* active lane on a device
+    going unhealthy at once — striking a near-idle device is
+    indistinguishable from a single lane fault and is (correctly) handled
+    per-request instead. Cluster-only: silently a no-op on schedulers
+    without an ``inject_device_fault`` hook."""
+
+    tag = "device_blackout"
+
+    def __init__(self, device: int, at_step: int = 2, min_active: int = 2):
+        self.device = int(device)
+        self.at_step = int(at_step)
+        self.min_active = int(min_active)
+        self.fired = False
+
+    def on_step(self, scheduler) -> None:
+        if (self.fired or scheduler._steps < self.at_step
+                or not hasattr(scheduler, "inject_device_fault")):
+            return
+        if scheduler._device_active(self.device) < self.min_active:
+            return
+        scheduler.inject_device_fault(self.device)
+        self.fired = True
+
+
+class LaneFault(_SeededInjector):
+    """Each round, each in-flight request's (seed, rid, step)-keyed coin
+    decides whether its lane state is corrupted in place (host payload
+    intact — the transient-device-fault model). Exercises the
+    single-device log-domain escalation and the cluster requeue bounce."""
+
+    tag = "lane_fault"
+
+    def on_step(self, scheduler) -> None:
+        for pool in scheduler._pools.values():
+            for req in list(pool.requests.values()):
+                rng = np.random.default_rng(
+                    [self.seed, req.rid, scheduler._steps])
+                # only strike once per request: a second strike would
+                # exhaust its retry budget by design, which is a
+                # scenario tests set up explicitly, not at random
+                if req.rid not in self.injected and (
+                        rng.random() < self.rate):
+                    if scheduler.inject_lane_fault(req.rid):
+                        self._mark(req.rid)
+
+
+class Compose(FaultInjector):
+    """Chain injectors; the first to tag a submission wins (rates are
+    per-injector, applied in order). ``on_step`` fans out to all.
+    ``injected`` merges the children's rid -> tag maps."""
+
+    def __init__(self, injectors):
+        self.injectors = list(injectors)
+
+    def on_submit(self, rid, K, a, b):
+        for inj in self.injectors:
+            K, a, b, tag = inj.on_submit(rid, K, a, b)
+            if tag is not None:
+                return K, a, b, tag
+        return K, a, b, None
+
+    def on_step(self, scheduler) -> None:
+        for inj in self.injectors:
+            inj.on_step(scheduler)
+
+    @property
+    def injected(self) -> dict[int, str]:
+        merged: dict[int, str] = {}
+        for inj in self.injectors:
+            merged.update(getattr(inj, "injected", {}))
+        return merged

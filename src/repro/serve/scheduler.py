@@ -30,11 +30,44 @@ tests/test_scheduler.py asserts this property for both impls.
 
 Telemetry: every completed request carries a ``RequestTelemetry`` (wait
 time, solve iterations, lane, converged-vs-cap, deadline + whether it was
-missed, shed disposition), ``occupancy_log`` snapshots lane utilization
-and the running deadline-miss total per step, and ``stats()`` reports
+missed, shed disposition, terminal ``status`` + retry count),
+``occupancy_log`` snapshots lane utilization and the running
+deadline-miss total per step, and ``stats()`` reports
 ``deadline_misses`` / ``miss_rate`` / ``shed_dropped`` / ``shed_degraded``
 — the inputs for the latency/occupancy/miss numbers in
 ``benchmarks/bench_serve.py``.
+
+Fault containment (the robustness contract; see ``repro.serve``'s
+"Failure model" section for the tier-by-tier story):
+
+* **admission** — ``submit``/``submit_points`` run
+  ``core.health.validate_problem`` (``validate=True``): non-finite /
+  negative / empty marginals, shape/dtype mismatches, and
+  overflow-regime ``(cfg, a, b)`` combinations (the ``uv_safe``
+  amplification bound) raise a typed ``InvalidProblemError`` carrying
+  the assigned rid — the request is refused with telemetry
+  (``status='rejected'``) instead of poisoning a shared lane.
+* **in flight** — the stepped advance's lane-health detector
+  (``ops.LaneState.healthy``) freezes a lane whose factors/colsums go
+  non-finite; eviction sees the flag (and double-checks the evicted
+  coupling slice host-side, which also catches poison landing after the
+  convergence latch) and quarantines the request. Every OTHER lane is
+  bit-identical to a fault-free pool — per-lane math is independent.
+* **escalation** — a quarantined request is retried ONCE on
+  ``sinkhorn_uot_log`` via ``core.health.escalate_log_solve`` (the
+  numerically robust tier, escalated iteration budget). A finite
+  escalated coupling completes the request with ``status='retried_ok'``;
+  anything else is a typed ``RequestFailure`` (``status='failed'``).
+* **resolution** — ``poll`` resolves EVERY submitted rid exactly once:
+  the coupling, or a ``RequestFailure``
+  (failed / rejected / lost-to-the-result-bound), or None only while
+  genuinely pending. A convergence-wanting request that hit
+  ``cfg.num_iters`` still returns its capped coupling but is recorded
+  ``status='timed_out'``.
+* **chaos hook** — ``fault_injector=`` (see ``repro.serve.faults``)
+  mutates payloads at submit and may corrupt lane state between steps;
+  it exists so the containment above is *tested* under seeded fault
+  schedules, not assumed.
 
 Deadline-aware shedding (``shed_policy``): a request whose deadline has
 already passed when it reaches admission cannot meet it no matter what —
@@ -71,12 +104,65 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.problem import UOTConfig
+from repro.core.health import (InvalidProblemError, escalate_log_solve,
+                               validate_problem)
 from repro.geometry import PointCloudGeometry
 from repro.kernels import ops
 
 
 class QueueFullError(RuntimeError):
     """Raised by submit() when the waiting queue is at max_queue."""
+
+
+def submit_with_retry(scheduler, *args, attempts: int = 6,
+                      base_delay: float = 0.05, max_delay: float = 2.0,
+                      seed: int = 0, sleep: Callable[[float], None] = None,
+                      submit: Callable | None = None, **kwargs) -> int:
+    """Client-side backpressure helper: ``scheduler.submit(*args,
+    **kwargs)`` with capped exponential backoff on ``QueueFullError``.
+
+    The docstring advice "the caller sheds load or retries later" made
+    concrete: up to ``attempts`` tries, sleeping
+    ``min(max_delay, base_delay * 2**i) * (0.5 + 0.5 * jitter)`` between
+    them — deterministic jitter from ``seed`` (``numpy`` Philox, no global
+    RNG state), so a fleet of callers configured with distinct seeds
+    decorrelates its retry storms *reproducibly*. After the last failed
+    attempt the final ``QueueFullError`` propagates (give-up semantics:
+    the caller learns the queue never drained; nothing is silently
+    dropped). ``submit=`` overrides the bound method (e.g.
+    ``scheduler.submit_points``); ``sleep=`` is injectable for tests and
+    simulated clocks. Validation errors (``InvalidProblemError``) are NOT
+    retried — a refused problem stays refused.
+    """
+    if sleep is None:
+        sleep = time.sleep
+    fn = submit if submit is not None else scheduler.submit
+    rng = np.random.default_rng(seed)
+    for attempt in range(attempts):
+        try:
+            return fn(*args, **kwargs)
+        except QueueFullError:
+            if attempt == attempts - 1:
+                raise
+            delay = min(max_delay, base_delay * (2.0 ** attempt))
+            sleep(delay * (0.5 + 0.5 * float(rng.random())))
+    raise AssertionError("unreachable")  # pragma: no cover
+
+
+@dataclasses.dataclass
+class RequestFailure:
+    """The typed terminal disposition ``poll`` returns when a request did
+    not end in a usable coupling: ``status`` is ``'failed'`` (poisoned in
+    flight, escalation also failed), ``'rejected'`` (refused at admission
+    or shed-dropped), or ``'lost'`` (completed fine, but the bounded
+    result store evicted the coupling before it was polled — the answer
+    is gone, the *disposition* is not). ``reason`` is human-readable;
+    ``retries`` counts escalation attempts spent."""
+
+    rid: int
+    status: str
+    reason: str
+    retries: int = 0
 
 
 @dataclasses.dataclass
@@ -109,6 +195,10 @@ class ScheduledRequest:
     max_iters: int | None = None    # reduced budget for degraded requests
     shed: str | None = None         # None | 'degraded' ('dropped' never
     #                                 occupies a lane, only telemetry)
+    # fault-containment state
+    retries: int = 0                # escalation/requeue attempts spent
+    fault: str | None = None        # injector tag (chaos bookkeeping only;
+    #                                 the runtime never reads it)
 
     def edf_key(self):
         """Earliest-deadline-first with priority then FIFO tie-breaks."""
@@ -130,6 +220,12 @@ class RequestTelemetry:
     converged: bool             # False = hit the num_iters cap
     deadline: float | None = None   # the request's absolute deadline
     shed: str | None = None     # 'dropped' / 'degraded' / None
+    # terminal disposition: 'ok' | 'retried_ok' (completed on the
+    # log-domain escalation tier) | 'timed_out' (capped, coupling still
+    # delivered) | 'failed' (typed failure) | 'rejected' (refused at
+    # admission / shed-dropped)
+    status: str = "ok"
+    retries: int = 0            # escalation attempts spent
 
     @property
     def wait(self) -> float:
@@ -205,6 +301,8 @@ class UOTScheduler:
                  max_results: int = 256, pool_idle_ttl: int | None = 100,
                  shed_policy: str = "none",
                  degrade_iters: int | None = None,
+                 validate: bool = True, retry_escalate: bool = True,
+                 escalate_factor: int = 2, fault_injector=None,
                  clock: Callable[[], float] = time.monotonic):
         if lanes_per_pool < 1:
             raise ValueError("lanes_per_pool must be >= 1")
@@ -237,12 +335,29 @@ class UOTScheduler:
         self.shed_policy = shed_policy
         self.degrade_iters = (chunk_iters if degrade_iters is None
                               else degrade_iters)
+        # Fault containment: ``validate`` gates the typed admission checks
+        # (``core.health.validate_problem``); ``retry_escalate`` gates the
+        # one-shot log-domain retry of quarantined (unhealthy-evicted)
+        # requests, with ``escalate_factor`` scaling the escalated
+        # iteration budget; ``fault_injector`` is the chaos hook
+        # (``repro.serve.faults``) — None in production.
+        self.validate = validate
+        self.retry_escalate = retry_escalate
+        self.escalate_factor = escalate_factor
+        self.fault_injector = fault_injector
         self.clock = clock
 
         self._queue: list[ScheduledRequest] = []
         self._pools: dict[tuple[int, int], _LanePool] = {}
         self._next_rid = 0
         self._results: dict[int, np.ndarray] = {}
+        # rid -> RequestFailure: the terminal dispositions of requests
+        # that did NOT end in a polled coupling. Kept separate from (and
+        # much smaller than) the coupling store so the ``max_results``
+        # bound can never erase the *fact* of a failure — only couplings
+        # are size-bounded, and a coupling evicted un-polled leaves a
+        # 'lost' tombstone here. Trimmed FIFO at ``max_log``.
+        self._dispositions: dict[int, RequestFailure] = {}
         self._steps = 0
         self.request_log: list[RequestTelemetry] = []
         self.occupancy_log: list[dict] = []
@@ -253,8 +368,34 @@ class UOTScheduler:
         self._deadlined_completed = 0
         self._shed_dropped = 0
         self._shed_degraded = 0
+        # Running fault-containment totals (exact, survive log trimming)
+        self._rejected = 0
+        self._failed = 0
+        self._retried_ok = 0
+        self._timed_out = 0
+        self._unhealthy_evictions = 0
+        self._lost_results = 0
 
     # ---- submission -------------------------------------------------------
+
+    def _reject(self, rid: int, bucket, deadline, err: InvalidProblemError,
+                now: float) -> None:
+        """Record a refused admission: telemetry + a typed disposition so
+        ``poll(rid)`` resolves the rid instead of returning pending-forever,
+        then re-raise with the rid attached."""
+        self._rejected += 1
+        self.request_log.append(RequestTelemetry(
+            rid=rid, bucket=bucket, lane=-1, arrival=now, admitted=now,
+            completed=now, iters=0, converged=False, deadline=deadline,
+            status="rejected"))
+        self._store_disposition(RequestFailure(
+            rid=rid, status="rejected", reason=f"{err.reason}: {err}"))
+        raise err
+
+    def _store_disposition(self, failure: RequestFailure) -> None:
+        self._dispositions[failure.rid] = failure
+        while len(self._dispositions) > self.max_log:
+            self._dispositions.pop(next(iter(self._dispositions)))
 
     def submit(self, K, a, b, *, deadline: float | None = None,
                priority: int = 0) -> int:
@@ -262,19 +403,35 @@ class UOTScheduler:
 
         Raises ``QueueFullError`` when ``max_queue`` requests are already
         waiting (in-flight lanes don't count) — the caller sheds load or
-        retries later instead of the queue growing without bound.
+        retries later instead of the queue growing without bound (see
+        ``submit_with_retry`` for the canonical retry loop). Raises
+        ``InvalidProblemError`` (rid attached, telemetry recorded,
+        ``poll(rid)`` resolves to the typed failure) for problems the
+        admission validator refuses — see the module docstring's fault
+        containment notes.
         """
         if len(self._queue) >= self.max_queue:
             raise QueueFullError(
                 f"queue at max_queue={self.max_queue}; retry later")
         K = np.asarray(K)
-        M, N = K.shape
+        a = np.asarray(a)
+        b = np.asarray(b)
         rid = self._next_rid
         self._next_rid += 1
+        fault = None
+        if self.fault_injector is not None:
+            K, a, b, fault = self.fault_injector.on_submit(rid, K, a, b)
+        M, N = K.shape
+        bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
+        now = self.clock()
+        if self.validate:
+            try:
+                validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
+            except InvalidProblemError as err:
+                self._reject(rid, bucket, deadline, err, now)
         self._queue.append(ScheduledRequest(
-            rid=rid, K=K, a=np.asarray(a), b=np.asarray(b), shape=(M, N),
-            bucket=ops.bucket_shape(M, N, self.m_bucket, self.n_bucket),
-            arrival=self.clock(), deadline=deadline, priority=priority))
+            rid=rid, K=K, a=a, b=b, shape=(M, N), bucket=bucket,
+            arrival=now, deadline=deadline, priority=priority, fault=fault))
         return rid
 
     def submit_points(self, x, y, a, b, *, scale: float = 1.0,
@@ -300,14 +457,25 @@ class UOTScheduler:
         # geometry's kernel() (see repro.geometry.pointcloud rule 1)
         g = PointCloudGeometry.from_points(x, y, scale=scale)
         M, N = g.shape
+        a = np.asarray(a)
+        b = np.asarray(b)
         rid = self._next_rid
         self._next_rid += 1
+        fault = None
+        if self.fault_injector is not None:
+            _, a, b, fault = self.fault_injector.on_submit(rid, None, a, b)
+        bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
+        now = self.clock()
+        if self.validate:
+            try:
+                validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
+            except InvalidProblemError as err:
+                self._reject(rid, bucket, deadline, err, now)
         self._queue.append(ScheduledRequest(
-            rid=rid, K=None, a=np.asarray(a), b=np.asarray(b), shape=(M, N),
-            bucket=ops.bucket_shape(M, N, self.m_bucket, self.n_bucket),
-            arrival=self.clock(), deadline=deadline, priority=priority,
+            rid=rid, K=None, a=a, b=b, shape=(M, N), bucket=bucket,
+            arrival=now, deadline=deadline, priority=priority,
             x=np.asarray(g.x), y=np.asarray(g.y), xn=np.asarray(g.xn),
-            yn=np.asarray(g.yn), scale=float(scale)))
+            yn=np.asarray(g.yn), scale=float(scale), fault=fault))
         return rid
 
     @property
@@ -321,12 +489,19 @@ class UOTScheduler:
         return sum(len(p.requests) for p in self._pools.values())
 
     def poll(self, rid: int):
-        """The finished coupling for ``rid``, or None if still in progress.
+        """The terminal disposition of ``rid``: the finished coupling, a
+        ``RequestFailure`` (failed / rejected / lost), or None only while
+        the request is genuinely pending. Nothing vanishes: every
+        submitted rid eventually resolves to exactly one non-None value
+        (property-tested under fault injection).
 
         Take semantics: a result is handed out exactly once and then
         dropped, so an uncollected backlog cannot grow without bound.
         """
-        return self._results.pop(rid, None)
+        out = self._results.pop(rid, None)
+        if out is not None:
+            return out
+        return self._dispositions.pop(rid, None)
 
     # ---- the scheduling loop ---------------------------------------------
 
@@ -339,6 +514,8 @@ class UOTScheduler:
         so freshly-freed lanes are immediately reusable — the continuous
         part of continuous batching.
         """
+        if self.fault_injector is not None:
+            self.fault_injector.on_step(self)
         completed = self._evict_finished()
         self._admit_queued()
         for bucket, pool in list(self._pools.items()):
@@ -372,6 +549,50 @@ class UOTScheduler:
 
     # ---- internals --------------------------------------------------------
 
+    def _request_kernel(self, req: ScheduledRequest) -> np.ndarray:
+        """The request's (M, N) coupling matrix for an off-lane re-solve:
+        the stored payload for dense requests, the geometry's Gibbs mirror
+        for coordinate requests."""
+        if req.K is not None:
+            return req.K
+        g = PointCloudGeometry(
+            x=jnp.asarray(req.x), y=jnp.asarray(req.y),
+            xn=jnp.asarray(req.xn), yn=jnp.asarray(req.yn),
+            scale=req.scale)
+        return np.asarray(g.kernel(self.cfg.reg))
+
+    def _escalate(self, req: ScheduledRequest):
+        """One log-domain retry of a quarantined request. Returns
+        ``(P or None, iters)`` — P non-None iff the escalated solve
+        produced an all-finite coupling. The retry runs synchronously at
+        eviction (the robust tier is the slow path; a poisoned request is
+        rare by construction, so blocking the round is the simple-and-
+        correct choice — noted in ROADMAP as a possible async follow-up).
+        """
+        if not self.retry_escalate or req.retries >= 1:
+            return None, 0
+        req.retries += 1
+        P, stats, ok = escalate_log_solve(
+            self._request_kernel(req), req.a, req.b, self.cfg,
+            factor=self.escalate_factor)
+        return (P if ok else None), stats["iters"]
+
+    def _trim_results(self) -> None:
+        # the poll pickup store is bounded (oldest dropped) —
+        # step()/run() return values are the primary delivery. An
+        # un-polled coupling that falls off the bound leaves a 'lost'
+        # tombstone so the client can still distinguish "pending" from
+        # "gone" (the disposition store is O(1) per request, not O(M*N),
+        # so IT is not what the bound protects).
+        while len(self._results) > self.max_results:
+            old = next(iter(self._results))
+            self._results.pop(old)
+            self._lost_results += 1
+            self._store_disposition(RequestFailure(
+                rid=old, status="lost",
+                reason="coupling evicted from the bounded result store "
+                       "(max_results) before it was polled"))
+
     def _evict_finished(self) -> dict[int, np.ndarray]:
         completed: dict[int, np.ndarray] = {}
         now = self.clock()
@@ -380,37 +601,68 @@ class UOTScheduler:
                 continue
             iters = np.asarray(pool.state.iters)
             conv = np.asarray(pool.state.converged)
+            healthy = np.asarray(pool.state.healthy)
             # a degraded request finishes at its reduced budget, not the
             # global cap (the budget is enforced at chunk granularity —
-            # the device gate still runs lanes toward cfg.num_iters)
+            # the device gate still runs lanes toward cfg.num_iters); an
+            # unhealthy lane is finished the moment its flag clears
             finished = [
                 l for l, req in list(pool.requests.items())
-                if conv[l] or iters[l] >= (req.max_iters
-                                           if req.max_iters is not None
-                                           else self.cfg.num_iters)]
+                if not healthy[l] or conv[l] or iters[l] >= (
+                    req.max_iters if req.max_iters is not None
+                    else self.cfg.num_iters)]
             if not finished:
                 continue
             for lane in finished:
                 req = pool.requests.pop(lane)
+                admitted = pool.admitted_at.pop(lane)
                 M, N = req.shape
-                # slice per lane on device (one jit signature per lane index)
-                # so only the finished lane crosses to the host, then trim to
-                # the request shape in numpy — not the whole pool, no
-                # per-(lane, shape) compile jitter, and a copy so the
-                # retained result doesn't pin the padded lane buffer
-                P = np.asarray(pool.state.P[lane])[:M, :N].copy()
-                completed[req.rid] = self._results[req.rid] = P
-                # the poll pickup store is bounded (oldest dropped) —
-                # step()/run() return values are the primary delivery
-                while len(self._results) > self.max_results:
-                    self._results.pop(next(iter(self._results)))
+                P = None
+                if healthy[lane]:
+                    # slice per lane on device (one jit signature per lane
+                    # index) so only the finished lane crosses to the
+                    # host, then trim to the request shape in numpy — not
+                    # the whole pool, no per-(lane, shape) compile jitter,
+                    # and a copy so the retained result doesn't pin the
+                    # padded lane buffer
+                    P = np.asarray(pool.state.P[lane])[:M, :N].copy()
+                    # second line of defense, O(M*N) on the one evicted
+                    # slice only: poison that lands AFTER the convergence
+                    # latch froze the lane (e.g. injected state
+                    # corruption) never passes through the detector's
+                    # frow/colsum window — catch it on the way out
+                    if not np.all(np.isfinite(P)):
+                        P = None
+                n_iters = int(iters[lane])
+                if P is not None:
+                    timed_out = (self.cfg.tol is not None
+                                 and not conv[lane]
+                                 and req.max_iters is None)
+                    status = "timed_out" if timed_out else "ok"
+                    self._timed_out += timed_out
+                else:
+                    self._unhealthy_evictions += 1
+                    P, n_iters = self._escalate(req)
+                    status = "retried_ok" if P is not None else "failed"
+                if P is not None:
+                    if status == "retried_ok":
+                        self._retried_ok += 1
+                    completed[req.rid] = self._results[req.rid] = P
+                    self._trim_results()
+                else:
+                    self._failed += 1
+                    self._store_disposition(RequestFailure(
+                        rid=req.rid, status="failed",
+                        reason="lane state went non-finite and the "
+                               "log-domain escalation did not recover",
+                        retries=req.retries))
                 rec = RequestTelemetry(
                     rid=req.rid, bucket=pool.bucket, lane=lane,
-                    arrival=req.arrival,
-                    admitted=pool.admitted_at.pop(lane),
-                    completed=now, iters=int(iters[lane]),
-                    converged=bool(conv[lane]), deadline=req.deadline,
-                    shed=req.shed)
+                    arrival=req.arrival, admitted=admitted,
+                    completed=now, iters=n_iters,
+                    converged=bool(conv[lane] & healthy[lane]),
+                    deadline=req.deadline, shed=req.shed,
+                    status=status, retries=req.retries)
                 if rec.deadline is not None:
                     self._deadlined_completed += 1
                     self._deadline_misses += rec.missed
@@ -418,12 +670,34 @@ class UOTScheduler:
             # one pool update for the whole round's evictions; the index
             # vector is padded to the pool size with duplicates (same
             # zeroing either way) so there is ONE jit signature per pool,
-            # not one per eviction count
+            # not one per eviction count — and eviction's zeroing is also
+            # what scrubs a poisoned lane's NaNs out of the pool
             lanes = finished + [finished[-1]] * (pool.num_lanes
                                                  - len(finished))
             pool.state = ops.lane_evict(pool.state,
                                         jnp.asarray(lanes, jnp.int32))
         return completed
+
+    def inject_lane_fault(self, rid: int) -> bool:
+        """Chaos/drill hook: corrupt the in-flight lane currently holding
+        ``rid`` with NaN state (tile + factors), simulating device-memory
+        poisoning mid-solve — the host-side payload stays intact, so the
+        quarantine-and-retry path can recover the request on the
+        log-domain tier (``status='retried_ok'``). Returns False when the
+        rid is not in a lane (queued / already finished). Test
+        infrastructure — never called by the serving loop itself."""
+        for pool in self._pools.values():
+            for lane, req in pool.requests.items():
+                if req.rid == rid:
+                    st = pool.state
+                    pool.state = dataclasses.replace(
+                        st,
+                        P=st.P.at[lane].set(
+                            jnp.asarray(jnp.nan, st.P.dtype)),
+                        colsum=st.colsum.at[lane].set(jnp.nan),
+                        frow=st.frow.at[lane].set(jnp.nan))
+                    return True
+        return False
 
     def _shed_at_admission(self, req: ScheduledRequest, now: float) -> bool:
         """Apply the shed policy to a request whose deadline already
@@ -433,11 +707,18 @@ class UOTScheduler:
             return False
         if self.shed_policy == "drop":
             self._shed_dropped += 1
+            self._rejected += 1
             self.request_log.append(RequestTelemetry(
                 rid=req.rid, bucket=req.bucket, lane=-1,
                 arrival=req.arrival, admitted=now, completed=now,
                 iters=0, converged=False, deadline=req.deadline,
-                shed="dropped"))
+                shed="dropped", status="rejected"))
+            # a dropped request must still resolve at poll() — 'rejected'
+            # disposition, never silently absent
+            self._store_disposition(RequestFailure(
+                rid=req.rid, status="rejected",
+                reason="deadline already passed at admission "
+                       "(shed_policy='drop')"))
             return True
         self._shed_degraded += 1          # 'degrade'
         req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
@@ -572,11 +853,23 @@ class UOTScheduler:
             # degrade: admitted with the reduced iteration budget)
             "shed_dropped": self._shed_dropped,
             "shed_degraded": self._shed_degraded,
+            # running fault-containment totals (exact; survive trimming)
+            "rejected": self._rejected,
+            "failed": self._failed,
+            "retried_ok": self._retried_ok,
+            "timed_out": self._timed_out,
+            "unhealthy_evictions": self._unhealthy_evictions,
+            "lost_results": self._lost_results,
         }
-        # dropped requests never solved anything: they appear in the log
-        # (shed='dropped', lane=-1) but are excluded from the latency /
-        # iteration aggregates, which describe served work
-        served = [t for t in self.request_log if t.shed != "dropped"]
+        status_counts: dict[str, int] = {}
+        for t in self.request_log:
+            status_counts[t.status] = status_counts.get(t.status, 0) + 1
+        misses["status_counts"] = status_counts
+        # dropped and admission-rejected requests never solved anything:
+        # they appear in the log (lane=-1) but are excluded from the
+        # latency / iteration aggregates, which describe served work
+        served = [t for t in self.request_log
+                  if t.shed != "dropped" and t.status != "rejected"]
         if not served:
             return {"completed": 0, "steps": self._steps, "wait_mean": 0.0,
                     "wait_p99": 0.0, "latency_p50": 0.0, "latency_p99": 0.0,

@@ -1,0 +1,530 @@
+"""Fault containment: admission validation, lane health, quarantine-and-
+retry, device quarantine, and the chaos injectors.
+
+The load-bearing claims, each tested against a fault-free oracle run:
+
+1. blast radius — a poisoned request never changes any OTHER request's
+   answer: healthy couplings are bit-identical to the fault-free run;
+2. resolution — every submitted rid resolves via ``poll`` to exactly one
+   coupling or typed ``RequestFailure``, never silently vanishes;
+3. detection — non-finite lane state is flagged by the in-flight detector
+   (both advance impls) and frozen, not propagated.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (InvalidProblemError, UOTConfig, escalate_log_solve,
+                        escalation_config, uv_safe, validate_problem)
+from repro.cluster import ClusterScheduler
+from repro.kernels import ops
+from repro.serve import (QueueFullError, RequestFailure, UOTScheduler,
+                         faults, submit_with_retry)
+
+IMPLS = ["jnp", "kernel"]
+
+from benchmarks.common import make_problem as _common_problem
+
+
+def make_problem(m, n, seed, peak=1.0, reg=0.1):
+    return _common_problem(m, n, reg=reg, seed=seed, peak=peak)
+
+
+CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=60, tol=1e-5)
+
+
+def _sched(**kw):
+    kw.setdefault("lanes_per_pool", 4)
+    kw.setdefault("chunk_iters", 6)
+    kw.setdefault("m_bucket", 32)
+    kw.setdefault("impl", "jnp")
+    return UOTScheduler(CFG, **kw)
+
+
+def _cluster(**kw):
+    kw.setdefault("num_devices", 2)
+    kw.setdefault("lanes_per_device", 4)
+    kw.setdefault("chunk_iters", 6)
+    kw.setdefault("m_bucket", 32)
+    kw.setdefault("impl", "jnp")
+    return ClusterScheduler(CFG, **kw)
+
+
+class TestAdmissionValidation:
+    def test_reasons(self):
+        a = np.ones(8, np.float32)
+        b = np.ones(12, np.float32)
+        cases = [
+            (dict(a=np.ones((8, 1), np.float32)), "shape"),
+            (dict(a=np.ones(8, np.int32)), "dtype"),
+            (dict(a=np.r_[a[:-1], np.nan].astype(np.float32)),
+             "non_finite"),
+            (dict(a=np.r_[a[:-1], -1.0].astype(np.float32)), "negative"),
+            (dict(a=np.zeros(8, np.float32)), "empty"),
+            (dict(b=np.ones(5, np.float32)), "shape"),
+        ]
+        for override, reason in cases:
+            kw = dict(a=a, b=b)
+            kw.update(override)
+            with pytest.raises(InvalidProblemError) as ei:
+                validate_problem(CFG, kw["a"], kw["b"], shape=(8, 12),
+                                 rid=7)
+            assert ei.value.reason == reason
+            assert ei.value.rid == 7
+        validate_problem(CFG, a, b, shape=(8, 12))   # clean passes
+
+    def test_uv_safe_bound(self):
+        a = np.ones(8, np.float32)
+        b = np.ones(8, np.float32)
+        assert uv_safe(CFG, a, b)
+        # balanced problems have no amplification mode at ANY mass ratio
+        bal = dataclasses.replace(CFG, reg_m=float("inf"))
+        assert uv_safe(bal, a * 1e30, b)
+        # unbalanced + huge mass imbalance -> overflow regime
+        hot = UOTConfig(reg=0.001, reg_m=10.0, num_iters=10)
+        assert not uv_safe(hot, a * 1e30, b)
+        with pytest.raises(InvalidProblemError) as ei:
+            validate_problem(hot, a * 1e30, b)
+        assert ei.value.reason == "uv_overflow"
+
+    def test_escalation_config_and_solve(self):
+        ecfg = escalation_config(CFG, factor=3)
+        assert ecfg.num_iters == 3 * CFG.num_iters
+        K, a, b = make_problem(8, 12, 0)
+        P, stats, ok = escalate_log_solve(K, a, b, CFG)
+        assert ok and np.all(np.isfinite(P)) and P.shape == (8, 12)
+        Kn = np.asarray(K).copy()
+        Kn[2, 3] = np.nan          # poison must stay poisonous
+        _, _, ok_bad = escalate_log_solve(Kn, a, b, CFG)
+        assert not ok_bad
+
+
+class TestLaneHealthDetector:
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_poisoned_lane_frozen_others_bit_identical(self, impl):
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=24, tol=1e-6)
+        probs = [make_problem(16, 48, s) for s in range(4)]
+        clean = ops.make_lane_state(4, 32, 64, cfg)
+        dirty = ops.make_lane_state(4, 32, 64, cfg)
+        for i, (K, a, b) in enumerate(probs):
+            clean = ops.lane_admit(clean, jnp.int32(i), K, a, b)
+            if i == 2:
+                Kn = np.asarray(K).copy()
+                Kn[3, 7] = np.nan
+                K = jnp.asarray(Kn)
+            dirty = ops.lane_admit(dirty, jnp.int32(i), K, a, b)
+        for _ in range(4):
+            clean = ops.solve_fused_stepped(clean, 6, cfg, interpret=True,
+                                            impl=impl)
+            dirty = ops.solve_fused_stepped(dirty, 6, cfg, interpret=True,
+                                            impl=impl)
+        healthy = np.asarray(dirty.healthy)
+        assert healthy.tolist() == [True, True, False, True]
+        # frozen at detection (inside the first chunk), done
+        assert int(dirty.iters[2]) <= 6
+        assert bool(ops.lane_done(dirty, cfg.num_iters)[2])
+        assert np.asarray(clean.healthy).all()
+        for i in (0, 1, 3):
+            assert np.array_equal(np.asarray(clean.P[i]),
+                                  np.asarray(dirty.P[i])), i
+
+    def test_eviction_resets_health(self):
+        cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=12)
+        K, a, b = make_problem(16, 48, 0)
+        Kn = np.asarray(K).copy()
+        Kn[0, 0] = np.inf
+        st = ops.make_lane_state(2, 32, 64, cfg)
+        st = ops.lane_admit(st, jnp.int32(0), jnp.asarray(Kn), a, b)
+        st = ops.solve_fused_stepped(st, 4, cfg, impl="jnp")
+        assert not bool(st.healthy[0])
+        st = ops.lane_evict(st, jnp.int32(0))
+        assert bool(st.healthy[0])
+        # the scrubbed lane serves a fresh problem cleanly
+        st = ops.lane_admit(st, jnp.int32(0), K, a, b)
+        st = ops.solve_fused_stepped(st, cfg.num_iters, cfg, impl="jnp")
+        assert bool(st.healthy[0])
+        assert np.all(np.isfinite(np.asarray(st.P[0])))
+
+
+class TestSchedulerContainment:
+    def _oracle(self, probs):
+        s = _sched()
+        rids = [s.submit(*p) for p in probs]
+        return rids, s.run()
+
+    def test_rejection_resolves_and_takes_once(self):
+        s = _sched()
+        K, a, b = make_problem(8, 40, 1)
+        bad_a = np.asarray(a).copy()
+        bad_a[0] = np.nan
+        with pytest.raises(InvalidProblemError) as ei:
+            s.submit(K, bad_a, b)
+        rid = ei.value.rid
+        rec = {t.rid: t for t in s.request_log}[rid]
+        assert rec.status == "rejected" and rec.lane == -1
+        failure = s.poll(rid)
+        assert isinstance(failure, RequestFailure)
+        assert failure.status == "rejected"
+        assert s.poll(rid) is None
+        assert s.stats()["rejected"] == 1
+
+    def test_nan_payload_fails_neighbors_unharmed(self):
+        probs = [make_problem(16, 48, s) for s in range(5)]
+        rids0, res0 = self._oracle(probs)
+        s = _sched()
+        K, a, b = probs[2]
+        Kn = np.asarray(K).copy()
+        Kn[1, 2] = np.nan
+        rids = []
+        for i, p in enumerate(probs):
+            rids.append(s.submit(Kn, a, b) if i == 2 else s.submit(*p))
+        res = s.run()
+        bad = rids[2]
+        assert bad not in res
+        failure = s.poll(bad)
+        assert isinstance(failure, RequestFailure)
+        assert failure.status == "failed" and failure.retries == 1
+        for i, r in enumerate(rids):
+            if i != 2:
+                assert np.array_equal(res[r], res0[rids0[i]]), i
+        st = s.stats()
+        assert st["failed"] == 1 and st["unhealthy_evictions"] == 1
+
+    def test_lane_fault_escalates_retried_ok(self):
+        probs = [make_problem(16, 48, s) for s in range(5)]
+        rids0, res0 = self._oracle(probs)
+        s = _sched()
+        rids = [s.submit(*p) for p in probs]
+        s.step()
+        assert s.inject_lane_fault(rids[1])
+        res = s.run()
+        assert set(res) == set(rids)
+        rec = {t.rid: t for t in s.request_log}[rids[1]]
+        assert rec.status == "retried_ok" and rec.retries == 1
+        assert np.all(np.isfinite(res[rids[1]]))
+        for i, r in enumerate(rids):
+            if i != 1:
+                assert np.array_equal(res[r], res0[rids0[i]]), i
+        assert s.stats()["retried_ok"] == 1
+
+    def test_timed_out_status_on_cap(self):
+        s = UOTScheduler(UOTConfig(reg=0.1, reg_m=1.0, num_iters=6,
+                                   tol=1e-12),
+                         lanes_per_pool=2, chunk_iters=6, m_bucket=32,
+                         impl="jnp")
+        K, a, b = make_problem(16, 48, 0, peak=8.0)
+        rid = s.submit(K, a, b)
+        res = s.run()
+        assert rid in res                      # capped coupling delivered
+        rec = {t.rid: t for t in s.request_log}[rid]
+        assert rec.status == "timed_out" and not rec.converged
+        assert s.stats()["timed_out"] == 1
+
+    def test_bounded_results_leave_lost_tombstones(self):
+        probs = [make_problem(16, 48, s) for s in range(6)]
+        s = _sched(max_results=2)
+        rids = [s.submit(*p) for p in probs]
+        s.run()
+        lost, kept = [], []
+        for r in rids:
+            out = s.poll(r)
+            assert out is not None             # resolution invariant
+            (lost if isinstance(out, RequestFailure) else kept).append(r)
+        assert len(kept) == 2 and len(lost) == 4
+        assert all(s.poll(r) is None for r in rids)   # take-once
+        assert s.stats()["lost_results"] == 4
+
+    def test_shed_drop_resolves_as_rejected(self):
+        t = [10.0]
+        s = UOTScheduler(CFG, lanes_per_pool=2, chunk_iters=4,
+                         m_bucket=32, impl="jnp", shed_policy="drop",
+                         clock=lambda: t[0])
+        K, a, b = make_problem(16, 48, 0)
+        dead = s.submit(K, a, b, deadline=9.0)
+        s.run()
+        failure = s.poll(dead)
+        assert isinstance(failure, RequestFailure)
+        assert failure.status == "rejected"
+
+
+class TestSubmitWithRetry:
+    def test_gives_up_after_attempts(self):
+        s = _sched(max_queue=1)
+        K, a, b = make_problem(8, 40, 0)
+        s.submit(K, a, b)
+        sleeps = []
+        with pytest.raises(QueueFullError):
+            submit_with_retry(s, K, a, b, attempts=4, base_delay=0.1,
+                              max_delay=0.3, sleep=sleeps.append)
+        assert len(sleeps) == 3                # no sleep after final try
+        # capped exponential envelope with jitter in [0.5, 1.0)
+        for i, d in enumerate(sleeps):
+            hi = min(0.3, 0.1 * 2 ** i)
+            assert 0.5 * hi <= d < hi
+
+    def test_deterministic_jitter(self):
+        s1 = _sched(max_queue=1)
+        s2 = _sched(max_queue=1)
+        K, a, b = make_problem(8, 40, 0)
+        s1.submit(K, a, b)
+        s2.submit(K, a, b)
+        d1, d2 = [], []
+        with pytest.raises(QueueFullError):
+            submit_with_retry(s1, K, a, b, attempts=3, seed=5,
+                              sleep=d1.append)
+        with pytest.raises(QueueFullError):
+            submit_with_retry(s2, K, a, b, attempts=3, seed=5,
+                              sleep=d2.append)
+        assert d1 == d2
+
+    def test_succeeds_when_queue_drains(self):
+        calls = {"n": 0}
+
+        def flaky(*args, **kw):
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise QueueFullError("full")
+            return 42
+
+        out = submit_with_retry(None, "x", attempts=5, sleep=lambda d: None,
+                                submit=flaky)
+        assert out == 42 and calls["n"] == 3
+
+    def test_invalid_problem_not_retried(self):
+        s = _sched()
+        K, a, b = make_problem(8, 40, 0)
+        bad_a = np.asarray(a).copy()
+        bad_a[0] = -1.0
+        sleeps = []
+        with pytest.raises(InvalidProblemError):
+            submit_with_retry(s, K, bad_a, b, attempts=5,
+                              sleep=sleeps.append)
+        assert sleeps == []                    # refused stays refused
+
+
+class TestClusterContainment:
+    def _oracle(self, probs):
+        s = _sched()
+        rids = [s.submit(*p) for p in probs]
+        return rids, s.run()
+
+    def test_blackout_quarantines_and_loses_nothing(self):
+        probs = [make_problem(16, 48, s) for s in range(8)]
+        rids0, res0 = self._oracle(probs)
+        cs = _cluster(num_devices=4, lanes_per_device=2)
+        rids = [cs.submit(*p) for p in probs]
+        cs.step()
+        cs.inject_device_fault(1)
+        res = cs.run()
+        assert set(res) == set(rids)
+        st = cs.stats()
+        assert st["device_health"][1] == "quarantined"
+        assert st["requeued"] >= 1 and st["failed"] == 0
+        # EVERY answer (including requeued victims) is the lane answer
+        for i, r in enumerate(rids):
+            assert np.array_equal(res[r], res0[rids0[i]]), i
+        # quarantined device receives no further placements
+        recs = [t for t in cs.request_log if t.route == "lane"]
+        bounced = [t for t in recs if t.retries > 0]
+        assert bounced and all(t.device != 1 for t in bounced)
+
+    def test_lane_fault_requeues_bit_identical(self):
+        probs = [make_problem(16, 48, s) for s in range(6)]
+        rids0, res0 = self._oracle(probs)
+        cs = _cluster()
+        rids = [cs.submit(*p) for p in probs]
+        cs.step()
+        assert cs.inject_lane_fault(rids[3])
+        res = cs.run()
+        assert set(res) == set(rids)
+        st = cs.stats()
+        assert st["requeued"] == 1 and st["device_health"] == ["ok", "ok"]
+        rec = {t.rid: t for t in cs.request_log}[rids[3]]
+        assert rec.status == "ok" and rec.retries == 1
+        for i, r in enumerate(rids):
+            assert np.array_equal(res[r], res0[rids0[i]]), i
+
+    def test_double_fault_escalates(self):
+        cs = _cluster()
+        K, a, b = make_problem(16, 48, 0)
+        rid = cs.submit(K, a, b)
+        cs.step()
+        assert cs.inject_lane_fault(rid)
+        cs.step()                               # detector flags
+        cs.step()                               # requeue + readmit
+        assert cs.inject_lane_fault(rid)        # strike the second lane
+        res = cs.run()
+        rec = {t.rid: t for t in cs.request_log}[rid]
+        assert rec.status == "retried_ok" and rec.retries == 2
+        assert rid in res and np.all(np.isfinite(res[rid]))
+
+    def test_nan_payload_fails_after_bounce(self):
+        cs = _cluster()
+        K, a, b = make_problem(16, 48, 0)
+        Kn = np.asarray(K).copy()
+        Kn[0, 1] = np.nan
+        bad = cs.submit(Kn, a, b)
+        good = cs.submit(K, a, b)
+        res = cs.run()
+        assert good in res and bad not in res
+        failure = cs.poll(bad)
+        assert isinstance(failure, RequestFailure)
+        assert failure.status == "failed" and failure.retries == 2
+        assert cs.stats()["status_counts"]["failed"] == 1
+
+    def test_all_quarantined_falls_back_to_gang(self):
+        probs = [make_problem(16, 48, s) for s in range(4)]
+        cs = _cluster(lanes_per_device=2)
+        rids = [cs.submit(*p) for p in probs]
+        cs.step()
+        cs.inject_device_fault(0)
+        cs.inject_device_fault(1)
+        res = cs.run()
+        assert set(res) == set(rids)
+        st = cs.stats()
+        assert st["device_health"] == ["quarantined", "quarantined"]
+        assert st["gang_completed"] >= 1
+
+    def test_gang_timeout_latches_degrade(self):
+        t = {"now": 0.0}
+
+        def clk():
+            t["now"] += 10.0
+            return t["now"]
+
+        cs = ClusterScheduler(CFG, num_devices=2, lanes_per_device=2,
+                              m_bucket=32, impl="jnp", gang_timeout=5.0,
+                              clock=clk,
+                              lane_budget=lambda Mb, Nb: False)
+        K, a, b = make_problem(16, 48, 0)
+        g1 = cs.submit(K, a, b)
+        g2 = cs.submit(*make_problem(16, 48, 1))
+        cs.run()
+        st = cs.stats()
+        recs = {x.rid: x for x in cs.request_log}
+        assert st["gang_timeouts"] >= 1
+        assert recs[g1].status == "timed_out"
+        assert recs[g2].iters <= cs.degrade_iters
+
+    def test_cluster_rejection(self):
+        cs = _cluster()
+        K, a, b = make_problem(16, 48, 0)
+        bad_b = np.asarray(b).copy()
+        bad_b[0] = np.inf
+        with pytest.raises(InvalidProblemError) as ei:
+            cs.submit(K, a, bad_b)
+        failure = cs.poll(ei.value.rid)
+        assert isinstance(failure, RequestFailure)
+        assert failure.status == "rejected"
+
+
+class TestInjectors:
+    def test_seeded_and_arrival_order_invariant(self):
+        inj1 = faults.NaNPayload(0.5, seed=3)
+        inj2 = faults.NaNPayload(0.5, seed=3)
+        K, a, b = make_problem(8, 40, 0)
+        # same (seed, rid) -> same decision, regardless of call order
+        outs1 = [inj1.on_submit(r, np.asarray(K), a, b)[3]
+                 for r in (0, 1, 2, 3)]
+        outs2 = [inj2.on_submit(r, np.asarray(K), a, b)[3]
+                 for r in (3, 1, 0, 2)]
+        assert outs1 == [outs2[2], outs2[1], outs2[3], outs2[0]]
+
+    def test_compose_first_tag_wins_and_merges(self):
+        nan = faults.NaNPayload(1.0, seed=0)
+        stuck = faults.StuckLane(1.0, seed=0)
+        comp = faults.Compose([nan, stuck])
+        K, a, b = make_problem(8, 40, 0)
+        _, _, _, tag = comp.on_submit(0, np.asarray(K), a, b)
+        assert tag == "nan_payload"
+        assert comp.injected == {0: "nan_payload"}
+
+    def test_stuck_lane_hits_cap(self):
+        inj = faults.StuckLane(1.0, seed=0, power=8.0)
+        s = _sched(fault_injector=inj)
+        K, a, b = make_problem(16, 48, 0)
+        rid = s.submit(K, a, b)
+        res = s.run()
+        rec = {t.rid: t for t in s.request_log}[rid]
+        assert rid in res and rec.status == "timed_out"
+
+    def test_overflow_injector_rejected(self):
+        hot = UOTConfig(reg=0.001, reg_m=10.0, num_iters=10)
+        s = UOTScheduler(hot, m_bucket=32, impl="jnp",
+                         fault_injector=faults.OverflowConfig(1.0, seed=0))
+        K, a, b = make_problem(8, 40, 0)
+        with pytest.raises(InvalidProblemError) as ei:
+            s.submit(K, a, b)
+        assert ei.value.reason == "uv_overflow"
+
+    def test_device_blackout_noop_on_single_device(self):
+        inj = faults.DeviceBlackout(device=0, at_step=0)
+        s = _sched(fault_injector=inj)
+        K, a, b = make_problem(16, 48, 0)
+        rid = s.submit(K, a, b)
+        res = s.run()
+        assert rid in res and not inj.fired    # no hook -> no-op
+
+
+def _chaos_trial(seed, make_sched, n_requests=12):
+    """One seeded chaos trial: composed injectors + shuffled arrivals.
+    Returns (resolutions, injected tags, healthy-coupling dict)."""
+    rng = np.random.default_rng(seed)
+    probs = [make_problem(16, 48, 100 + i) for i in range(n_requests)]
+    order = rng.permutation(n_requests)
+    inj = faults.Compose([
+        faults.NaNPayload(0.15, seed=seed),
+        faults.StuckLane(0.1, seed=seed + 1),
+        faults.LaneFault(0.05, seed=seed + 2),
+    ])
+    s = make_sched(inj)
+    rids = {}
+    for i in order:
+        rids[i] = s.submit(*probs[int(i)])
+    res = s.run()
+    resolved = {}
+    for i, r in rids.items():
+        out = res.get(r)
+        if out is None:
+            out = s.poll(r)
+        resolved[int(i)] = out
+    return resolved, inj.injected, rids
+
+
+class TestChaosProperty:
+    """The resolution + blast-radius property under seeded random fault
+    schedules and arrival orders (the hypothesis variant lives in
+    test_faults_property.py; these seeded trials always run)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_uot_scheduler(self, seed):
+        probs = [make_problem(16, 48, 100 + i) for i in range(12)]
+        base = _sched(max_results=64)
+        base_rids = [base.submit(*p) for p in probs]
+        base_res = base.run()
+
+        resolved, injected, rids = _chaos_trial(
+            seed, lambda inj: _sched(fault_injector=inj, max_results=64))
+        for i, out in resolved.items():
+            assert out is not None, f"request {i} never resolved"
+            if rids[i] not in injected:
+                assert isinstance(out, np.ndarray), (i, out)
+                assert np.array_equal(out, base_res[base_rids[i]]), i
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_cluster_scheduler(self, seed):
+        probs = [make_problem(16, 48, 100 + i) for i in range(12)]
+        base = _sched(max_results=64)
+        base_rids = [base.submit(*p) for p in probs]
+        base_res = base.run()
+
+        resolved, injected, rids = _chaos_trial(
+            seed,
+            lambda inj: _cluster(fault_injector=inj, max_results=64))
+        for i, out in resolved.items():
+            assert out is not None, f"request {i} never resolved"
+            if rids[i] not in injected:
+                assert isinstance(out, np.ndarray), (i, out)
+                assert np.array_equal(out, base_res[base_rids[i]]), i

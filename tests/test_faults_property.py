@@ -1,0 +1,92 @@
+"""Property test (hypothesis): under ANY seeded fault schedule and ANY
+arrival order, both schedulers uphold the resolution + blast-radius
+invariants:
+
+* every submitted rid resolves via ``poll``/``run`` to exactly one
+  coupling or typed ``RequestFailure`` — nothing vanishes, nothing
+  double-resolves (take-once semantics);
+* requests the injectors did NOT touch produce couplings bit-identical
+  to a fault-free run of the same problems.
+
+Seeded deterministic trials of the same invariant always run in
+tests/test_faults.py::TestChaosProperty; this file widens the search to
+hypothesis-chosen seeds/orders when hypothesis is installed.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import UOTConfig
+from repro.cluster import ClusterScheduler
+from repro.serve import RequestFailure, UOTScheduler, faults
+
+from benchmarks.common import make_problem
+
+CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=60, tol=1e-5)
+N_REQUESTS = 10
+PROBLEMS = [make_problem(16, 48, reg=CFG.reg, seed=100 + i, peak=1.0)
+            for i in range(N_REQUESTS)]
+
+
+def _baseline():
+    s = UOTScheduler(CFG, lanes_per_pool=4, chunk_iters=6, m_bucket=32,
+                     impl="jnp", max_results=64)
+    rids = [s.submit(*p) for p in PROBLEMS]
+    return rids, s.run()
+
+
+_BASE_RIDS, _BASE_RES = _baseline()
+
+
+def _injector(seed):
+    return faults.Compose([
+        faults.NaNPayload(0.15, seed=seed),
+        faults.StuckLane(0.1, seed=seed + 1),
+        faults.LaneFault(0.05, seed=seed + 2),
+    ])
+
+
+def _check(make_sched, seed, order):
+    inj = _injector(seed)
+    s = make_sched(inj)
+    rids = {}
+    for i in order:
+        rids[i] = s.submit(*PROBLEMS[i])
+    res = s.run()
+    for i, r in rids.items():
+        out = res.get(r)
+        if out is None:
+            out = s.poll(r)
+        assert out is not None, f"request {i} (rid {r}) never resolved"
+        assert s.poll(r) is None, f"rid {r} resolved twice"
+        assert isinstance(out, (np.ndarray, RequestFailure))
+        if r not in inj.injected:
+            assert isinstance(out, np.ndarray), (i, out)
+            assert np.array_equal(out, _BASE_RES[_BASE_RIDS[i]]), \
+                f"untouched request {i} diverged from fault-free run"
+
+
+orders = st.permutations(range(N_REQUESTS))
+seeds = st.integers(min_value=0, max_value=2 ** 16)
+SETTINGS = settings(max_examples=10, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(seed=seeds, order=orders)
+@SETTINGS
+def test_uot_scheduler_resolves_every_rid(seed, order):
+    _check(lambda inj: UOTScheduler(
+        CFG, lanes_per_pool=4, chunk_iters=6, m_bucket=32, impl="jnp",
+        max_results=64, fault_injector=inj), seed, order)
+
+
+@given(seed=seeds, order=orders)
+@SETTINGS
+def test_cluster_scheduler_resolves_every_rid(seed, order):
+    _check(lambda inj: ClusterScheduler(
+        CFG, num_devices=2, lanes_per_device=4, chunk_iters=6,
+        m_bucket=32, impl="jnp", max_results=64, fault_injector=inj),
+        seed, order)

@@ -342,7 +342,11 @@ class TestDeadlineShedding:
         r_live = sched.submit(K, a, b, deadline=1e9)
         out = sched.run()
         assert r_live in out and r_dead not in out
-        assert sched.poll(r_dead) is None
+        # a dropped request still RESOLVES: typed 'rejected' disposition
+        # (exactly once), never a silent None
+        failure = sched.poll(r_dead)
+        assert failure is not None and failure.status == "rejected"
+        assert sched.poll(r_dead) is None    # take semantics
         s = sched.stats()
         assert s["shed_dropped"] == 1 and s["shed_degraded"] == 0
         # served-work aggregates exclude the drop; the log records it
