@@ -17,9 +17,17 @@ The fault plan is materialized up front with the seeded injectors from
 ``repro.serve.faults`` (same (seed, rid) streams the schedulers' hook
 uses), so the baseline can replay exactly the chaos run's clean subset.
 
-Hard asserts (the ISSUE-6 acceptance bar):
+Hard asserts (the ISSUE-6 acceptance bar + the PR-7 observability bar):
   * **zero requests lost** — every submitted rid resolves to exactly one
     coupling or typed ``RequestFailure``; refused rids resolve too;
+  * **zero span loss** — the chaos run's trace exports to JSONL, reloads
+    exactly, and every submitted rid carries exactly one terminal
+    ``complete`` event (``SpanTracer.check_complete``);
+  * **traffic totals match the dispatch-table formulas** — every
+    aggregate the chaos scheduler's ``TrafficAccountant`` charged
+    re-derives mechanically from its formula key
+    (``bytes == count * formula(**key)``), and the per-route rollup sums
+    the records;
   * **bit-identical healthy results** — every clean request's coupling
     equals the fault-free baseline's, including requests bounced off the
     blacked-out device (requeue replays them from the intact host
@@ -41,10 +49,13 @@ uses the real 8-device mesh when the job forces 8 host devices).
 from __future__ import annotations
 
 import os
+import pathlib
+import tempfile
 
 import jax
 import numpy as np
 
+from repro import obs as obslib
 from repro.core import InvalidProblemError, UOTConfig
 from repro.cluster import ClusterScheduler, cluster_mesh
 from repro.serve import RequestFailure, faults
@@ -87,6 +98,35 @@ def plan_faults(trace, seed):
         chaos.append((t, np.asarray(K), np.asarray(a), np.asarray(b)))
         tags.append(tag)
     return chaos, tags
+
+
+def verify_traffic(records):
+    """Re-derive every traffic aggregate from its formula key — the
+    mechanical check that what the accountant charged matches
+    ``kernels/ops.py``'s dispatch-table formulas cell by cell."""
+    for r in records:
+        if r["kind"] == "chunk":
+            per = obslib.chunk_bytes(r["lanes"], r["M"], r["N"],
+                                     r["itemsize"], r["iters"],
+                                     tier=r["tier"])
+            flops = obslib.modeled_flops(r["M"], r["N"], r["iters"],
+                                         lanes=r["lanes"])
+            coll = 0
+        elif r["kind"] == "solve":
+            per = r["lanes"] * obslib.solve_bytes(
+                r["M"], r["N"], r["itemsize"], r["iters"], tier=r["tier"],
+                source=r["source"], d=r["d"])
+            flops = obslib.modeled_flops(r["M"], r["N"], r["iters"],
+                                         lanes=r["lanes"])
+            coll = (obslib.gang_collective_bytes(r["N"], r["iters"])
+                    if r["route"] == "gang" else 0)
+        else:                                  # admission's G payment
+            per = obslib.cost_source_bytes(r["M"], r["N"], r["itemsize"],
+                                           source=r["source"], d=r["d"])
+            flops = coll = 0
+        assert r["bytes"] == r["count"] * per, r
+        assert r["flops"] == r["count"] * flops, r
+        assert r["coll_bytes"] == r["count"] * coll, r
 
 
 def replay(trace, cfg, t_chunk, *, lanes, chunk, m_bucket, mesh,
@@ -195,12 +235,34 @@ def run():
     late = [t for t in cs.request_log
             if t.route == "lane" and t.retries > 0]
     assert all(t.device != BLACKOUT_DEV for t in late)
+    tag = "smoke" if smoke else f"n{n}"
+
+    # --- zero span loss: JSONL round-trip + one terminal span per rid --
+    trace_path = pathlib.Path(tempfile.gettempdir()) / "OBS_chaos.jsonl"
+    n_events = cs.obs.tracer.write_jsonl(trace_path)
+    reloaded = obslib.SpanTracer.from_events(
+        obslib.SpanTracer.load_jsonl(trace_path))
+    assert reloaded.events == cs.obs.tracer.events, "JSONL round-trip drift"
+    audit = reloaded.check_complete(submitted=rid_of.values())
+    assert not audit["missing"] and not audit["multiple"], audit
+    emit(f"chaos_spans_{tag}", n_events,
+         f"rids={audit['total']},span_loss=0,jsonl={trace_path.name}")
+
+    # --- traffic: every charge re-derives from its formula key ---------
+    records = cs.obs.traffic.records()
+    assert records, "chaos run charged no traffic"
+    verify_traffic(records)
+    per_route = cs.obs.traffic.per_route()
+    assert "lane" in per_route and per_route["lane"]["bytes"] > 0
+    emit(f"chaos_traffic_{tag}", cs.obs.traffic.bytes_per_solve(),
+         f"routes={sorted(per_route)},"
+         f"GB={cs.obs.traffic.totals()['bytes'] / 1e9:.3f},"
+         f"ai={cs.obs.traffic.roofline()['arithmetic_intensity']:.2f}")
 
     # --- goodput: clean couplings / sim second, vs fault-free ----------
     goodput_base = len(clean) / base_T
     goodput_chaos = len(clean) / chaos_T
     ratio = goodput_chaos / goodput_base
-    tag = "smoke" if smoke else f"n{n}"
     emit(f"chaos_chunk_service_{tag}", t_chunk * 1e6,
          f"bucket={bucket},lanes={lanes},chunk={chunk}")
     emit(f"chaos_fault_mix_{tag}", (n - len(clean)) / n * 100,

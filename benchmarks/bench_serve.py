@@ -101,18 +101,20 @@ def sim_flush(trace, cfg, *, max_batch, warmup=True):
 
 
 def sim_scheduler(trace, cfg, *, lanes_per_pool, chunk_iters, warmup=True,
-                  deadline_budget=None):
+                  deadline_budget=None, obs=None):
     """Continuous-batching serving of the trace; returns
     (latencies, makespan, scheduler) — the scheduler for its telemetry.
     With ``deadline_budget`` set, every request gets the deadline
     ``arrival + budget`` (simulated clock), so the scheduler's own
-    deadline-miss telemetry is exercised and reported."""
+    deadline-miss telemetry is exercised and reported. ``obs`` passes
+    through to the scheduler (``False`` disables tracing/traffic —
+    ``bench_obs`` measures the difference)."""
     import time
 
     def build(clock):
         return UOTScheduler(cfg, lanes_per_pool=lanes_per_pool,
                             chunk_iters=chunk_iters, impl="jnp",
-                            clock=clock)
+                            clock=clock, obs=obs)
 
     if warmup:
         sched = build(lambda: 0.0)
@@ -190,3 +192,10 @@ def run():
     emit(f"serve_sched_missrate_{tag}", st["miss_rate"] * 100,
          f"slo={deadline_budget * 1e3:.0f}ms,"
          f"misses={st['deadline_misses']}/{st['completed']}")
+    # zero span loss: every submitted rid carries exactly one terminal
+    # 'complete' event in the scheduler's trace
+    audit = sched.obs.tracer.check_complete()
+    assert audit["total"] == n and not audit["missing"] \
+        and not audit["multiple"], audit
+    emit(f"serve_sched_spans_{tag}", len(sched.obs.tracer.events),
+         f"rids={audit['total']},span_loss=0")

@@ -2,7 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV and writes one ``BENCH_<suite>.json``
 per suite (into --out-dir, default cwd) so the perf trajectory accumulates
-across PRs. Mapping to the paper:
+across PRs. Each suite also gets an ``OBS_<suite>.json`` — the
+process-global observability dump (``repro.obs.global_dump``: registry
+counters/gauges/histograms + the HBM-traffic accountant's per-route byte
+totals and roofline summary), reset between suites so each file describes
+one suite's work. Mapping to the paper:
   bench_uot          -> Fig 9/10 (CPU single/multi-thread performance)
   bench_traffic      -> Fig 11  (cache misses -> HBM traffic)
   bench_kernel       -> Fig 8/13/14 (GPU tiling/perf/throughput -> TPU roofline)
@@ -28,9 +32,16 @@ across PRs. Mapping to the paper:
   bench_chaos        -> beyond-paper (fault-containment chaos harness: NaN
                         payloads + overflow configs + a device blackout
                         through the 8-device scheduler; hard-asserts zero
-                        lost requests, bit-identical healthy results, and
-                        goodput >= 0.9x fault-free; BENCH_CHAOS_SMOKE=1
-                        for the CI smoke run)
+                        lost requests, zero span loss in the exported
+                        JSONL trace, traffic totals that match the
+                        dispatch-table formulas, bit-identical healthy
+                        results, and goodput >= 0.9x fault-free;
+                        BENCH_CHAOS_SMOKE=1 for the CI smoke run)
+  bench_obs          -> beyond-paper (observability overhead: the
+                        bench_serve scheduler DES with the obs bundle
+                        enabled vs disabled; hard-asserts <= 5% overhead
+                        on throughput and p99; BENCH_OBS_SMOKE=1 for the
+                        CI smoke run)
 """
 import argparse
 import json
@@ -51,15 +62,16 @@ def main(argv=None) -> None:
                              "--suite bench_batch")
     args = parser.parse_args(argv)
 
+    from repro import obs as obslib
     from benchmarks import (common, bench_uot, bench_traffic, bench_kernel,
                             bench_memory, bench_distributed,
                             bench_application, bench_moe_router, bench_batch,
                             bench_serve, bench_resident, bench_geometry,
-                            bench_cluster, bench_chaos)
+                            bench_cluster, bench_chaos, bench_obs)
     mods = [bench_uot, bench_traffic, bench_kernel, bench_memory,
             bench_distributed, bench_application, bench_moe_router,
             bench_batch, bench_serve, bench_resident, bench_geometry,
-            bench_cluster, bench_chaos]
+            bench_cluster, bench_chaos, bench_obs]
     if args.suite:
         known = {m.__name__.split(".")[-1] for m in mods}
         unknown = set(args.suite) - known
@@ -75,7 +87,11 @@ def main(argv=None) -> None:
     for mod in mods:
         suite = mod.__name__.split(".")[-1]
         json_path = out_dir / f"BENCH_{suite}.json"
+        obs_path = out_dir / f"OBS_{suite}.json"
         common.reset_records()
+        # zero the process-global registry + traffic accountant so the
+        # suite's OBS dump describes this suite's work only
+        obslib.reset_global()
         try:
             mod.run()
         except Exception:
@@ -85,6 +101,7 @@ def main(argv=None) -> None:
             # don't let a stale JSON from an earlier run masquerade as
             # this run's result
             json_path.unlink(missing_ok=True)
+            obs_path.unlink(missing_ok=True)
             continue
         payload = {
             "suite": suite,
@@ -93,6 +110,9 @@ def main(argv=None) -> None:
             "records": common.reset_records(),
         }
         json_path.write_text(json.dumps(payload, indent=2) + "\n")
+        obs_path.write_text(
+            json.dumps({"suite": suite, **obslib.global_dump()}, indent=2)
+            + "\n")
     if failed:
         raise SystemExit(1)
 

@@ -105,14 +105,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obslib
 from repro.core.problem import UOTConfig
 from repro.core import distributed
 from repro.core.health import (InvalidProblemError, escalate_log_solve,
                                validate_problem)
 from repro.geometry import PointCloudGeometry
 from repro.kernels import ops
-from repro.serve.scheduler import (QueueFullError, RequestFailure,
-                                   RequestTelemetry, ScheduledRequest)
+from repro.serve.scheduler import (_COUNTER_NAMES, QueueFullError,
+                                   RequestFailure, RequestTelemetry,
+                                   ScheduledRequest)
 from repro.cluster.lanes import (ClusterLaneState, cluster_admit,
                                  cluster_done, cluster_evict,
                                  cluster_poison_device, cluster_stepped,
@@ -217,7 +219,9 @@ class ClusterScheduler:
                  lane_budget: Callable[[int, int], bool] | None = None,
                  validate: bool = True, retry_escalate: bool = True,
                  escalate_factor: int = 2, fault_injector=None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 obs: "obslib.Observability | bool | None" = None):
         if lanes_per_device < 1:
             raise ValueError("lanes_per_device must be >= 1")
         if chunk_iters < 1:
@@ -288,6 +292,29 @@ class ClusterScheduler:
             lambda Mb, Nb: ops.resident_fits(
                 Mb, Nb, cfg, storage_dtype=storage_dtype))
         self.clock = clock
+        self.sleep = sleep
+        # Observability bundle (see UOTScheduler / repro.obs): metric
+        # names are "cluster.*"; the tracer's place/chunk events carry
+        # the device shard, and gang solves get their own span events.
+        if obs is None:
+            obs = obslib.Observability(clock=clock)
+        elif obs is False:
+            obs = obslib.Observability(enabled=False, clock=clock,
+                                       chain=False)
+        self.obs = obs
+        reg = obs.registry
+        self._c = {k: reg.counter("cluster." + k)
+                   for k in _COUNTER_NAMES + (
+                       "requeued", "gang_timeouts", "gang_completed",
+                       "devices_quarantined")}
+        self._h_wait = reg.histogram("cluster.wait_s")
+        self._h_latency = reg.histogram("cluster.latency_s")
+        self._h_iters = reg.histogram("cluster.iters",
+                                      buckets=obslib.DEFAULT_COUNT_BUCKETS)
+        self._g_queued = reg.gauge("cluster.queued")
+        self._g_gang_queued = reg.gauge("cluster.gang_queued")
+        self._g_in_flight = reg.gauge("cluster.in_flight")
+        self._g_occupancy = reg.gauge("cluster.occupancy")
 
         self._queue: list[ScheduledRequest] = []
         self._gang_queue: list[ScheduledRequest] = []
@@ -298,31 +325,23 @@ class ClusterScheduler:
         self._steps = 0
         self.request_log: list[ClusterRequestTelemetry] = []
         self.occupancy_log: list[dict] = []
-        self._deadline_misses = 0
-        self._deadlined_completed = 0
-        self._shed_dropped = 0
-        self._shed_degraded = 0
-        self._gang_completed = 0
+        # running totals live in ``self._c`` registry counters (exact,
+        # survive log trimming, dumped process-wide); the per-device
+        # rollup lists and one-way health states stay plain host state
         self._device_placed = [0] * self.num_devices
         self._device_completed = [0] * self.num_devices
         # rid -> RequestFailure, kept apart from the size-bounded coupling
         # store (same rationale as UOTScheduler._dispositions)
         self._dispositions: dict[int, RequestFailure] = {}
-        self._rejected = 0
-        self._failed = 0
-        self._retried_ok = 0
-        self._timed_out = 0
-        self._unhealthy_evictions = 0
-        self._lost_results = 0
-        self._requeued = 0
-        self._gang_timeouts = 0
         self._gang_degrade = False      # latched by a gang_timeout breach
         # per-device serving state: 'ok' | 'quarantined' (one-way)
         self._device_health = ["ok"] * self.num_devices
-        self._router_stats = {"least_loaded": 0, "affinity_hits": 0,
-                              "affinity_spills": 0, "shared_pool": 0,
-                              "placement_stalls": 0, "gang_routed": 0}
-        self._dispatch = {"resident": 0, "streamed": 0}
+        self._router = {k: reg.counter("cluster.router." + k)
+                        for k in ("least_loaded", "affinity_hits",
+                                  "affinity_spills", "shared_pool",
+                                  "placement_stalls", "gang_routed")}
+        self._c_dispatch = {k: reg.counter("cluster.dispatch." + k)
+                            for k in ("resident", "streamed")}
 
     # ---- submission -------------------------------------------------------
 
@@ -334,25 +353,32 @@ class ClusterScheduler:
     def _route(self, req: ScheduledRequest) -> None:
         """Lane pool or gang, by the lane-pool budget of the bucket."""
         if self.gang == "auto" and not self._lane_budget(*req.bucket):
-            self._router_stats["gang_routed"] += 1
+            self._router["gang_routed"].inc()
             self._gang_queue.append(req)
+            self.obs.tracer.emit(req.rid, "queue",
+                                 depth=len(self._gang_queue), route="gang")
         else:
             self._queue.append(req)
+            self.obs.tracer.emit(req.rid, "queue", depth=len(self._queue),
+                                 route="lane")
 
     def _store_disposition(self, failure: RequestFailure) -> None:
         self._dispositions[failure.rid] = failure
         while len(self._dispositions) > self.max_log:
             self._dispositions.pop(next(iter(self._dispositions)))
+            self._c["window_dropped_dispositions"].inc()
 
     def _reject(self, rid: int, bucket, deadline,
                 err: InvalidProblemError, now: float) -> None:
         """Refused admission: telemetry + a typed disposition so
         ``poll(rid)`` resolves, then re-raise (rid attached)."""
-        self._rejected += 1
+        self._c["rejected"].inc()
         self.request_log.append(ClusterRequestTelemetry(
             rid=rid, bucket=bucket, lane=-1, arrival=now, admitted=now,
             completed=now, iters=0, converged=False, deadline=deadline,
             status="rejected", device=-1, route="rejected"))
+        self.obs.tracer.emit(rid, "complete", status="rejected",
+                             reason=err.reason)
         self._store_disposition(RequestFailure(
             rid=rid, status="rejected", reason=f"{err.reason}: {err}"))
         raise err
@@ -376,6 +402,10 @@ class ClusterScheduler:
         M, N = K.shape
         bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
         now = self.clock()
+        self._c["submitted"].inc()
+        self.obs.tracer.emit(rid, "submit", M=M, N=N, bucket=list(bucket),
+                             kind="dense", deadline=deadline,
+                             priority=priority)
         if self.validate:
             try:
                 validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
@@ -407,6 +437,10 @@ class ClusterScheduler:
             _, a, b, fault = self.fault_injector.on_submit(rid, None, a, b)
         bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
         now = self.clock()
+        self._c["submitted"].inc()
+        self.obs.tracer.emit(rid, "submit", M=M, N=N, bucket=list(bucket),
+                             kind="points", deadline=deadline,
+                             priority=priority)
         if self.validate:
             try:
                 validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
@@ -435,8 +469,13 @@ class ClusterScheduler:
         genuinely pending. Take semantics — handed out exactly once."""
         out = self._results.pop(rid, None)
         if out is not None:
+            self.obs.tracer.emit(rid, "poll", resolved="coupling")
             return out
-        return self._dispositions.pop(rid, None)
+        out = self._dispositions.pop(rid, None)
+        self.obs.tracer.emit(
+            rid, "poll",
+            resolved="failure" if out is not None else "pending")
+        return out
 
     # ---- the scheduling loop ---------------------------------------------
 
@@ -528,14 +567,16 @@ class ClusterScheduler:
         to the fault-free lane solve (placement invariance). The
         bucket-padded ``_prepped`` cache entry, if any, is still valid."""
         req.retries += 1
-        self._requeued += 1
+        self._c["requeued"].inc()
+        self.obs.tracer.emit(req.rid, "requeue", retries=req.retries)
         self._queue.append(req)
 
     def _trim_results(self) -> None:
         while len(self._results) > self.max_results:
             old = next(iter(self._results))
             self._results.pop(old)
-            self._lost_results += 1
+            self._c["lost_results"].inc()
+            self.obs.tracer.emit(old, "lost")
             self._store_disposition(RequestFailure(
                 rid=old, status="lost",
                 reason="coupling evicted from the bounded result store "
@@ -559,13 +600,14 @@ class ClusterScheduler:
             if (self._device_health[d] == "ok" and active[d] >= 2
                     and unhealthy[d] == active[d]):
                 self._device_health[d] = "quarantined"
+                self._c["devices_quarantined"].inc()
                 for bucket in flags:
                     pool = self._pools[bucket]
                     drained = [s for s in pool.requests if s[0] == d]
                     for slot in drained:
                         req = pool.requests.pop(slot)
                         pool.admitted_at.pop(slot)
-                        self._unhealthy_evictions += 1
+                        self._c["unhealthy_evictions"].inc()
                         if req.retries == 0:
                             self._requeue(req)
                         else:
@@ -582,14 +624,15 @@ class ClusterScheduler:
         log-domain escalation, then a typed failure."""
         d, l = slot
         now = self.clock()
+        self.obs.tracer.emit(req.rid, "escalate", retries=req.retries + 1)
         P, n_iters = self._escalate(req)
         if P is not None:
-            self._retried_ok += 1
+            self._c["retried_ok"].inc()
             completed[req.rid] = self._results[req.rid] = P
             self._trim_results()
             status = "retried_ok"
         else:
-            self._failed += 1
+            self._c["failed"].inc()
             self._store_disposition(RequestFailure(
                 rid=req.rid, status="failed",
                 reason="lane state went non-finite twice and the "
@@ -612,6 +655,17 @@ class ClusterScheduler:
                      np.asarray(pool.state.lanes.converged),
                      np.asarray(pool.state.lanes.healthy))
             for bucket, pool in self._pools.items() if pool.requests}
+        tr = self.obs.tracer
+        if tr.enabled:
+            # per-request chunk progress (with the serving device), from
+            # the host flag copies this pass already fetched — tracing
+            # adds zero extra device syncs
+            for bucket, (iters_, conv_, healthy_) in flags.items():
+                for (d, l), req in self._pools[bucket].requests.items():
+                    tr.emit(req.rid, "chunk", lane=l, device=d,
+                            iters=int(iters_[d, l]),
+                            converged=bool(conv_[d, l]),
+                            healthy=bool(healthy_[d, l]))
         # device-level triage first: the blackout signature drains whole
         # devices (requests requeue), so the per-lane loop below only ever
         # sees isolated poison on devices that stay in service
@@ -638,8 +692,11 @@ class ClusterScheduler:
                     # lane never crosses the detector's window
                     if not np.all(np.isfinite(P)):
                         P = None
+                tr.emit(req.rid, "evict", lane=l, device=d,
+                        iters=int(iters[slot]), converged=bool(conv[slot]),
+                        healthy=bool(healthy[slot] and P is not None))
                 if P is None:
-                    self._unhealthy_evictions += 1
+                    self._c["unhealthy_evictions"].inc()
                     if req.retries == 0:
                         # intact host payload -> bounce through admission
                         # to a healthy device; the eviction scatter below
@@ -651,7 +708,7 @@ class ClusterScheduler:
                     continue
                 timed_out = (self.cfg.tol is not None and not conv[slot]
                              and req.max_iters is None)
-                self._timed_out += timed_out
+                self._c["timed_out"].inc(int(timed_out))
                 completed[req.rid] = self._results[req.rid] = P
                 self._trim_results()
                 rec = ClusterRequestTelemetry(
@@ -703,9 +760,21 @@ class ClusterScheduler:
             pool.state = cluster_poison_device(pool.state, device)
 
     def _record(self, rec: ClusterRequestTelemetry) -> None:
+        """Terminal bookkeeping shared by every SERVED completion path
+        (lane eviction, escalation, gang): running counters, latency and
+        iteration histograms, and the span's terminal 'complete' event.
+        Shed-drops and admission rejections record inline instead — they
+        never solved anything and must not skew the served aggregates."""
         if rec.deadline is not None and rec.route != "dropped":
-            self._deadlined_completed += 1
-            self._deadline_misses += rec.missed
+            self._c["deadlined_completed"].inc()
+            self._c["deadline_misses"].inc(int(rec.missed))
+        self._c["completed"].inc()
+        self._h_wait.observe(rec.wait)
+        self._h_latency.observe(rec.latency)
+        self._h_iters.observe(rec.iters)
+        self.obs.tracer.emit(rec.rid, "complete", status=rec.status,
+                             iters=rec.iters, retries=rec.retries,
+                             device=rec.device, route=rec.route)
         self.request_log.append(rec)
 
     def _shed_at_admission(self, req: ScheduledRequest, now: float) -> bool:
@@ -715,8 +784,8 @@ class ClusterScheduler:
                 or now <= req.deadline):
             return False
         if self.shed_policy == "drop":
-            self._shed_dropped += 1
-            self._rejected += 1
+            self._c["shed_dropped"].inc()
+            self._c["rejected"].inc()
             self._prepped.pop(req.rid, None)
             self.request_log.append(ClusterRequestTelemetry(
                 rid=req.rid, bucket=req.bucket, lane=-1,
@@ -724,12 +793,17 @@ class ClusterScheduler:
                 iters=0, converged=False, deadline=req.deadline,
                 shed="dropped", status="rejected", device=-1,
                 route="dropped"))
+            self.obs.tracer.emit(req.rid, "shed", policy="drop")
+            self.obs.tracer.emit(req.rid, "complete", status="rejected",
+                                 reason="deadline passed at admission "
+                                        "(shed_policy='drop')")
             self._store_disposition(RequestFailure(
                 rid=req.rid, status="rejected",
                 reason="deadline already passed at admission "
                        "(shed_policy='drop')"))
             return True
-        self._shed_degraded += 1          # 'degrade'
+        self._c["shed_degraded"].inc()    # 'degrade'
+        self.obs.tracer.emit(req.rid, "shed", policy="degrade")
         req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
         req.shed = "degraded"
         return False
@@ -754,7 +828,7 @@ class ClusterScheduler:
                 if (bucket[0] >= Mb and bucket[1] >= Nb
                         and any(cand.free_lanes(d)
                                 for d in range(self.num_devices))):
-                    self._router_stats["shared_pool"] += 1
+                    self._router["shared_pool"].inc()
                     return cand, True
         pool = self._pools[req.bucket] = _ClusterPool(
             req.bucket, self.num_devices, self.lanes_per_device, self.cfg,
@@ -774,12 +848,12 @@ class ClusterScheduler:
         if self.placement == "bucket_affinity":
             hot = [d for d in candidates if pool.device_active(d) > 0]
             if hot:
-                self._router_stats["affinity_hits"] += 1
+                self._router["affinity_hits"].inc()
                 # pack: the busiest shard of THIS bucket that still has room
                 return max(hot, key=lambda d: (pool.device_active(d), -d))
-            self._router_stats["affinity_spills"] += 1
+            self._router["affinity_spills"].inc()
         else:
-            self._router_stats["least_loaded"] += 1
+            self._router["least_loaded"].inc()
         return min(candidates, key=lambda d: (self._device_active(d), d))
 
     def _admit_queued(self) -> None:
@@ -790,7 +864,11 @@ class ClusterScheduler:
             # no healthy device shard remains: the gang path still solves
             # per request without touching lane-pool state — degraded
             # capacity, but every request keeps resolving
-            self._router_stats["gang_routed"] += len(self._queue)
+            self._router["gang_routed"].inc(len(self._queue))
+            for req in self._queue:
+                self.obs.tracer.emit(req.rid, "queue",
+                                     depth=len(self._gang_queue) + 1,
+                                     route="gang")
             self._gang_queue.extend(self._queue)
             self._queue = []
             return
@@ -811,10 +889,12 @@ class ClusterScheduler:
             pool.requests[(device, lane)] = req
             pool.admitted_at[(device, lane)] = now
             self._device_placed[device] += 1
+            self.obs.tracer.emit(req.rid, "place", lane=lane, device=device,
+                                 bucket=list(pool.bucket), route="lane")
             placements.setdefault(pool.bucket, []).append(
                 (device, lane, req))
         if stalled:
-            self._router_stats["placement_stalls"] += 1
+            self._router["placement_stalls"].inc()
         for bucket, placed in placements.items():
             dense = [p for p in placed if p[2].K is not None]
             points: dict[tuple[int, float], list] = {}
@@ -860,6 +940,9 @@ class ClusterScheduler:
                 bp[j, :N] = req.b
             mv[j], nv[j] = M, N
             devs[j], lns[j] = d, l
+        self.obs.traffic.charge_admission(
+            route="lane", M=Mb, N=Nb, s=4, source="dense",
+            count=len(placed))
         pool.state = cluster_admit(
             pool.state, jnp.asarray(devs), jnp.asarray(lns),
             jnp.asarray(Kp), jnp.asarray(ap), jnp.asarray(bp),
@@ -897,6 +980,9 @@ class ClusterScheduler:
             x=jnp.asarray(xs), y=jnp.asarray(ys), xn=jnp.asarray(xns),
             yn=jnp.asarray(yns), m_valid=jnp.asarray(mv),
             n_valid=jnp.asarray(nv), scale=scale)
+        self.obs.traffic.charge_admission(
+            route="lane", M=Mb, N=Nb, s=4, source="implicit", d=dim,
+            count=len(placed))
         pool.state = cluster_admit(
             pool.state, jnp.asarray(devs), jnp.asarray(lns),
             g.kernel(self.cfg.reg), jnp.asarray(ap), jnp.asarray(bp),
@@ -955,13 +1041,26 @@ class ClusterScheduler:
                 # a fused launch can't be preempted: the breaching solve
                 # still delivers, is recorded timed_out, and latches the
                 # degraded budget for the solves after it
-                self._gang_timeouts += 1
+                self._c["gang_timeouts"].inc()
                 self._gang_degrade = True
                 status = "timed_out"
-                self._timed_out += 1
+                self._c["timed_out"].inc()
             completed[req.rid] = self._results[req.rid] = P
             self._trim_results()
-            self._gang_completed += 1
+            self._c["gang_completed"].inc()
+            M, N = req.shape
+            gang_devices = (self.num_devices if self.mesh is not None else 1)
+            self.obs.tracer.emit(req.rid, "gang", devices=gang_devices,
+                                 iters=iters, status=status)
+            # gang traffic: the streamed per-request formula on the
+            # row-sharded stack + the per-device ring all-reduce bytes
+            # (charge_solve adds the collective term for route='gang')
+            s = (np.dtype(self.storage_dtype).itemsize
+                 if self.storage_dtype is not None else 4)
+            self.obs.traffic.charge_solve(
+                route="gang", tier="streamed", M=M, N=N, s=s, T=iters,
+                source="dense" if req.K is not None else "implicit",
+                d=None if req.K is not None else int(req.x.shape[1]))
             self._record(ClusterRequestTelemetry(
                 rid=req.rid, bucket=req.bucket, lane=-1,
                 arrival=req.arrival, admitted=now, completed=done,
@@ -969,6 +1068,23 @@ class ClusterScheduler:
                 shed=req.shed, status=status, retries=req.retries,
                 device=-1, route="gang"))
         return completed
+
+    def _charge_chunk(self, pool: _ClusterPool, counters: dict) -> None:
+        """Chunk-advance accounting (see ``UOTScheduler._charge_chunk``):
+        one shard_map launch advances the whole device-stacked pool, so
+        ``L`` spans every device's lanes."""
+        for k, v in counters.items():
+            if v:
+                self._c_dispatch[k].inc(v)
+        if not self.obs.traffic.enabled:
+            return
+        tier = "resident" if counters["resident"] > 0 else "streamed"
+        Mb, Nb = pool.bucket
+        self.obs.traffic.charge_chunk(
+            route="lane", tier=tier,
+            L=pool.num_devices * pool.lanes_per_device, M=Mb, N=Nb,
+            s=jnp.dtype(pool.state.lanes.P.dtype).itemsize,
+            chunk_iters=self.chunk_iters)
 
     def _advance_pools(self) -> None:
         for bucket, pool in list(self._pools.items()):
@@ -979,8 +1095,7 @@ class ClusterScheduler:
                         pool.state, self.chunk_iters, self.cfg,
                         mesh=self.mesh, axis=self.axis,
                         interpret=self.interpret, impl=self.impl)
-                for k, v in counters.items():
-                    self._dispatch[k] += v
+                self._charge_chunk(pool, counters)
             else:
                 pool.idle_steps += 1
                 if (self.pool_idle_ttl is not None
@@ -988,15 +1103,26 @@ class ClusterScheduler:
                     del self._pools[bucket]
 
     def _snapshot_occupancy(self) -> None:
+        occ = {str(b): p.occupancy for b, p in self._pools.items()}
         self.occupancy_log.append({
             "step": self._steps,
             "queued": len(self._queue),
             "gang_queued": len(self._gang_queue),
-            "deadline_misses": self._deadline_misses,
-            "pools": {str(b): p.occupancy for b, p in self._pools.items()},
+            "deadline_misses": self._c["deadline_misses"].value,  # running
+            "pools": occ,
             "device_active": [self._device_active(d)
                               for d in range(self.num_devices)],
         })
+        self._g_queued.set(len(self._queue))
+        self._g_gang_queued.set(len(self._gang_queue))
+        self._g_in_flight.set(self.in_flight)
+        self._g_occupancy.set(sum(occ.values()) / len(occ) if occ else 0.0)
+        # count what falls off the bounded telemetry window so the
+        # narrowing of stats()' aggregates is visible, not silent
+        self._c["window_dropped_occupancy"].inc(
+            max(0, len(self.occupancy_log) - self.max_log))
+        self._c["window_dropped_requests"].inc(
+            max(0, len(self.request_log) - self.max_log))
         del self.occupancy_log[:-self.max_log]
         del self.request_log[:-self.max_log]
 
@@ -1013,24 +1139,32 @@ class ClusterScheduler:
         for snap in self.occupancy_log:
             for d, active in enumerate(snap["device_active"]):
                 device_occ[d].append(active / max(1, lanes_cap))
+        c = self._c
         cluster = {
-            "deadline_misses": self._deadline_misses,
-            "miss_rate": (self._deadline_misses / self._deadlined_completed
-                          if self._deadlined_completed else 0.0),
-            "shed_dropped": self._shed_dropped,
-            "shed_degraded": self._shed_degraded,
-            "gang_completed": self._gang_completed,
-            "router": dict(self._router_stats),
-            "dispatch": dict(self._dispatch),
-            # fault-containment rollup (running totals, exact)
-            "rejected": self._rejected,
-            "failed": self._failed,
-            "retried_ok": self._retried_ok,
-            "timed_out": self._timed_out,
-            "unhealthy_evictions": self._unhealthy_evictions,
-            "lost_results": self._lost_results,
-            "requeued": self._requeued,
-            "gang_timeouts": self._gang_timeouts,
+            "deadline_misses": c["deadline_misses"].value,
+            "miss_rate": (c["deadline_misses"].value
+                          / c["deadlined_completed"].value
+                          if c["deadlined_completed"].value else 0.0),
+            "shed_dropped": c["shed_dropped"].value,
+            "shed_degraded": c["shed_degraded"].value,
+            "gang_completed": c["gang_completed"].value,
+            "router": {k: v.value for k, v in self._router.items()},
+            "dispatch": {k: v.value for k, v in self._c_dispatch.items()},
+            # fault-containment rollup (running totals, exact — registry
+            # counters "cluster.*" in self.obs.registry)
+            "rejected": c["rejected"].value,
+            "failed": c["failed"].value,
+            "retried_ok": c["retried_ok"].value,
+            "timed_out": c["timed_out"].value,
+            "unhealthy_evictions": c["unhealthy_evictions"].value,
+            "lost_results": c["lost_results"].value,
+            "requeued": c["requeued"].value,
+            "gang_timeouts": c["gang_timeouts"].value,
+            "window_dropped": {
+                "requests": c["window_dropped_requests"].value,
+                "occupancy": c["window_dropped_occupancy"].value,
+                "dispositions": c["window_dropped_dispositions"].value,
+            },
             "device_health": list(self._device_health),
             "devices": {
                 d: {"placed": self._device_placed[d],

@@ -99,6 +99,17 @@ admission payloads to the owning shard. Problems too large for any lane
 pool bypass this table entirely and run on the row-sharded gang solvers,
 ``core.distributed.gang_solve``: O(N) allreduce bytes per iteration.)
 
+Traffic accounting: the table above is executable. ``repro.obs.traffic``
+implements each cell as a formula function (``solve_bytes`` /
+``chunk_bytes`` / ``cost_source_bytes`` / ``gang_collective_bytes``) and
+the serving tiers charge a ``TrafficAccountant`` at every dispatch
+decision — ``dispatch_observer()`` below exposes each ``impl='auto'``
+routing with its (M, N, itemsize, num_iters) so per-solve bytes are
+charged without re-deriving the routing. Charged ``T`` is the iteration
+BUDGET (modeled upper bound): per-lane tol early exit happens on device
+and is invisible to the host without extra syncs. tests/test_obs.py
+asserts the accountant against this table cell by cell.
+
 bf16 storage on the resident tier upcasts once at load and downcasts once
 at store, so the per-iteration bf16 rounding of the streamed path
 disappears: resident bf16 iterates are the fp32 trajectory rounded once.
@@ -262,6 +273,32 @@ def _count_dispatch(kind: str) -> None:
         counters[kind] += 1
 
 
+# Dispatch *observers* ride the same contextvar-stack idiom as the
+# counters, but receive the full decision context — enough to charge the
+# docstring's per-solve traffic formulas without re-deriving the routing
+# (repro.obs.TrafficAccountant is the intended subscriber).
+_DISPATCH_OBS: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "uot_dispatch_observers", default=())
+
+
+@contextlib.contextmanager
+def dispatch_observer(cb):
+    """Subscribe ``cb(kind, M=, N=, itemsize=, num_iters=, implicit=)`` to
+    every ``impl='auto'``/``'resident'`` routing decision made in the
+    dynamic extent of the ``with`` block (this thread/task). ``kind`` is
+    ``'resident'`` or ``'streamed'``; ``itemsize`` is the resolved storage
+    dtype's; ``num_iters`` is the config's iteration budget (the modeled
+    ``T`` — per-lane tol early exit is a device-side fact the host does
+    not see). Observers stack: enclosing scopes keep receiving inner
+    decisions, like ``dispatch_counters``.
+    """
+    token = _DISPATCH_OBS.set(_DISPATCH_OBS.get() + (cb,))
+    try:
+        yield cb
+    finally:
+        _DISPATCH_OBS.reset(token)
+
+
 def dispatch_stats() -> dict:
     """{'resident': ..., 'streamed': ...} decisions made by ``impl='auto'``
     in the innermost active ``dispatch_counters()`` scope (the process-wide
@@ -423,7 +460,15 @@ def _resolve_auto(impl, M, N, cfg, storage_dtype, *, stepped_sdt=None,
         return True
     resident = fits and not (stepped_sdt is not None
                              and jnp.dtype(stepped_sdt).itemsize < 4)
-    _count_dispatch("resident" if resident else "streamed")
+    kind = "resident" if resident else "streamed"
+    _count_dispatch(kind)
+    observers = _DISPATCH_OBS.get()
+    if observers:
+        s = _storage(cfg, stepped_sdt if stepped_sdt is not None
+                     else storage_dtype).itemsize
+        for cb in observers:
+            cb(kind, M=M, N=N, itemsize=s, num_iters=cfg.num_iters,
+               implicit=implicit)
     return resident
 
 

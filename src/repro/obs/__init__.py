@@ -1,0 +1,124 @@
+"""Unified observability: metrics registry + trace spans + HBM accounting.
+
+The three instruments the serving ladder reports through (see
+``repro.serve``'s "Observability" section for the scheduler-facing view):
+
+* ``registry`` — ``MetricsRegistry``: counters / gauges / fixed-bucket
+  histograms. Always live: the schedulers' ``stats()`` running totals ARE
+  registry counters now (the dicts' public shapes are unchanged).
+* ``tracer`` — ``SpanTracer``: per-request lifecycle events
+  (submit → queue → place → chunk* → evict → complete → poll), JSONL
+  export, text timelines, and the zero-span-loss audit
+  (``check_complete``).
+* ``traffic`` — ``TrafficAccountant``: modeled HBM bytes charged per
+  dispatch decision using the ``kernels/ops.py`` dispatch-table formulas,
+  plus a roofline bytes-vs-FLOPs summary (``launch/roofline.py``).
+
+``Observability`` bundles the three with one enable switch and one
+injected clock. ``enabled=False`` swaps the tracer and accountant for
+their null twins — the registry stays live because ``stats()`` depends
+on it; counter increments are the part of the overhead budget that is
+not optional. The obs-overhead CI job holds the *enabled* path to <= 5%
+throughput/p99 overhead over disabled on the scheduler DES.
+
+Per-process aggregation: every ``Observability`` defaults to parenting
+its registry and accountant to the process-global bundle
+(``get_global()``), mirroring ``ops.dispatch_counters``'s stack idiom —
+scheduler-local metrics stay isolated for ``stats()`` while
+``benchmarks/run.py`` dumps one ``OBS_<suite>.json`` per suite from the
+global and resets it between suites (``reset_global()``). Tracers are
+NOT globally merged: rid spaces are per scheduler, so spans live with
+their scheduler (``sched.obs.tracer``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                DEFAULT_COUNT_BUCKETS, DEFAULT_TIME_BUCKETS,
+                                geometric_buckets)
+from repro.obs.trace import NullTracer, SpanTracer, TERMINAL_STATUSES
+from repro.obs.traffic import (NullAccountant, TrafficAccountant,
+                               chunk_bytes, cost_source_bytes,
+                               gang_collective_bytes, modeled_flops,
+                               solve_bytes)
+
+__all__ = [
+    "Observability", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "SpanTracer", "NullTracer", "TrafficAccountant", "NullAccountant",
+    "TERMINAL_STATUSES", "DEFAULT_TIME_BUCKETS", "DEFAULT_COUNT_BUCKETS",
+    "geometric_buckets", "cost_source_bytes", "solve_bytes", "chunk_bytes",
+    "gang_collective_bytes", "modeled_flops", "get_global", "reset_global",
+    "global_dump",
+]
+
+
+class Observability:
+    """One scheduler's (or one suite's) instrument bundle.
+
+    ``enabled=False`` keeps the registry live (stats' counters must keep
+    counting) but swaps tracing and traffic accounting for no-ops.
+    ``parent`` defaults to the process-global bundle; pass
+    ``parent=None`` explicitly via ``chain=False`` to isolate (tests).
+    """
+
+    def __init__(self, *, enabled: bool = True,
+                 clock: Callable[[], float] = time.monotonic,
+                 chain: bool = True,
+                 parent: "Observability | None" = None):
+        if parent is None and chain:
+            parent = get_global()
+        self.enabled = enabled
+        self.parent = parent
+        self.registry = MetricsRegistry(
+            parent=parent.registry if parent is not None else None)
+        if enabled:
+            self.tracer = SpanTracer(clock=clock)
+            self.traffic = TrafficAccountant(
+                parent=parent.traffic if parent is not None else None)
+        else:
+            self.tracer = NullTracer(clock=clock)
+            self.traffic = NullAccountant()
+
+    def dump(self) -> dict:
+        """Registry + traffic snapshot (the ``OBS_<suite>.json`` payload;
+        spans export separately as JSONL via ``tracer.write_jsonl``)."""
+        return {"enabled": self.enabled, "registry": self.registry.dump(),
+                "traffic": self.traffic.dump()}
+
+
+class _GlobalObservability(Observability):
+    """The process-global aggregation root (no parent, no clock user)."""
+
+    def __init__(self):
+        super().__init__(enabled=True, chain=False, parent=None)
+
+    def reset(self) -> None:
+        self.registry.reset()
+        self.traffic.reset()
+        self.tracer.clear()
+
+
+_GLOBAL: _GlobalObservability | None = None
+
+
+def get_global() -> _GlobalObservability:
+    """The process-global ``Observability`` every child chains to by
+    default (created on first use)."""
+    global _GLOBAL
+    if _GLOBAL is None:
+        _GLOBAL = _GlobalObservability()
+    return _GLOBAL
+
+
+def reset_global() -> None:
+    """Zero the global registry and accountant (between benchmark suites;
+    schedulers built BEFORE a reset keep counting into the old, orphaned
+    parent metrics — build them after)."""
+    get_global().reset()
+
+
+def global_dump() -> dict:
+    """Snapshot of the process-global bundle."""
+    return get_global().dump()

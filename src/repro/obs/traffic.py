@@ -1,0 +1,263 @@
+"""HBM-traffic accountant: modeled bytes per dispatch decision.
+
+MAP-UOT's thesis is that UOT solving is memory-bound, so the quantity to
+watch per serving decision is *bytes moved*, not wall-clock (on CPU the
+latter measures the host, not the schedule). This module charges the
+dispatch-table formulas from ``kernels/ops.py``'s module docstring —
+the single source of truth; tests assert this module against the same
+numbers — at every point a tier decision is made, and rolls them up
+per route for ``OBS_<suite>.json`` and a roofline-style bytes-vs-FLOPs
+summary via ``launch/roofline.py``.
+
+Formulas (``s`` = storage itemsize, ``T`` = iterations, ``L`` = lanes in
+the launch, ``G`` = cost-source read):
+
+* ``G``: ``M*N*s`` dense, ``(M+N)*(d+1)*4`` implicit coordinates
+* per-request solve: streamed ``G + 2*M*N*s*T``; resident
+  ``G + 2*M*N*s`` (implicit resident: ``G + M*N*s`` — no tile read)
+* scheduler chunk: streamed ``2*L*M*N*s*chunk_iters``; resident
+  ``2*L*M*N*s`` per chunk (admission pays ``G`` separately, once per
+  request)
+* gang solve: the streamed per-request formula on the row-sharded stack
+  plus ``2*N*4*T`` all-reduce bytes per device (ring all-reduce of the
+  fp32 (N,) column sums: reduce-scatter + all-gather — the same 2x
+  ``launch.roofline.collective_bytes`` charges)
+* FLOPs: ``4*M*N`` per iteration (two rescale multiplies + two reduction
+  adds per coupling element), the modeled count the roofline summary
+  divides by
+
+All charges are MODELED upper bounds at the launch's padded shapes:
+``T`` is the chunk/config budget, not per-lane early exit (the device-
+side tol latch is invisible to the host without extra syncs — measured
+bytes are the TPU-campaign follow-on, ROADMAP item 5). Charges aggregate
+by their full parameter key, so a dump's every record can be re-derived
+mechanically: ``record['bytes'] == record['count'] * formula(**key)``
+(tests and ``bench_chaos`` assert exactly that).
+
+``TrafficAccountant`` parent-chains like the metrics registry: scheduler-
+owned accountants forward to the process-global one, which
+``benchmarks/run.py`` dumps per suite.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.launch.roofline import RooflineTerms
+
+ROUTES = ("solve", "flush", "lane", "gang", "points")
+
+
+def cost_source_bytes(M: int, N: int, s: int, *, source: str = "dense",
+                      d: int | None = None) -> int:
+    """``G``: the cost-source read. ``M*N*s`` for a dense kernel operand,
+    ``(M+N)*(d+1)*4`` coordinate+norm floats for an implicit geometry."""
+    if source == "dense":
+        return M * N * s
+    if source == "implicit":
+        if d is None:
+            raise ValueError("implicit cost source needs d")
+        return (M + N) * (d + 1) * 4
+    raise ValueError(f"source must be 'dense' or 'implicit', got {source!r}")
+
+
+def solve_bytes(M: int, N: int, s: int, T: int, *, tier: str = "streamed",
+                source: str = "dense", d: int | None = None) -> int:
+    """Per-request full-solve coupling traffic: ``G + 2*M*N*s*T`` streamed,
+    ``G + 2*M*N*s`` resident (``G + M*N*s`` for implicit resident — the
+    tile is computed in VMEM, never read)."""
+    G = cost_source_bytes(M, N, s, source=source, d=d)
+    if tier == "streamed":
+        return G + 2 * M * N * s * T
+    if tier == "resident":
+        per = 1 if source == "implicit" else 2
+        return G + per * M * N * s
+    raise ValueError(f"tier must be 'streamed' or 'resident', got {tier!r}")
+
+
+def chunk_bytes(L: int, M: int, N: int, s: int, chunk_iters: int, *,
+                tier: str = "streamed") -> int:
+    """Scheduler chunk-advance traffic for an L-lane pool launch:
+    ``2*L*M*N*s*chunk_iters`` streamed, ``2*L*M*N*s`` resident."""
+    if tier == "streamed":
+        return 2 * L * M * N * s * chunk_iters
+    if tier == "resident":
+        return 2 * L * M * N * s
+    raise ValueError(f"tier must be 'streamed' or 'resident', got {tier!r}")
+
+
+def gang_collective_bytes(N: int, T: int) -> int:
+    """Per-device ICI bytes of a gang solve: ring all-reduce of the fp32
+    (N,) column sums each iteration (2x: reduce-scatter + all-gather)."""
+    return 2 * N * 4 * T
+
+
+def modeled_flops(M: int, N: int, T: int, *, lanes: int = 1) -> int:
+    """``4*M*N`` per iteration per lane (2 rescale muls + 2 reduction
+    adds per coupling element; O(M+N) terms dropped)."""
+    return 4 * M * N * T * lanes
+
+
+class TrafficAccountant:
+    """Aggregates modeled-byte charges keyed by their formula parameters.
+
+    One charge = one dispatch decision (a solve launch, a chunk advance,
+    a gang solve). ``dump()['records']`` keeps the full parameter key per
+    aggregate so byte totals remain mechanically checkable against the
+    formulas above.
+    """
+
+    enabled = True
+
+    def __init__(self, *, parent: "TrafficAccountant | None" = None):
+        self._parent = parent
+        self._lock = threading.Lock()
+        # key -> [count, bytes, coll_bytes, flops]
+        self._charges: dict[tuple, list] = {}
+
+    def _add(self, key: tuple, nbytes: int, coll: int, flops: int) -> None:
+        with self._lock:
+            agg = self._charges.setdefault(key, [0, 0, 0, 0])
+            agg[0] += 1
+            agg[1] += nbytes
+            agg[2] += coll
+            agg[3] += flops
+        if self._parent is not None:
+            self._parent._add(key, nbytes, coll, flops)
+
+    def charge_solve(self, *, route: str, tier: str, M: int, N: int,
+                     s: int, T: int, lanes: int = 1, source: str = "dense",
+                     d: int | None = None) -> int:
+        """A full-solve launch of ``lanes`` problems at (M, N): tier-1
+        ``solve_fused`` (lanes=1), a tier-2 bucketed batch (lanes=B), or
+        a gang solve (route='gang'). Returns the bytes charged."""
+        nbytes = lanes * solve_bytes(M, N, s, T, tier=tier, source=source,
+                                     d=d)
+        coll = gang_collective_bytes(N, T) if route == "gang" else 0
+        self._add(("solve", route, tier, source, M, N, s, T, lanes, d),
+                  nbytes, coll, modeled_flops(M, N, T, lanes=lanes))
+        return nbytes
+
+    def charge_chunk(self, *, route: str, tier: str, L: int, M: int,
+                     N: int, s: int, chunk_iters: int) -> int:
+        """One scheduler chunk advance of an L-lane (M, N) pool."""
+        nbytes = chunk_bytes(L, M, N, s, chunk_iters, tier=tier)
+        # FLOPs run every chunk iteration regardless of tier — the
+        # resident tier saves bytes, not arithmetic
+        self._add(("chunk", route, tier, "dense", M, N, s, chunk_iters, L,
+                   None),
+                  nbytes, 0, modeled_flops(M, N, chunk_iters, lanes=L))
+        return nbytes
+
+    def charge_admission(self, *, route: str, M: int, N: int, s: int,
+                         source: str = "dense", d: int | None = None,
+                         count: int = 1) -> int:
+        """Admission's cost-source payment: ``G`` per admitted request
+        (the stepped rows of the dispatch table pay ``G`` at admission,
+        not per chunk)."""
+        per = cost_source_bytes(M, N, s, source=source, d=d)
+        for _ in range(count):
+            self._add(("admit", route, "admit", source, M, N, s, 0, 1, d),
+                      per, 0, 0)
+        return per * count
+
+    # ---- rollups ----------------------------------------------------------
+
+    def records(self) -> list[dict]:
+        """Every aggregate with its full formula key — the mechanically
+        checkable surface."""
+        with self._lock:
+            items = list(self._charges.items())
+        out = []
+        for (kind, route, tier, source, M, N, s, T, lanes, d), agg in items:
+            out.append({"kind": kind, "route": route, "tier": tier,
+                        "source": source, "M": M, "N": N, "itemsize": s,
+                        "iters": T, "lanes": lanes, "d": d,
+                        "count": agg[0], "bytes": agg[1],
+                        "coll_bytes": agg[2], "flops": agg[3]})
+        return out
+
+    def totals(self) -> dict:
+        with self._lock:
+            aggs = list(self._charges.values())
+        return {
+            "charges": sum(a[0] for a in aggs),
+            "bytes": sum(a[1] for a in aggs),
+            "coll_bytes": sum(a[2] for a in aggs),
+            "flops": sum(a[3] for a in aggs),
+        }
+
+    def per_route(self) -> dict:
+        out: dict[str, dict] = {}
+        for r in self.records():
+            agg = out.setdefault(r["route"], {"charges": 0, "bytes": 0,
+                                              "coll_bytes": 0, "flops": 0})
+            agg["charges"] += r["count"]
+            agg["bytes"] += r["bytes"]
+            agg["coll_bytes"] += r["coll_bytes"]
+            agg["flops"] += r["flops"]
+        return out
+
+    def bytes_per_solve(self) -> float:
+        """Mean modeled bytes per charged solve/chunk decision."""
+        t = self.totals()
+        return t["bytes"] / t["charges"] if t["charges"] else 0.0
+
+    def roofline(self) -> dict:
+        """Bytes-vs-FLOPs summary on the TPU-v5e roofline constants
+        (``launch.roofline``): which side of the machine the modeled
+        workload would saturate, and the arithmetic intensity."""
+        t = self.totals()
+        terms = RooflineTerms(float(t["flops"]), float(t["bytes"]),
+                              float(t["coll_bytes"]))
+        out = terms.as_dict()
+        out["arithmetic_intensity"] = (t["flops"] / t["bytes"]
+                                       if t["bytes"] else 0.0)
+        return out
+
+    def dump(self) -> dict:
+        """The traffic half of ``OBS_<suite>.json``."""
+        return {"totals": self.totals(), "per_route": self.per_route(),
+                "bytes_per_solve": self.bytes_per_solve(),
+                "roofline": self.roofline(), "records": self.records()}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._charges.clear()
+
+
+class NullAccountant:
+    """Disabled accountant: same surface, charges dropped."""
+
+    enabled = False
+
+    def charge_solve(self, **kw) -> int:
+        return 0
+
+    def charge_chunk(self, **kw) -> int:
+        return 0
+
+    def charge_admission(self, **kw) -> int:
+        return 0
+
+    def records(self) -> list:
+        return []
+
+    def totals(self) -> dict:
+        return {"charges": 0, "bytes": 0, "coll_bytes": 0, "flops": 0}
+
+    def per_route(self) -> dict:
+        return {}
+
+    def bytes_per_solve(self) -> float:
+        return 0.0
+
+    def roofline(self) -> dict:
+        return RooflineTerms(0.0, 0.0, 0.0).as_dict()
+
+    def dump(self) -> dict:
+        return {"totals": self.totals(), "per_route": {},
+                "bytes_per_solve": 0.0, "roofline": self.roofline(),
+                "records": []}
+
+    def reset(self) -> None:
+        pass

@@ -106,6 +106,50 @@ propagate to the caller, nothing is shared, nothing to contain):
   (``repro.serve.faults``, tests/test_faults*.py, and the
   ``benchmarks/bench_chaos.py`` discrete-event chaos harness).
 
+Observability (``repro.obs``) — every serving tier carries one bundle
+(``obs=`` on the tier 2/3/4 constructors: ``None`` builds a fresh enabled
+bundle chained to the process-global one, ``False`` keeps the registry but
+swaps the tracer/accountant for null twins, or pass an
+``obs.Observability`` directly):
+
+* **Metrics registry** — the running totals behind ``stats()`` ARE
+  registry counters (never a parallel tally): ``serve.submitted``,
+  ``serve.completed``, ``serve.rejected``, ``serve.failed``,
+  ``serve.retried_ok``, ``serve.timed_out``, ``serve.shed_dropped``,
+  ``serve.shed_degraded``, ``serve.deadline_misses``,
+  ``serve.deadlined_completed``, ``serve.unhealthy_evictions``,
+  ``serve.lost_results``, ``serve.window_dropped_{requests,occupancy,
+  dispositions}`` (what the ``max_log`` trims discarded — surfaced in
+  ``stats()['window_dropped']``), dispatch routing under
+  ``serve.dispatch.{resident,streamed}``, wait/latency/iteration
+  histograms under ``serve.{wait_s,latency_s,iters}``, and
+  occupancy/queue-depth gauges. Tier 4 mirrors the same names under
+  ``cluster.*`` (plus ``requeued``, ``gang_timeouts``,
+  ``gang_completed``, ``devices_quarantined``) and adds router counters
+  ``cluster.router.{least_loaded,affinity_hits,affinity_spills,
+  shared_pool,placement_stalls,gang_routed}``; tier 2 counts
+  ``engine.{submitted,flushes,flushed}``.
+* **Span tracer** — per-request lifecycle events (``submit``, ``queue``,
+  ``place``, ``chunk``, ``evict``, ``requeue``, ``escalate``, ``shed``,
+  ``gang``, ``lost``, ``poll``, and exactly one terminal ``complete`` per
+  rid — the zero-span-loss invariant ``SpanTracer.check_complete``
+  audits and ``benchmarks/bench_chaos.py`` hard-asserts). Export with
+  ``write_jsonl`` / render with ``render_timeline``. Chunk events ride
+  host flag arrays the eviction scan already fetches — no extra device
+  syncs.
+* **HBM-traffic accountant** — every dispatch decision (admission's
+  cost-source payment, chunk advances, full solves, gang collectives) is
+  charged its modeled bytes from the ``kernels.ops`` dispatch-table
+  formulas at padded shapes, keyed by route (``flush``/``lane``/
+  ``gang``) and tier (``streamed``/``resident``), with a roofline
+  summary via ``launch.roofline``. Totals are mechanically re-derivable
+  from the per-record formula keys (asserted in tests and the chaos
+  bench).
+
+``benchmarks/run.py`` dumps the global bundle to ``OBS_<suite>.json`` per
+suite; ``benchmarks/bench_obs.py`` is the obs-on-vs-off overhead gate
+(<= 5% on throughput and p99).
+
 ``ServeEngine`` is the LLM-token sibling of tier 3: slot-based continuous
 batching over ``decode_step`` (the architecture ``UOTScheduler`` mirrors,
 with solver lanes in place of KV-cache slots).

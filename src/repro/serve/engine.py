@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obslib
 from repro.core.problem import UOTConfig
 from repro.kernels import ops as uot_ops
 
@@ -141,7 +142,8 @@ class UOTBatchEngine:
     def __init__(self, cfg: UOTConfig, *, max_batch: int = 64,
                  m_bucket: int = 64, n_bucket: int = 128,
                  storage_dtype=None, interpret: bool | None = None,
-                 impl: str | None = None):
+                 impl: str | None = None,
+                 obs: "obslib.Observability | bool | None" = None):
         self.cfg = cfg
         self.max_batch = max_batch
         self.m_bucket = m_bucket
@@ -149,6 +151,19 @@ class UOTBatchEngine:
         self.storage_dtype = storage_dtype
         self.interpret = interpret
         self.impl = impl
+        # Observability (see repro.obs): "engine.*" metrics; flush()
+        # charges each request's modeled solve bytes on the 'flush' route,
+        # with the tier taken from the actual dispatch decisions
+        # (ops.dispatch_observer) when impl routes via 'auto'/'resident'.
+        if obs is None:
+            obs = obslib.Observability()
+        elif obs is False:
+            obs = obslib.Observability(enabled=False, chain=False)
+        self.obs = obs
+        reg = obs.registry
+        self._c_submitted = reg.counter("engine.submitted")
+        self._c_flushes = reg.counter("engine.flushes")
+        self._c_flushed = reg.counter("engine.flushed")
         self._queue: list[UOTRequest] = []
         self._next_rid = 0
 
@@ -158,6 +173,7 @@ class UOTBatchEngine:
         # instead of three boundary crossings per request
         rid = self._next_rid
         self._next_rid += 1
+        self._c_submitted.inc()
         self._queue.append(UOTRequest(rid, np.asarray(K), np.asarray(a),
                                       np.asarray(b)))
         return rid
@@ -178,6 +194,7 @@ class UOTBatchEngine:
         g = PointCloudGeometry.from_points(x, y, scale=scale)
         rid = self._next_rid
         self._next_rid += 1
+        self._c_submitted.inc()
         self._queue.append(UOTRequest(
             rid, None, np.asarray(a), np.asarray(b),
             x=np.asarray(g.x), y=np.asarray(g.y), xn=np.asarray(g.xn),
@@ -193,19 +210,54 @@ class UOTBatchEngine:
         reqs, self._queue = self._queue, []
         if not reqs:
             return {}
+        self._c_flushes.inc()
+        self._c_flushed.inc(len(reqs))
         dense = [r for r in reqs if r.K is not None]
         points = [r for r in reqs if r.K is None]
         out: dict[int, jax.Array] = {}
-        if dense:
-            results = uot_ops.solve_fused_bucketed(
-                [(r.K, r.a, r.b) for r in dense], self.cfg,
-                interpret=self.interpret, storage_dtype=self.storage_dtype,
-                impl=self.impl, max_batch=self.max_batch,
-                m_bucket=self.m_bucket, n_bucket=self.n_bucket)
-            out.update({r.rid: P for r, (P, _) in zip(dense, results)})
-        if points:
-            out.update(self._flush_points(points))
+        # record the flush's actual tier routing per (bucket, implicit)
+        # so the traffic charges below use what dispatch DID, not a
+        # re-derivation of what it should do
+        decisions: dict[tuple[int, int, bool], tuple[str, int, int]] = {}
+
+        def _observe(kind, *, M, N, itemsize, num_iters, implicit):
+            decisions[(M, N, implicit)] = (kind, itemsize, num_iters)
+
+        with uot_ops.dispatch_observer(_observe):
+            if dense:
+                results = uot_ops.solve_fused_bucketed(
+                    [(r.K, r.a, r.b) for r in dense], self.cfg,
+                    interpret=self.interpret,
+                    storage_dtype=self.storage_dtype,
+                    impl=self.impl, max_batch=self.max_batch,
+                    m_bucket=self.m_bucket, n_bucket=self.n_bucket)
+                out.update({r.rid: P for r, (P, _) in zip(dense, results)})
+            if points:
+                out.update(self._flush_points(points))
+        self._charge_flush(reqs, decisions)
         return out
+
+    def _charge_flush(self, reqs, decisions) -> None:
+        """Charge each flushed request's modeled solve bytes (route
+        'flush') at its padded bucket shape. An explicit (non-auto) impl
+        makes no routing decision and streams — the fallback tier when a
+        request's bucket has no recorded decision."""
+        if not self.obs.traffic.enabled:
+            return
+        s_default = (np.dtype(self.storage_dtype).itemsize
+                     if self.storage_dtype is not None else 4)
+        for r in reqs:
+            M, N = r.shape
+            Mb, Nb = uot_ops.bucket_shape(M, N, self.m_bucket,
+                                          self.n_bucket)
+            implicit = r.K is None
+            kind, s, T = decisions.get(
+                (Mb, Nb, implicit),
+                ("streamed", s_default, self.cfg.num_iters))
+            self.obs.traffic.charge_solve(
+                route="flush", tier=kind, M=Mb, N=Nb, s=s, T=T,
+                source="implicit" if implicit else "dense",
+                d=int(r.x.shape[1]) if implicit else None)
 
     def _flush_points(self, reqs) -> dict[int, np.ndarray]:
         """Bucketed batched solving of coordinate-payload requests.

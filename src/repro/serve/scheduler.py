@@ -103,11 +103,23 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obslib
 from repro.core.problem import UOTConfig
 from repro.core.health import (InvalidProblemError, escalate_log_solve,
                                validate_problem)
 from repro.geometry import PointCloudGeometry
 from repro.kernels import ops
+
+# registry counter names shared by both schedulers ("serve.<name>" /
+# "cluster.<name>"): the running totals stats() reports — refactored
+# from ad-hoc int fields onto repro.obs.MetricsRegistry (PR 7); the
+# stats() dict shapes are unchanged
+_COUNTER_NAMES = (
+    "submitted", "completed", "rejected", "failed", "retried_ok",
+    "timed_out", "unhealthy_evictions", "lost_results", "deadline_misses",
+    "deadlined_completed", "shed_dropped", "shed_degraded",
+    "window_dropped_requests", "window_dropped_occupancy",
+    "window_dropped_dispositions")
 
 
 class QueueFullError(RuntimeError):
@@ -131,11 +143,14 @@ def submit_with_retry(scheduler, *args, attempts: int = 6,
     the caller learns the queue never drained; nothing is silently
     dropped). ``submit=`` overrides the bound method (e.g.
     ``scheduler.submit_points``); ``sleep=`` is injectable for tests and
-    simulated clocks. Validation errors (``InvalidProblemError``) are NOT
+    simulated clocks — when omitted it resolves to the *scheduler's* own
+    injected ``sleep`` (both schedulers accept ``sleep=`` next to
+    ``clock=``), so a fake-clock scheduler never races wall time through
+    this helper. Validation errors (``InvalidProblemError``) are NOT
     retried — a refused problem stays refused.
     """
     if sleep is None:
-        sleep = time.sleep
+        sleep = getattr(scheduler, "sleep", None) or time.sleep
     fn = submit if submit is not None else scheduler.submit
     rng = np.random.default_rng(seed)
     for attempt in range(attempts):
@@ -303,7 +318,9 @@ class UOTScheduler:
                  degrade_iters: int | None = None,
                  validate: bool = True, retry_escalate: bool = True,
                  escalate_factor: int = 2, fault_injector=None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 obs: "obslib.Observability | bool | None" = None):
         if lanes_per_pool < 1:
             raise ValueError("lanes_per_pool must be >= 1")
         if chunk_iters < 1:
@@ -346,6 +363,28 @@ class UOTScheduler:
         self.escalate_factor = escalate_factor
         self.fault_injector = fault_injector
         self.clock = clock
+        self.sleep = sleep
+        # Observability: None -> a fresh enabled bundle on this scheduler's
+        # clock, chained to the process-global one; False -> metrics only
+        # (stats() needs the registry) with tracing/traffic disabled and
+        # no global chaining; or pass a bundle. See repro.obs.
+        if obs is None:
+            obs = obslib.Observability(clock=clock)
+        elif obs is False:
+            obs = obslib.Observability(enabled=False, clock=clock,
+                                       chain=False)
+        self.obs = obs
+        reg = obs.registry
+        self._c = {k: reg.counter("serve." + k) for k in _COUNTER_NAMES}
+        self._h_wait = reg.histogram("serve.wait_s")
+        self._h_latency = reg.histogram("serve.latency_s")
+        self._h_iters = reg.histogram("serve.iters",
+                                      buckets=obslib.DEFAULT_COUNT_BUCKETS)
+        self._g_queued = reg.gauge("serve.queued")
+        self._g_in_flight = reg.gauge("serve.in_flight")
+        self._g_occupancy = reg.gauge("serve.occupancy")
+        self._c_dispatch = {k: reg.counter("serve.dispatch." + k)
+                            for k in ("resident", "streamed")}
 
         self._queue: list[ScheduledRequest] = []
         self._pools: dict[tuple[int, int], _LanePool] = {}
@@ -361,20 +400,10 @@ class UOTScheduler:
         self._steps = 0
         self.request_log: list[RequestTelemetry] = []
         self.occupancy_log: list[dict] = []
-        # Running deadline accounting (survives request_log trimming): the
-        # first ingredient of deadline-aware shedding, and what lets
-        # bench_serve report miss-rate alongside p99.
-        self._deadline_misses = 0
-        self._deadlined_completed = 0
-        self._shed_dropped = 0
-        self._shed_degraded = 0
-        # Running fault-containment totals (exact, survive log trimming)
-        self._rejected = 0
-        self._failed = 0
-        self._retried_ok = 0
-        self._timed_out = 0
-        self._unhealthy_evictions = 0
-        self._lost_results = 0
+        # The running totals (deadline accounting, shed decisions,
+        # fault-containment outcomes) live in ``self._c`` registry
+        # counters — exact, survive request_log trimming, and visible in
+        # the process-global registry dump. stats() reads them back.
 
     # ---- submission -------------------------------------------------------
 
@@ -383,11 +412,13 @@ class UOTScheduler:
         """Record a refused admission: telemetry + a typed disposition so
         ``poll(rid)`` resolves the rid instead of returning pending-forever,
         then re-raise with the rid attached."""
-        self._rejected += 1
+        self._c["rejected"].inc()
         self.request_log.append(RequestTelemetry(
             rid=rid, bucket=bucket, lane=-1, arrival=now, admitted=now,
             completed=now, iters=0, converged=False, deadline=deadline,
             status="rejected"))
+        self.obs.tracer.emit(rid, "complete", status="rejected",
+                             reason=err.reason)
         self._store_disposition(RequestFailure(
             rid=rid, status="rejected", reason=f"{err.reason}: {err}"))
         raise err
@@ -396,6 +427,7 @@ class UOTScheduler:
         self._dispositions[failure.rid] = failure
         while len(self._dispositions) > self.max_log:
             self._dispositions.pop(next(iter(self._dispositions)))
+            self._c["window_dropped_dispositions"].inc()
 
     def submit(self, K, a, b, *, deadline: float | None = None,
                priority: int = 0) -> int:
@@ -424,6 +456,10 @@ class UOTScheduler:
         M, N = K.shape
         bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
         now = self.clock()
+        self._c["submitted"].inc()
+        self.obs.tracer.emit(rid, "submit", M=M, N=N, bucket=list(bucket),
+                             kind="dense", deadline=deadline,
+                             priority=priority)
         if self.validate:
             try:
                 validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
@@ -432,6 +468,8 @@ class UOTScheduler:
         self._queue.append(ScheduledRequest(
             rid=rid, K=K, a=a, b=b, shape=(M, N), bucket=bucket,
             arrival=now, deadline=deadline, priority=priority, fault=fault))
+        self.obs.tracer.emit(rid, "queue", depth=len(self._queue),
+                             route="lane")
         return rid
 
     def submit_points(self, x, y, a, b, *, scale: float = 1.0,
@@ -466,6 +504,10 @@ class UOTScheduler:
             _, a, b, fault = self.fault_injector.on_submit(rid, None, a, b)
         bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
         now = self.clock()
+        self._c["submitted"].inc()
+        self.obs.tracer.emit(rid, "submit", M=M, N=N, bucket=list(bucket),
+                             kind="points", deadline=deadline,
+                             priority=priority)
         if self.validate:
             try:
                 validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
@@ -476,6 +518,8 @@ class UOTScheduler:
             arrival=now, deadline=deadline, priority=priority,
             x=np.asarray(g.x), y=np.asarray(g.y), xn=np.asarray(g.xn),
             yn=np.asarray(g.yn), scale=float(scale), fault=fault))
+        self.obs.tracer.emit(rid, "queue", depth=len(self._queue),
+                             route="lane")
         return rid
 
     @property
@@ -500,8 +544,13 @@ class UOTScheduler:
         """
         out = self._results.pop(rid, None)
         if out is not None:
+            self.obs.tracer.emit(rid, "poll", resolved="coupling")
             return out
-        return self._dispositions.pop(rid, None)
+        out = self._dispositions.pop(rid, None)
+        self.obs.tracer.emit(
+            rid, "poll",
+            resolved="failure" if out is not None else "pending")
+        return out
 
     # ---- the scheduling loop ---------------------------------------------
 
@@ -521,9 +570,11 @@ class UOTScheduler:
         for bucket, pool in list(self._pools.items()):
             if pool.requests:
                 pool.idle_steps = 0
-                pool.state = ops.solve_fused_stepped(
-                    pool.state, self.chunk_iters, self.cfg,
-                    interpret=self.interpret, impl=self.impl)
+                with ops.dispatch_counters() as counters:
+                    pool.state = ops.solve_fused_stepped(
+                        pool.state, self.chunk_iters, self.cfg,
+                        interpret=self.interpret, impl=self.impl)
+                self._charge_chunk(pool, counters)
             else:
                 # a pool pins lanes x Mp x Np of device memory; traffic
                 # whose shape never recurs must not pin it forever
@@ -548,6 +599,25 @@ class UOTScheduler:
         return out
 
     # ---- internals --------------------------------------------------------
+
+    def _charge_chunk(self, pool, counters: dict) -> None:
+        """Charge one chunk advance's modeled HBM bytes to the traffic
+        accountant and fold the pool's ``impl='auto'`` routing into the
+        registry dispatch counters. With an explicit (non-auto) impl the
+        stepped path makes no routing decision — the streamed formula
+        applies (the resident chunk only runs via auto/resident routing).
+        """
+        for k, v in counters.items():
+            if v:
+                self._c_dispatch[k].inc(v)
+        if not self.obs.traffic.enabled:
+            return
+        tier = ("resident" if counters["resident"] > 0 else "streamed")
+        Mb, Nb = pool.bucket
+        self.obs.traffic.charge_chunk(
+            route="lane", tier=tier, L=pool.num_lanes, M=Mb, N=Nb,
+            s=jnp.dtype(pool.state.P.dtype).itemsize,
+            chunk_iters=self.chunk_iters)
 
     def _request_kernel(self, req: ScheduledRequest) -> np.ndarray:
         """The request's (M, N) coupling matrix for an off-lane re-solve:
@@ -587,7 +657,8 @@ class UOTScheduler:
         while len(self._results) > self.max_results:
             old = next(iter(self._results))
             self._results.pop(old)
-            self._lost_results += 1
+            self._c["lost_results"].inc()
+            self.obs.tracer.emit(old, "lost")
             self._store_disposition(RequestFailure(
                 rid=old, status="lost",
                 reason="coupling evicted from the bounded result store "
@@ -596,12 +667,20 @@ class UOTScheduler:
     def _evict_finished(self) -> dict[int, np.ndarray]:
         completed: dict[int, np.ndarray] = {}
         now = self.clock()
+        tr = self.obs.tracer
         for pool in self._pools.values():
             if not pool.requests:
                 continue
             iters = np.asarray(pool.state.iters)
             conv = np.asarray(pool.state.converged)
             healthy = np.asarray(pool.state.healthy)
+            if tr.enabled:
+                # per-request chunk progress, from the host copies this
+                # eviction pass already fetched — no extra device sync
+                for l, req in pool.requests.items():
+                    tr.emit(req.rid, "chunk", lane=l, device=-1,
+                            iters=int(iters[l]), converged=bool(conv[l]),
+                            healthy=bool(healthy[l]))
             # a degraded request finishes at its reduced budget, not the
             # global cap (the budget is enforced at chunk granularity —
             # the device gate still runs lanes toward cfg.num_iters); an
@@ -634,23 +713,27 @@ class UOTScheduler:
                     if not np.all(np.isfinite(P)):
                         P = None
                 n_iters = int(iters[lane])
+                tr.emit(req.rid, "evict", lane=lane, device=-1,
+                        iters=n_iters, converged=bool(conv[lane]),
+                        healthy=bool(healthy[lane] and P is not None))
                 if P is not None:
                     timed_out = (self.cfg.tol is not None
                                  and not conv[lane]
                                  and req.max_iters is None)
                     status = "timed_out" if timed_out else "ok"
-                    self._timed_out += timed_out
+                    self._c["timed_out"].inc(int(timed_out))
                 else:
-                    self._unhealthy_evictions += 1
+                    self._c["unhealthy_evictions"].inc()
+                    tr.emit(req.rid, "escalate", retries=req.retries + 1)
                     P, n_iters = self._escalate(req)
                     status = "retried_ok" if P is not None else "failed"
                 if P is not None:
                     if status == "retried_ok":
-                        self._retried_ok += 1
+                        self._c["retried_ok"].inc()
                     completed[req.rid] = self._results[req.rid] = P
                     self._trim_results()
                 else:
-                    self._failed += 1
+                    self._c["failed"].inc()
                     self._store_disposition(RequestFailure(
                         rid=req.rid, status="failed",
                         reason="lane state went non-finite and the "
@@ -664,8 +747,14 @@ class UOTScheduler:
                     deadline=req.deadline, shed=req.shed,
                     status=status, retries=req.retries)
                 if rec.deadline is not None:
-                    self._deadlined_completed += 1
-                    self._deadline_misses += rec.missed
+                    self._c["deadlined_completed"].inc()
+                    self._c["deadline_misses"].inc(int(rec.missed))
+                self._c["completed"].inc()
+                self._h_wait.observe(rec.wait)
+                self._h_latency.observe(rec.latency)
+                self._h_iters.observe(n_iters)
+                tr.emit(req.rid, "complete", status=status, iters=n_iters,
+                        retries=req.retries)
                 self.request_log.append(rec)
             # one pool update for the whole round's evictions; the index
             # vector is padded to the pool size with duplicates (same
@@ -706,13 +795,17 @@ class UOTScheduler:
                 or now <= req.deadline):
             return False
         if self.shed_policy == "drop":
-            self._shed_dropped += 1
-            self._rejected += 1
+            self._c["shed_dropped"].inc()
+            self._c["rejected"].inc()
             self.request_log.append(RequestTelemetry(
                 rid=req.rid, bucket=req.bucket, lane=-1,
                 arrival=req.arrival, admitted=now, completed=now,
                 iters=0, converged=False, deadline=req.deadline,
                 shed="dropped", status="rejected"))
+            self.obs.tracer.emit(req.rid, "shed", policy="drop")
+            self.obs.tracer.emit(req.rid, "complete", status="rejected",
+                                 reason="deadline passed at admission "
+                                        "(shed_policy='drop')")
             # a dropped request must still resolve at poll() — 'rejected'
             # disposition, never silently absent
             self._store_disposition(RequestFailure(
@@ -720,7 +813,8 @@ class UOTScheduler:
                 reason="deadline already passed at admission "
                        "(shed_policy='drop')"))
             return True
-        self._shed_degraded += 1          # 'degrade'
+        self._c["shed_degraded"].inc()    # 'degrade'
+        self.obs.tracer.emit(req.rid, "shed", policy="degrade")
         req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
         req.shed = "degraded"
         return False
@@ -748,6 +842,8 @@ class UOTScheduler:
             placements.setdefault(req.bucket, []).append((lane, req))
             pool.requests[lane] = req
             pool.admitted_at[lane] = now
+            self.obs.tracer.emit(req.rid, "place", lane=lane, device=-1,
+                                 bucket=list(req.bucket), route="lane")
         for bucket, placed in placements.items():
             # Normalize to the bucket shape host-side (numpy) so lane_admit
             # never traces per request shape, and land a round's admissions
@@ -789,6 +885,9 @@ class UOTScheduler:
             ap[j, :M] = req.a
             bp[j, :N] = req.b
             lanes[j] = lane
+        self.obs.traffic.charge_admission(
+            route="lane", M=Mb, N=Nb, s=4, source="dense",
+            count=len(placed))
         pool.state = ops.lane_admit(
             pool.state, jnp.asarray(lanes), jnp.asarray(Kp),
             jnp.asarray(ap), jnp.asarray(bp))
@@ -823,17 +922,31 @@ class UOTScheduler:
             x=jnp.asarray(xs), y=jnp.asarray(ys), xn=jnp.asarray(xns),
             yn=jnp.asarray(yns), m_valid=jnp.asarray(mv),
             n_valid=jnp.asarray(nv), scale=scale)
+        self.obs.traffic.charge_admission(
+            route="lane", M=Mb, N=Nb, s=4, source="implicit", d=d,
+            count=len(placed))
         pool.state = ops.lane_admit(
             pool.state, jnp.asarray(lanes), g.kernel(self.cfg.reg),
             jnp.asarray(ap), jnp.asarray(bp))
 
     def _snapshot_occupancy(self) -> None:
+        occ = {str(b): p.occupancy for b, p in self._pools.items()}
         self.occupancy_log.append({
             "step": self._steps,
             "queued": len(self._queue),
-            "deadline_misses": self._deadline_misses,  # running total
-            "pools": {str(b): p.occupancy for b, p in self._pools.items()},
+            "deadline_misses": self._c["deadline_misses"].value,  # running
+            "pools": occ,
         })
+        self._g_queued.set(len(self._queue))
+        self._g_in_flight.set(self.in_flight)
+        self._g_occupancy.set(sum(occ.values()) / len(occ) if occ else 0.0)
+        # the bounded telemetry window silently narrows what stats()'s
+        # latency/p99 aggregates describe — count what falls off so the
+        # truncation is visible (stats()['window_dropped'] + registry)
+        self._c["window_dropped_occupancy"].inc(
+            max(0, len(self.occupancy_log) - self.max_log))
+        self._c["window_dropped_requests"].inc(
+            max(0, len(self.request_log) - self.max_log))
         del self.occupancy_log[:-self.max_log]
         del self.request_log[:-self.max_log]
 
@@ -844,22 +957,32 @@ class UOTScheduler:
         (the last ``max_log`` completions / occupancy snapshots).
         ``deadline_misses`` / ``miss_rate`` are *running* totals over every
         completion (misses / completions-that-had-deadlines), so they stay
-        correct after the window trims."""
+        correct after the window trims; ``window_dropped`` counts what the
+        trims discarded, so the narrowing itself is visible. The running
+        totals are registry counters (``serve.*`` in ``self.obs.registry``
+        — see ``repro.serve``'s Observability section for the mapping)."""
+        c = self._c
         misses = {
-            "deadline_misses": self._deadline_misses,
-            "miss_rate": (self._deadline_misses / self._deadlined_completed
-                          if self._deadlined_completed else 0.0),
+            "deadline_misses": c["deadline_misses"].value,
+            "miss_rate": (c["deadline_misses"].value
+                          / c["deadlined_completed"].value
+                          if c["deadlined_completed"].value else 0.0),
             # running shed totals (drop: refused a lane at admission;
             # degrade: admitted with the reduced iteration budget)
-            "shed_dropped": self._shed_dropped,
-            "shed_degraded": self._shed_degraded,
+            "shed_dropped": c["shed_dropped"].value,
+            "shed_degraded": c["shed_degraded"].value,
             # running fault-containment totals (exact; survive trimming)
-            "rejected": self._rejected,
-            "failed": self._failed,
-            "retried_ok": self._retried_ok,
-            "timed_out": self._timed_out,
-            "unhealthy_evictions": self._unhealthy_evictions,
-            "lost_results": self._lost_results,
+            "rejected": c["rejected"].value,
+            "failed": c["failed"].value,
+            "retried_ok": c["retried_ok"].value,
+            "timed_out": c["timed_out"].value,
+            "unhealthy_evictions": c["unhealthy_evictions"].value,
+            "lost_results": c["lost_results"].value,
+            "window_dropped": {
+                "requests": c["window_dropped_requests"].value,
+                "occupancy": c["window_dropped_occupancy"].value,
+                "dispositions": c["window_dropped_dispositions"].value,
+            },
         }
         status_counts: dict[str, int] = {}
         for t in self.request_log:
