@@ -42,6 +42,14 @@ one suite's work. Mapping to the paper:
                         enabled vs disabled; hard-asserts <= 5% overhead
                         on throughput and p99; BENCH_OBS_SMOKE=1 for the
                         CI smoke run)
+  bench_overload     -> beyond-paper (overload robustness: 3x-capacity
+                        Poisson burst, predictive admission + degrade
+                        ladder vs the drop-policy baseline on a simulated
+                        clock; hard-asserts zero lost requests, zero SLO
+                        misses among full-quality completions, labeled
+                        degrades, goodput >= 1.5x the baseline, and a 12x
+                        spike escalating into the sliced 1-D tier;
+                        BENCH_OVERLOAD_SMOKE=1 for the CI smoke run)
 """
 import argparse
 import json
@@ -67,11 +75,12 @@ def main(argv=None) -> None:
                             bench_memory, bench_distributed,
                             bench_application, bench_moe_router, bench_batch,
                             bench_serve, bench_resident, bench_geometry,
-                            bench_cluster, bench_chaos, bench_obs)
+                            bench_cluster, bench_chaos, bench_obs,
+                            bench_overload)
     mods = [bench_uot, bench_traffic, bench_kernel, bench_memory,
             bench_distributed, bench_application, bench_moe_router,
             bench_batch, bench_serve, bench_resident, bench_geometry,
-            bench_cluster, bench_chaos, bench_obs]
+            bench_cluster, bench_chaos, bench_obs, bench_overload]
     if args.suite:
         known = {m.__name__.split(".")[-1] for m in mods}
         unknown = set(args.suite) - known

@@ -94,6 +94,20 @@ inherited with the same semantics):
   the ``shed_policy='degrade'`` contract applied to the gang. The gang
   mesh itself is NOT narrowed by quarantine: the blackout model poisons
   lane-pool *state*, which gang solves never read.
+
+Overload model (``predictive=True``; the ``UOTScheduler`` semantics —
+see ``repro.serve``'s overload model section — applied to the LANE
+route): SLO-feasibility admission (``InfeasibleDeadline`` under
+``shed_policy='drop'``, immediate ladder walk under ``'degrade'``),
+least-slack admission ordering once the cluster-wide service-time model
+calibrates, a brownout controller on total backlog over healthy lane
+capacity, and the degrade ladder ending in the host-side sliced 1-D
+tier (``route='sliced'``, never occupies a (device, lane) slot). The
+feasibility gate never judges gang-routed requests — the lane-
+calibrated model does not describe row-sharded gang solves; the gang
+tier keeps its latched ``gang_timeout`` degradation instead. A point
+request the ladder walked to level 2 is taken by the sliced tier from
+EITHER queue (it is route-independent and cheaper than any launch).
 """
 from __future__ import annotations
 
@@ -110,8 +124,12 @@ from repro.core.problem import UOTConfig
 from repro.core import distributed
 from repro.core.health import (InvalidProblemError, escalate_log_solve,
                                validate_problem)
+from repro.core.predict import IterPredictor, estimate_truncation_error
 from repro.geometry import PointCloudGeometry
+from repro.geometry.sliced import lift_coupling_np, sliced_uot
 from repro.kernels import ops
+from repro.serve.overload import (BrownoutController, InfeasibleDeadline,
+                                  queue_pressure)
 from repro.serve.scheduler import (_COUNTER_NAMES, QueueFullError,
                                    RequestFailure, RequestTelemetry,
                                    ScheduledRequest)
@@ -124,8 +142,9 @@ from repro.cluster.lanes import (ClusterLaneState, cluster_admit,
 @dataclasses.dataclass
 class ClusterRequestTelemetry(RequestTelemetry):
     """Per-request record with the cluster placement on top: which device
-    shard served the lanes (-1 for gang/dropped requests) and which route
-    the request took ('lane', 'gang', or 'dropped')."""
+    shard served the lanes (-1 for gang/sliced/dropped requests) and which
+    route the request took ('lane', 'gang', 'sliced' — the level-2
+    degrade tier, solved host-side off any lane — or 'dropped')."""
 
     device: int = -1
     route: str = "lane"
@@ -219,6 +238,12 @@ class ClusterScheduler:
                  lane_budget: Callable[[int, int], bool] | None = None,
                  validate: bool = True, retry_escalate: bool = True,
                  escalate_factor: int = 2, fault_injector=None,
+                 predictive: bool = False,
+                 seconds_per_iter: float | None = None,
+                 feasibility_margin: float = 1.0,
+                 brownout: "BrownoutController | None" = None,
+                 predictor: "IterPredictor | None" = None,
+                 sliced_n_proj: int = 32, sliced_seed: int = 0,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
                  obs: "obslib.Observability | bool | None" = None):
@@ -284,6 +309,26 @@ class ClusterScheduler:
         self.retry_escalate = retry_escalate
         self.escalate_factor = escalate_factor
         self.fault_injector = fault_injector
+        # Overload model — same semantics as UOTScheduler (see its ctor
+        # comment and repro.serve's overload model section): feasibility
+        # admission, least-slack EDF, and the degrade ladder on the LANE
+        # path. The gang tier keeps its existing expired-shed + latched
+        # gang_timeout degradation: the lane-calibrated service-time
+        # model does not describe row-sharded gang solves, so the
+        # feasibility gate never judges gang-routed requests.
+        self.predictive = predictive
+        self.feasibility_margin = feasibility_margin
+        self.predictor = (predictor if predictor is not None
+                          else IterPredictor())
+        self.brownout = brownout
+        if predictive and brownout is None and shed_policy == "degrade":
+            self.brownout = BrownoutController()
+        self.sliced_n_proj = sliced_n_proj
+        self.sliced_seed = sliced_seed
+        self._spi_pinned = seconds_per_iter
+        self._spi_ewma: float | None = None
+        self._iters_ewma: float | None = None
+        self._pending_completed: dict[int, np.ndarray] = {}
         # lane-pool budget: buckets failing it route to the gang. The
         # default is the resident-tier VMEM predicate — a conservative
         # proxy for "small enough to multiplex a lane pool with"; pass
@@ -342,13 +387,166 @@ class ClusterScheduler:
                                   "placement_stalls", "gang_routed")}
         self._c_dispatch = {k: reg.counter("cluster.dispatch." + k)
                             for k in ("resident", "streamed")}
+        # overload-model observability (mirrors "serve.*"; zeros unless
+        # predictive admission / the degrade ladder are enabled)
+        self._c_infeasible = reg.counter("cluster.admission.infeasible")
+        self._c_degrade = {lvl: reg.counter(f"cluster.degrade.l{lvl}")
+                           for lvl in (1, 2)}
+        self._g_brownout = reg.gauge("cluster.degrade.brownout_level")
+        self._h_pred_err = reg.histogram("cluster.predict.rel_err")
 
     # ---- submission -------------------------------------------------------
 
     def _check_backpressure(self) -> None:
-        if len(self._queue) + len(self._gang_queue) >= self.max_queue:
+        depth = len(self._queue) + len(self._gang_queue)
+        if depth >= self.max_queue:
             raise QueueFullError(
-                f"queue at max_queue={self.max_queue}; retry later")
+                f"queue at max_queue={self.max_queue}; retry later",
+                queue_depth=depth,
+                retry_after=self._retry_after_hint())
+
+    def _log_request(self, rec: ClusterRequestTelemetry) -> None:
+        """THE append path for request telemetry: append + trim-and-count
+        immediately (see ``UOTScheduler._log_request`` — trimming only at
+        the occupancy snapshot missed records appended between steps)."""
+        self.request_log.append(rec)
+        excess = len(self.request_log) - self.max_log
+        if excess > 0:
+            self._c["window_dropped_requests"].inc(excess)
+            del self.request_log[:excess]
+
+    # ---- service-time model (predictive=True; see UOTScheduler) -----------
+
+    def _healthy_lanes(self) -> int:
+        healthy = sum(1 for h in self._device_health if h == "ok")
+        return max(1, healthy * self.lanes_per_device)
+
+    def _seconds_per_iter(self) -> float | None:
+        if self._spi_pinned is not None:
+            return self._spi_pinned
+        return self._spi_ewma
+
+    def _predict_request_iters(self, req: ScheduledRequest) -> float:
+        return self.predictor.predict(
+            self.cfg, bucket=req.bucket,
+            mass_a=float(req.a.sum()), mass_b=float(req.b.sum()))
+
+    def _predicted_service(self, req: ScheduledRequest) -> float | None:
+        spi = self._seconds_per_iter()
+        if not self.predictive or spi is None:
+            return None
+        if req.predicted_iters is None:
+            req.predicted_iters = self._predict_request_iters(req)
+        return req.predicted_iters * spi
+
+    def _retry_after_hint(self) -> float | None:
+        spi = self._seconds_per_iter()
+        if (not self.predictive or spi is None
+                or self._iters_ewma is None):
+            return None
+        depth = len(self._queue) + len(self._gang_queue)
+        return (depth * self._iters_ewma * spi) / self._healthy_lanes()
+
+    def _feasibility_gate(self, req: ScheduledRequest, now: float,
+                          rid: int) -> None:
+        """Refuse or degrade a LANE-route request whose SLO is already
+        unmeetable (``UOTScheduler._feasibility_gate`` semantics). Gang-
+        routed requests are exempt: the lane-calibrated service model
+        does not describe row-sharded gang solves."""
+        if (not self.predictive or req.deadline is None
+                or self.shed_policy == "none"):
+            return
+        if self.gang == "auto" and not self._lane_budget(*req.bucket):
+            return
+        service = self._predicted_service(req)
+        if service is None:
+            return
+        finish = now + self.feasibility_margin * service
+        if finish <= req.deadline:
+            return
+        if self.shed_policy == "drop":
+            self._c_infeasible.inc()
+            self.obs.tracer.emit(rid, "shed", policy="infeasible",
+                                 predicted_finish=finish,
+                                 deadline=req.deadline)
+            err = InfeasibleDeadline(
+                f"request {rid} cannot meet its deadline: predicted "
+                f"finish {finish:.4f} > deadline {req.deadline:.4f} "
+                f"(predicted {req.predicted_iters:.0f} iters)",
+                rid=rid, deadline=req.deadline, predicted_finish=finish,
+                predicted_iters=req.predicted_iters)
+            self._reject(rid, req.bucket, req.deadline, err, now)
+        self._c_infeasible.inc()
+        self._degrade(req, self.max_degrade_level(req))
+
+    def _degrade_if_infeasible(self, req: ScheduledRequest,
+                               now: float) -> None:
+        """Admission-time feasibility re-check against the REMAINING
+        deadline budget (``UOTScheduler._degrade_if_infeasible`` — the
+        submit-time gate cannot see queue wait). Lane path only: the
+        gang queue never reaches this, preserving the gang exemption."""
+        if (self.shed_policy != "degrade" or not self.predictive
+                or req.deadline is None or req.degrade_level > 0):
+            return
+        spi = self._seconds_per_iter()
+        service = self._predicted_service(req)
+        if spi is None or service is None:
+            return
+        if now + self.feasibility_margin * service <= req.deadline:
+            return
+        lvl1 = min(self.cfg.num_iters, self.degrade_iters) * spi
+        level = (1 if now + self.feasibility_margin * lvl1 <= req.deadline
+                 else self.max_degrade_level(req))
+        self._c_infeasible.inc()
+        self.obs.tracer.emit(req.rid, "shed", policy="infeasible_wait",
+                             level=level)
+        self._degrade(req, level)
+
+    def max_degrade_level(self, req: ScheduledRequest) -> int:
+        """Level 2 (sliced) needs coordinates to project and a finite
+        marginal relaxation; dense/balanced requests top out at level 1."""
+        return (2 if req.K is None and np.isfinite(self.cfg.reg_m)
+                else 1)
+
+    def _degrade(self, req: ScheduledRequest, level: int) -> None:
+        """Apply degrade-ladder ``level`` (idempotent upward — see
+        ``UOTScheduler._degrade``)."""
+        level = min(level, self.max_degrade_level(req))
+        if level <= req.degrade_level:
+            return
+        req.degrade_level = level
+        if req.shed != "degraded":
+            req.shed = "degraded"
+            self._c["shed_degraded"].inc()
+        self._c_degrade[level].inc()
+        self.obs.tracer.emit(req.rid, "degrade", level=level)
+        if level == 1:
+            req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
+            req.est_error = estimate_truncation_error(
+                self.cfg, req.max_iters,
+                mass_a=float(req.a.sum()), mass_b=float(req.b.sum()))
+
+    def _complete_sliced(self, req: ScheduledRequest, now: float) -> None:
+        """Finish a level-2 request on the host sliced tier (no lane, no
+        device, no M*N compute) and deliver it this scheduling round via
+        the pending buffer — ``UOTScheduler._complete_sliced`` with the
+        cluster telemetry record (``device=-1, route='sliced'``)."""
+        M, N = req.shape
+        res = sliced_uot(req.x, req.y, req.a, req.b,
+                         rho=float(self.cfg.reg_m), scale=req.scale,
+                         n_proj=self.sliced_n_proj, seed=self.sliced_seed)
+        P = lift_coupling_np(res, M, N).astype(np.float32)
+        req.est_error = res.est_error
+        self._pending_completed[req.rid] = self._results[req.rid] = P
+        self._trim_results()
+        self._record(ClusterRequestTelemetry(
+            rid=req.rid, bucket=req.bucket, lane=-1,
+            arrival=req.arrival, admitted=now, completed=now,
+            iters=0, converged=True, deadline=req.deadline,
+            shed="degraded", status="ok", retries=req.retries,
+            degrade_level=2, est_error=res.est_error,
+            predicted_iters=req.predicted_iters,
+            device=-1, route="sliced"))
 
     def _route(self, req: ScheduledRequest) -> None:
         """Lane pool or gang, by the lane-pool budget of the bucket."""
@@ -373,7 +571,7 @@ class ClusterScheduler:
         """Refused admission: telemetry + a typed disposition so
         ``poll(rid)`` resolves, then re-raise (rid attached)."""
         self._c["rejected"].inc()
-        self.request_log.append(ClusterRequestTelemetry(
+        self._log_request(ClusterRequestTelemetry(
             rid=rid, bucket=bucket, lane=-1, arrival=now, admitted=now,
             completed=now, iters=0, converged=False, deadline=deadline,
             status="rejected", device=-1, route="rejected"))
@@ -411,9 +609,11 @@ class ClusterScheduler:
                 validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
             except InvalidProblemError as err:
                 self._reject(rid, bucket, deadline, err, now)
-        self._route(ScheduledRequest(
+        req = ScheduledRequest(
             rid=rid, K=K, a=a, b=b, shape=(M, N), bucket=bucket,
-            arrival=now, deadline=deadline, priority=priority, fault=fault))
+            arrival=now, deadline=deadline, priority=priority, fault=fault)
+        self._feasibility_gate(req, now, rid)   # may raise / degrade
+        self._route(req)
         return rid
 
     def submit_points(self, x, y, a, b, *, scale: float = 1.0,
@@ -446,11 +646,13 @@ class ClusterScheduler:
                 validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
             except InvalidProblemError as err:
                 self._reject(rid, bucket, deadline, err, now)
-        self._route(ScheduledRequest(
+        req = ScheduledRequest(
             rid=rid, K=None, a=a, b=b, shape=(M, N), bucket=bucket,
             arrival=now, deadline=deadline, priority=priority,
             x=np.asarray(g.x), y=np.asarray(g.y), xn=np.asarray(g.xn),
-            yn=np.asarray(g.yn), scale=float(scale), fault=fault))
+            yn=np.asarray(g.yn), scale=float(scale), fault=fault)
+        self._feasibility_gate(req, now, rid)   # may raise / degrade
+        self._route(req)
         return rid
 
     @property
@@ -491,10 +693,19 @@ class ClusterScheduler:
         """
         if self.fault_injector is not None:
             self.fault_injector.on_step(self)
+        if self.brownout is not None:
+            self._g_brownout.set(self.brownout.observe(queue_pressure(
+                len(self._queue) + len(self._gang_queue),
+                self._healthy_lanes())))
         self._prep_admissions()
         completed = self._evict_finished()
         self._admit_queued()
         completed.update(self._solve_gang())
+        if self._pending_completed:
+            # level-2 (sliced) completions produced during admission /
+            # gang triage — delivered with this round's evictions
+            completed.update(self._pending_completed)
+            self._pending_completed.clear()
         self._advance_pools()
         if self.step_mode == "sync":
             for pool in self._pools.values():
@@ -711,16 +922,44 @@ class ClusterScheduler:
                 self._c["timed_out"].inc(int(timed_out))
                 completed[req.rid] = self._results[req.rid] = P
                 self._trim_results()
+                n_iters = int(iters[slot])
                 rec = ClusterRequestTelemetry(
                     rid=req.rid, bucket=pool.bucket, lane=l,
                     arrival=req.arrival, admitted=admitted,
-                    completed=now, iters=int(iters[slot]),
+                    completed=now, iters=n_iters,
                     converged=bool(conv[slot]), deadline=req.deadline,
                     shed=req.shed,
                     status="timed_out" if timed_out else "ok",
-                    retries=req.retries, device=d, route="lane")
+                    retries=req.retries, device=d, route="lane",
+                    degrade_level=req.degrade_level,
+                    est_error=req.est_error,
+                    predicted_iters=req.predicted_iters)
                 self._record(rec)
                 self._device_completed[d] += 1
+                if (self.predictive and n_iters > 0
+                        and req.max_iters is None):
+                    # close the control loop (full lane solves only —
+                    # truncated budgets would bias the model): feed the
+                    # predictor, refine seconds-per-iteration, audit the
+                    # prediction's relative error
+                    self.predictor.observe(
+                        self.cfg, n_iters, bucket=pool.bucket,
+                        mass_a=float(req.a.sum()),
+                        mass_b=float(req.b.sum()))
+                    a_ = 0.25
+                    self._iters_ewma = (
+                        n_iters if self._iters_ewma is None
+                        else self._iters_ewma + a_ * (n_iters
+                                                      - self._iters_ewma))
+                    dt = (now - admitted) / n_iters
+                    if dt > 0.0:
+                        self._spi_ewma = (
+                            dt if self._spi_ewma is None
+                            else self._spi_ewma
+                            + a_ * (dt - self._spi_ewma))
+                    if req.predicted_iters:
+                        self._h_pred_err.observe(
+                            abs(req.predicted_iters - n_iters) / n_iters)
             # one pool update for the round's evictions across all
             # devices; indices padded with duplicates -> one jit
             # signature — and the zeroing scrubs poisoned lanes' NaNs
@@ -775,7 +1014,7 @@ class ClusterScheduler:
         self.obs.tracer.emit(rec.rid, "complete", status=rec.status,
                              iters=rec.iters, retries=rec.retries,
                              device=rec.device, route=rec.route)
-        self.request_log.append(rec)
+        self._log_request(rec)
 
     def _shed_at_admission(self, req: ScheduledRequest, now: float) -> bool:
         """Same deadline shedding as the single-device scheduler; dropped
@@ -787,7 +1026,7 @@ class ClusterScheduler:
             self._c["shed_dropped"].inc()
             self._c["rejected"].inc()
             self._prepped.pop(req.rid, None)
-            self.request_log.append(ClusterRequestTelemetry(
+            self._log_request(ClusterRequestTelemetry(
                 rid=req.rid, bucket=req.bucket, lane=-1,
                 arrival=req.arrival, admitted=now, completed=now,
                 iters=0, converged=False, deadline=req.deadline,
@@ -802,10 +1041,12 @@ class ClusterScheduler:
                 reason="deadline already passed at admission "
                        "(shed_policy='drop')"))
             return True
-        self._c["shed_degraded"].inc()    # 'degrade'
+        # 'degrade': an expired deadline walks the ladder — level 1
+        # normally, deeper when the brownout controller says the whole
+        # cluster is already shedding accuracy
         self.obs.tracer.emit(req.rid, "shed", policy="degrade")
-        req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
-        req.shed = "degraded"
+        level = max(1, self.brownout.level if self.brownout else 0)
+        self._degrade(req, level)
         return False
 
     def _device_active(self, device: int) -> int:
@@ -876,8 +1117,29 @@ class ClusterScheduler:
         remaining: list[ScheduledRequest] = []
         placements: dict[tuple[int, int], list] = {}   # pool bucket -> slots
         stalled = False
-        for req in sorted(self._queue, key=ScheduledRequest.edf_key):
+        # predicted-finish-time EDF when the service model is calibrated
+        # (least slack = deadline minus predicted service); else plain EDF
+        if self.predictive and self._seconds_per_iter() is not None:
+            def admit_key(r):
+                return r.slack_key(self._predicted_service(r))
+        else:
+            admit_key = ScheduledRequest.edf_key
+        brownout_level = (self.brownout.level
+                          if (self.brownout is not None
+                              and self.shed_policy == "degrade") else 0)
+        for req in sorted(self._queue, key=admit_key):
             if req.shed is None and self._shed_at_admission(req, now):
+                continue
+            self._degrade_if_infeasible(req, now)
+            if brownout_level:
+                # sustained overload: new admissions shed accuracy so
+                # the backlog drains faster than it grows
+                self._degrade(req, brownout_level)
+            if req.degrade_level >= 2 and req.K is None:
+                # level 2: solve NOW on the host sliced tier — never
+                # occupies a (device, lane) slot
+                self._prepped.pop(req.rid, None)
+                self._complete_sliced(req, now)
                 continue
             pool, _shared = self._pool_for(req)
             device = self._pick_device(pool)
@@ -1003,6 +1265,13 @@ class ClusterScheduler:
             now = self.clock()
             if req.shed is None and self._shed_at_admission(req, now):
                 continue
+            if req.degrade_level >= 2 and req.K is None:
+                # a point request the shed ladder walked to level 2:
+                # the sliced tier is route-independent (host-side, no
+                # mesh) and cheaper than any gang launch — take it and
+                # keep the gang budget for requests that need the mesh
+                self._complete_sliced(req, now)
+                continue
             budget -= 1
             t0 = self.clock()
             if req.K is None:
@@ -1118,13 +1387,12 @@ class ClusterScheduler:
         self._g_in_flight.set(self.in_flight)
         self._g_occupancy.set(sum(occ.values()) / len(occ) if occ else 0.0)
         # count what falls off the bounded telemetry window so the
-        # narrowing of stats()' aggregates is visible, not silent
+        # narrowing of stats()' aggregates is visible, not silent.
+        # Request records trim at append time (_log_request — every
+        # producer path); the occupancy window's one producer is here.
         self._c["window_dropped_occupancy"].inc(
             max(0, len(self.occupancy_log) - self.max_log))
-        self._c["window_dropped_requests"].inc(
-            max(0, len(self.request_log) - self.max_log))
         del self.occupancy_log[:-self.max_log]
-        del self.request_log[:-self.max_log]
 
     # ---- telemetry --------------------------------------------------------
 
@@ -1165,6 +1433,13 @@ class ClusterScheduler:
                 "occupancy": c["window_dropped_occupancy"].value,
                 "dispositions": c["window_dropped_dispositions"].value,
             },
+            # overload-model totals (zeros when the features are off)
+            "admission_infeasible": self._c_infeasible.value,
+            "degrade_levels": {lvl: ctr.value
+                               for lvl, ctr in self._c_degrade.items()},
+            "brownout_level": (self.brownout.level
+                               if self.brownout is not None else 0),
+            "seconds_per_iter": self._seconds_per_iter(),
             "device_health": list(self._device_health),
             "devices": {
                 d: {"placed": self._device_placed[d],

@@ -15,6 +15,13 @@ Solver family
 - ``health``: typed admission validation (``InvalidProblemError``, the
   ``uv_safe`` overflow-regime predicate) + the log-domain escalation
   adapter the serving tiers quarantine-and-retry through.
+- ``solve_1d``: exact 1-D (un)balanced OT in O((M+N) log(M+N)) — the
+  quantile-merge balanced solver + exact-LMO Frank-Wolfe with a
+  certified optimality gap; the basis of ``geometry.sliced`` and the
+  serving degrade ladder's deepest tier.
+- ``predict``: analytic + online-corrected iteration prediction (the
+  TI contraction rate inverted) — the scheduler's service-time model
+  for feasibility admission and predicted-finish-time EDF.
 """
 from repro.core.problem import (UOTConfig, UOTProblem, gibbs_kernel,
                                 uot_cost)
@@ -27,6 +34,10 @@ from repro.core.convergence import (factor_drift, lane_factor_drift,
                                     marginal_error, mass)
 from repro.core.health import (InvalidProblemError, escalate_log_solve,
                                escalation_config, uv_safe, validate_problem)
+from repro.core.predict import (IterPredictor, analytic_iters,
+                                estimate_truncation_error, predict_iters)
+from repro.core.solve_1d import (Plan1D, Solve1DResult, solve_1d,
+                                 solve_1d_balanced_np, solve_1d_np)
 
 __all__ = [
     "UOTConfig",
@@ -48,4 +59,13 @@ __all__ = [
     "validate_problem",
     "escalation_config",
     "escalate_log_solve",
+    "Plan1D",
+    "Solve1DResult",
+    "solve_1d",
+    "solve_1d_balanced_np",
+    "solve_1d_np",
+    "IterPredictor",
+    "analytic_iters",
+    "estimate_truncation_error",
+    "predict_iters",
 ]

@@ -13,6 +13,9 @@ cheapest faithful evaluation instead of demanding a dense HBM-resident
   budget shrinks to the coupling alone.
 - ``GridGeometry(factors)`` — separable per-axis costs; kernel
   applications are k small per-axis contractions and never form ``M*N``.
+- ``sliced`` — sliced UOT over random 1-D projections (exact
+  ``core.solve_1d`` per line, vmapped): the O(n_proj * (M+N) log(M+N))
+  estimate the serving degrade ladder falls back to under overload.
 
 See ``base.py`` for the bitwise-reproducibility contract that lets the
 solver tiers dispatch on memory layout without changing results.
@@ -21,6 +24,9 @@ from repro.geometry.base import Geometry
 from repro.geometry.dense import DenseGeometry
 from repro.geometry.grid import GridGeometry
 from repro.geometry.pointcloud import PointCloudGeometry
+from repro.geometry.sliced import (SlicedUOTResult, lift_coupling_np,
+                                   sliced_directions, sliced_uot)
 
 __all__ = ["Geometry", "DenseGeometry", "GridGeometry",
-           "PointCloudGeometry"]
+           "PointCloudGeometry", "SlicedUOTResult", "sliced_directions",
+           "sliced_uot", "lift_coupling_np"]

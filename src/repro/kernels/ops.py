@@ -114,16 +114,29 @@ bf16 storage on the resident tier upcasts once at load and downcasts once
 at store, so the per-iteration bf16 rounding of the streamed path
 disappears: resident bf16 iterates are the fp32 trajectory rounded once.
 
-One dispatch row lives OUTSIDE this table: the log-domain escalation path.
-Every tier above iterates in scaling space, which has a documented fp32
-overflow regime (``core.sinkhorn_uv``: the mass-imbalance mode is a factor
-``(Sa/Sb)**(rho/(2*eps))``). Problems classified into that regime by
-``core.health.uv_safe`` — and lanes whose state goes non-finite in flight
-(``LaneState.healthy``) — are not retried here at all: the serving
-schedulers route them to ``core.sinkhorn_uot_log`` via
-``core.health.escalate_log_solve``, whose potential-space iterates carry
-the same mode additively. That path trades the paper's HBM schedule for
-numerical range; it is the containment tier, not a performance tier.
+Two dispatch rows live OUTSIDE this table:
+
+* the **log-domain escalation** path. Every tier above iterates in
+  scaling space, which has a documented fp32 overflow regime
+  (``core.sinkhorn_uv``: the mass-imbalance mode is a factor
+  ``(Sa/Sb)**(rho/(2*eps))``). Problems classified into that regime by
+  ``core.health.uv_safe`` — and lanes whose state goes non-finite in
+  flight (``LaneState.healthy``) — are not retried here at all: the
+  serving schedulers route them to ``core.sinkhorn_uot_log`` via
+  ``core.health.escalate_log_solve``, whose potential-space iterates
+  carry the same mode additively. That path trades the paper's HBM
+  schedule for numerical range; it is the containment tier, not a
+  performance tier.
+* the **sliced 1-D degrade** path. Under overload
+  (``shed_policy='degrade'`` + ``predictive=True``) point-cloud
+  requests can leave the Sinkhorn family entirely: ``core.solve_1d``'s
+  exact O((M+N) log(M+N)) 1-D solver, averaged over ``n_proj`` random
+  projections by ``geometry.sliced`` — O(n_proj * (M+N)) memory, no
+  M*N bytes or FLOPs anywhere, certified per-slice optimality gap on
+  the label. Iteration-count feasibility for the rows above is judged
+  *before* admission by ``core.predict`` (analytic contraction rate +
+  online EWMA correction — the schedulers' service-time model). These
+  are the accuracy-for-capacity tiers, not performance tiers.
 """
 from __future__ import annotations
 

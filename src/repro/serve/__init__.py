@@ -106,6 +106,51 @@ propagate to the caller, nothing is shared, nothing to contain):
   (``repro.serve.faults``, tests/test_faults*.py, and the
   ``benchmarks/bench_chaos.py`` discrete-event chaos harness).
 
+Overload model (tiers 3-4, ``predictive=True``) — what happens when
+offered load exceeds capacity. The principle: refuse or coarsen work
+*early and labeled*, never lose it silently.
+
+* **Service-time model** — ``core.predict``: predicted iterations
+  (analytic TI contraction rate, refined online by a per-(bucket,
+  imbalance-bin) EWMA fed from eviction telemetry) times a
+  seconds-per-iteration rate (pinned via ``seconds_per_iter=`` or
+  learned online from completions). The model stays *inert until
+  calibrated* — it never refuses work on a guess.
+* **Feasibility admission** — a deadline that cannot be met even
+  starting immediately (``now + feasibility_margin * predicted_service
+  > deadline``) is refused at ``submit`` with a typed
+  ``InfeasibleDeadline`` (``shed_policy='drop'``) or walked straight
+  down the degrade ladder (``'degrade'``) — *before* burning queue
+  slots or lane time. With ``shed_policy='none'`` prediction only
+  powers ordering and retry hints.
+* **Predicted-finish-time EDF** — once calibrated, admission orders by
+  least slack (deadline minus predicted service) instead of bare
+  deadline: a long job with a near deadline outranks a short one.
+* **Degrade ladder** — level 0: full solve. Level 1: truncated
+  Sinkhorn at ``degrade_iters``, labeled with the analytic truncation
+  error (``core.predict.estimate_truncation_error``). Level 2
+  (point-cloud requests with finite ``reg_m``): exact sliced 1-D UOT
+  (``geometry.sliced`` over ``core.solve_1d`` — O(n_proj (M+N)
+  log(M+N)), no M*N anything), labeled with the certified per-slice
+  gap + Monte-Carlo std err; solved host-side the same scheduling
+  round, occupying no lane. Every degraded result carries
+  ``degrade_level`` + ``est_error`` on its telemetry — coarse answers
+  are always labeled, never passed off as full solves.
+* **Brownout control** — ``overload.BrownoutController`` steps the
+  ladder level applied to NEW admissions up/down on queue pressure
+  (backlog over lane capacity) with two watermarks + patience
+  hysteresis, so sustained overload sheds accuracy to drain the
+  backlog and transient spikes don't flap the ladder.
+* **Backpressure hints** — ``QueueFullError`` carries ``queue_depth``
+  and a ``retry_after`` hint (predicted backlog drain time);
+  ``submit_with_retry`` uses the hint as its backoff base, falling
+  back to blind exponential backoff when prediction is off.
+* Metrics: ``serve.admission.infeasible``, ``serve.degrade.l{1,2}``,
+  ``serve.degrade.brownout_level``, ``serve.predict.rel_err`` (the
+  predictor's audit histogram), mirrored under ``cluster.*`` for
+  tier 4 (whose gate exempts gang-routed requests — the lane model
+  does not describe row-sharded gang solves).
+
 Observability (``repro.obs``) — every serving tier carries one bundle
 (``obs=`` on the tier 2/3/4 constructors: ``None`` builds a fresh enabled
 bundle chained to the process-global one, ``False`` keeps the registry but
@@ -156,12 +201,15 @@ with solver lanes in place of KV-cache slots).
 """
 from repro.serve.engine import (Request, ServeEngine, UOTBatchEngine,
                                 UOTRequest)
+from repro.serve.overload import (BrownoutController, InfeasibleDeadline,
+                                  queue_pressure)
 from repro.serve.scheduler import (QueueFullError, RequestFailure,
                                    RequestTelemetry, ScheduledRequest,
                                    UOTScheduler, submit_with_retry)
-from repro.serve import faults
+from repro.serve import faults, overload
 
 __all__ = ["ServeEngine", "Request", "UOTBatchEngine", "UOTRequest",
            "UOTScheduler", "ScheduledRequest", "RequestTelemetry",
            "QueueFullError", "RequestFailure", "submit_with_retry",
-           "faults"]
+           "InfeasibleDeadline", "BrownoutController", "queue_pressure",
+           "faults", "overload"]

@@ -1,0 +1,94 @@
+"""Overload-robustness primitives shared by both schedulers.
+
+Three small pieces the serving tiers compose into the overload model
+documented in ``repro.serve``'s module docstring:
+
+* ``InfeasibleDeadline`` — the typed refusal for a request whose
+  predicted service time cannot meet its SLO. A subclass of
+  ``core.health.InvalidProblemError`` (``reason='infeasible_deadline'``)
+  so every existing admission-error handler already catches it; carries
+  the prediction that justified the refusal.
+* ``BrownoutController`` — hysteresis ladder controller: steps the
+  degrade level UP after ``patience`` consecutive observations of queue
+  pressure above ``high``, DOWN after ``patience`` consecutive
+  observations below ``low``. Pressure is queue depth over total lane
+  capacity — a dimensionless "how many scheduling rounds deep is the
+  backlog" signal both schedulers already have on hand.
+* ``queue_pressure`` — that signal, as a plain function.
+
+Degrade levels (the ladder both schedulers implement):
+
+  0  full solve — no degradation.
+  1  truncated Sinkhorn at ``degrade_iters`` — coarse coupling, error
+     labeled via ``core.predict.estimate_truncation_error``.
+  2  sliced 1-D estimate (``geometry.sliced``, point-cloud requests) —
+     O(n_proj * (M+N) log(M+N)) with a certified-per-slice error label;
+     dense requests, which have no coordinates to project, stay at the
+     deepest truncation budget instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.health import InvalidProblemError
+
+__all__ = ["InfeasibleDeadline", "BrownoutController", "queue_pressure"]
+
+
+class InfeasibleDeadline(InvalidProblemError):
+    """Refused at admission: the deadline cannot be met even if the
+    request started solving immediately (predicted service time alone
+    overshoots it). Raised *before* the request burns lane time; the rid
+    still resolves via ``poll`` to a ``'rejected'`` disposition."""
+
+    def __init__(self, message: str, *, rid: int | None = None,
+                 deadline: float | None = None,
+                 predicted_finish: float | None = None,
+                 predicted_iters: float | None = None):
+        super().__init__("infeasible_deadline", message, rid=rid)
+        self.deadline = deadline
+        self.predicted_finish = predicted_finish
+        self.predicted_iters = predicted_iters
+
+
+def queue_pressure(queue_depth: int, total_lanes: int) -> float:
+    """Backlog depth in units of one full lane-capacity round."""
+    return queue_depth / max(1, total_lanes)
+
+
+@dataclasses.dataclass
+class BrownoutController:
+    """Hysteresis degrade-ladder controller.
+
+    ``observe(pressure)`` once per scheduling round; ``level`` is the
+    current ladder level to apply to NEW admissions. The two-watermark +
+    patience shape means transient spikes (one deep round) don't flap
+    the ladder, and recovery requires the backlog to actually drain
+    (below ``low``), not merely stop growing.
+    """
+
+    high: float = 2.0        # step up after `patience` rounds above this
+    low: float = 0.5         # step down after `patience` rounds below
+    patience: int = 3
+    max_level: int = 2
+    level: int = 0
+    _above: int = 0
+    _below: int = 0
+
+    def observe(self, pressure: float) -> int:
+        if pressure >= self.high:
+            self._above += 1
+            self._below = 0
+            if self._above >= self.patience and self.level < self.max_level:
+                self.level += 1
+                self._above = 0
+        elif pressure <= self.low:
+            self._below += 1
+            self._above = 0
+            if self._below >= self.patience and self.level > 0:
+                self.level -= 1
+                self._below = 0
+        else:
+            self._above = 0
+            self._below = 0
+        return self.level

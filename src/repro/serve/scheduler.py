@@ -107,8 +107,12 @@ from repro import obs as obslib
 from repro.core.problem import UOTConfig
 from repro.core.health import (InvalidProblemError, escalate_log_solve,
                                validate_problem)
+from repro.core.predict import IterPredictor, estimate_truncation_error
 from repro.geometry import PointCloudGeometry
+from repro.geometry.sliced import lift_coupling_np, sliced_uot
 from repro.kernels import ops
+from repro.serve.overload import (BrownoutController, InfeasibleDeadline,
+                                  queue_pressure)
 
 # registry counter names shared by both schedulers ("serve.<name>" /
 # "cluster.<name>"): the running totals stats() reports — refactored
@@ -123,7 +127,22 @@ _COUNTER_NAMES = (
 
 
 class QueueFullError(RuntimeError):
-    """Raised by submit() when the waiting queue is at max_queue."""
+    """Raised by submit() when the waiting queue is at max_queue.
+
+    Carries the observed ``queue_depth`` and, when the scheduler's
+    service-time model has calibrated (``predictive=True`` and at least
+    one completion observed), a ``retry_after`` hint in seconds — the
+    predicted time for the backlog to drain one full lane round. Both
+    are None-safe: prediction off means ``retry_after is None`` and
+    clients fall back to their own backoff base (``submit_with_retry``
+    does exactly that).
+    """
+
+    def __init__(self, message: str, *, queue_depth: int | None = None,
+                 retry_after: float | None = None):
+        super().__init__(message)
+        self.queue_depth = queue_depth
+        self.retry_after = retry_after
 
 
 def submit_with_retry(scheduler, *args, attempts: int = 6,
@@ -148,6 +167,13 @@ def submit_with_retry(scheduler, *args, attempts: int = 6,
     ``clock=``), so a fake-clock scheduler never races wall time through
     this helper. Validation errors (``InvalidProblemError``) are NOT
     retried — a refused problem stays refused.
+
+    When the raised ``QueueFullError`` carries a ``retry_after`` hint
+    (the scheduler's predicted backlog drain time — see
+    ``predictive=``), that hint replaces ``base_delay`` as the backoff
+    base: the client waits roughly as long as the queue actually needs,
+    instead of a blind constant. With prediction off the behavior is
+    exactly the historical capped-exponential one.
     """
     if sleep is None:
         sleep = getattr(scheduler, "sleep", None) or time.sleep
@@ -156,10 +182,12 @@ def submit_with_retry(scheduler, *args, attempts: int = 6,
     for attempt in range(attempts):
         try:
             return fn(*args, **kwargs)
-        except QueueFullError:
+        except QueueFullError as err:
             if attempt == attempts - 1:
                 raise
-            delay = min(max_delay, base_delay * (2.0 ** attempt))
+            base = (err.retry_after
+                    if getattr(err, "retry_after", None) else base_delay)
+            delay = min(max_delay, base * (2.0 ** attempt))
             sleep(delay * (0.5 + 0.5 * float(rng.random())))
     raise AssertionError("unreachable")  # pragma: no cover
 
@@ -210,6 +238,12 @@ class ScheduledRequest:
     max_iters: int | None = None    # reduced budget for degraded requests
     shed: str | None = None         # None | 'degraded' ('dropped' never
     #                                 occupies a lane, only telemetry)
+    # overload-model state (predictive=True; see repro.serve's overload
+    # model): ladder level 0/1/2, the admission-time iteration
+    # prediction, and the error label attached to degraded answers
+    degrade_level: int = 0
+    predicted_iters: float | None = None
+    est_error: float | None = None
     # fault-containment state
     retries: int = 0                # escalation/requeue attempts spent
     fault: str | None = None        # injector tag (chaos bookkeeping only;
@@ -218,6 +252,15 @@ class ScheduledRequest:
     def edf_key(self):
         """Earliest-deadline-first with priority then FIFO tie-breaks."""
         d = self.deadline if self.deadline is not None else float("inf")
+        return (d, -self.priority, self.rid)
+
+    def slack_key(self, service: float | None):
+        """Least-slack ordering: EDF on the *latest feasible start time*
+        (deadline minus predicted service). Falls back to plain EDF when
+        no service prediction is available."""
+        if self.deadline is None:
+            return (float("inf"), -self.priority, self.rid)
+        d = self.deadline - (service or 0.0)
         return (d, -self.priority, self.rid)
 
 
@@ -241,6 +284,13 @@ class RequestTelemetry:
     # admission / shed-dropped)
     status: str = "ok"
     retries: int = 0            # escalation attempts spent
+    # overload-model labels: ladder level (0 = full solve), the error
+    # estimate attached to degraded answers (truncation model at level
+    # 1, certified sliced gap + MC std err at level 2), and what the
+    # admission-time predictor said (None with prediction off)
+    degrade_level: int = 0
+    est_error: float | None = None
+    predicted_iters: float | None = None
 
     @property
     def wait(self) -> float:
@@ -318,6 +368,12 @@ class UOTScheduler:
                  degrade_iters: int | None = None,
                  validate: bool = True, retry_escalate: bool = True,
                  escalate_factor: int = 2, fault_injector=None,
+                 predictive: bool = False,
+                 seconds_per_iter: float | None = None,
+                 feasibility_margin: float = 1.0,
+                 brownout: "BrownoutController | None" = None,
+                 predictor: "IterPredictor | None" = None,
+                 sliced_n_proj: int = 32, sliced_seed: int = 0,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
                  obs: "obslib.Observability | bool | None" = None):
@@ -362,6 +418,33 @@ class UOTScheduler:
         self.retry_escalate = retry_escalate
         self.escalate_factor = escalate_factor
         self.fault_injector = fault_injector
+        # Overload model (predictive=True; see repro.serve's overload
+        # model section). The service-time model is
+        # ``predicted_iters * seconds_per_iter``: iterations from
+        # ``core.predict`` (analytic contraction rate + per-bucket EWMA
+        # fed by eviction telemetry), seconds-per-iteration either
+        # pinned (``seconds_per_iter=``, e.g. a measured value under a
+        # simulated clock) or learned online from completions (EWMA of
+        # latency/iters; the gate stays inert until the first
+        # completion calibrates it — never a guess in fake units).
+        # ``feasibility_margin`` scales predicted service before the
+        # deadline comparison (>1 = conservative admission). The gate
+        # only refuses/degrades when a shed_policy is active ('drop'
+        # refuses with InfeasibleDeadline, 'degrade' walks the ladder);
+        # with shed_policy='none' prediction still powers least-slack
+        # EDF + retry_after hints but never refuses work.
+        self.predictive = predictive
+        self.feasibility_margin = feasibility_margin
+        self.predictor = predictor if predictor is not None else IterPredictor()
+        self.brownout = brownout
+        if predictive and brownout is None and shed_policy == "degrade":
+            self.brownout = BrownoutController()
+        self.sliced_n_proj = sliced_n_proj
+        self.sliced_seed = sliced_seed
+        self._spi_pinned = seconds_per_iter
+        self._spi_ewma: float | None = None
+        self._iters_ewma: float | None = None
+        self._pending_completed: dict[int, np.ndarray] = {}
         self.clock = clock
         self.sleep = sleep
         # Observability: None -> a fresh enabled bundle on this scheduler's
@@ -385,6 +468,15 @@ class UOTScheduler:
         self._g_occupancy = reg.gauge("serve.occupancy")
         self._c_dispatch = {k: reg.counter("serve.dispatch." + k)
                             for k in ("resident", "streamed")}
+        # overload-model observability: degrade-ladder activity per
+        # level, feasibility refusals, and the iteration predictor's
+        # relative absolute error (|predicted - actual| / actual) so the
+        # control loop is auditable from the registry alone
+        self._c_infeasible = reg.counter("serve.admission.infeasible")
+        self._c_degrade = {lvl: reg.counter(f"serve.degrade.l{lvl}")
+                           for lvl in (1, 2)}
+        self._g_brownout = reg.gauge("serve.degrade.brownout_level")
+        self._h_pred_err = reg.histogram("serve.predict.rel_err")
 
         self._queue: list[ScheduledRequest] = []
         self._pools: dict[tuple[int, int], _LanePool] = {}
@@ -413,7 +505,7 @@ class UOTScheduler:
         ``poll(rid)`` resolves the rid instead of returning pending-forever,
         then re-raise with the rid attached."""
         self._c["rejected"].inc()
-        self.request_log.append(RequestTelemetry(
+        self._log_request(RequestTelemetry(
             rid=rid, bucket=bucket, lane=-1, arrival=now, admitted=now,
             completed=now, iters=0, converged=False, deadline=deadline,
             status="rejected"))
@@ -428,6 +520,148 @@ class UOTScheduler:
         while len(self._dispositions) > self.max_log:
             self._dispositions.pop(next(iter(self._dispositions)))
             self._c["window_dropped_dispositions"].inc()
+
+    def _log_request(self, rec: RequestTelemetry) -> None:
+        """THE append path for request telemetry: append, then trim to
+        ``max_log`` immediately, counting what fell off. Trimming only at
+        the per-step occupancy snapshot (the historical behavior) missed
+        every record appended between snapshots — shed-drops and
+        submit-time rejections landed untrimmed and, worse, uncounted
+        when a later snapshot trimmed them away. One helper, one window,
+        one counter."""
+        self.request_log.append(rec)
+        excess = len(self.request_log) - self.max_log
+        if excess > 0:
+            self._c["window_dropped_requests"].inc(excess)
+            del self.request_log[:excess]
+
+    # ---- service-time model (predictive=True) -----------------------------
+
+    def _seconds_per_iter(self) -> float | None:
+        """Pinned value, else the online EWMA, else None (uncalibrated)."""
+        if self._spi_pinned is not None:
+            return self._spi_pinned
+        return self._spi_ewma
+
+    def _predict_request_iters(self, req: ScheduledRequest) -> float:
+        return self.predictor.predict(
+            self.cfg, bucket=req.bucket,
+            mass_a=float(req.a.sum()), mass_b=float(req.b.sum()))
+
+    def _predicted_service(self, req: ScheduledRequest) -> float | None:
+        """Predicted lane seconds for ``req``, None while uncalibrated."""
+        spi = self._seconds_per_iter()
+        if not self.predictive or spi is None:
+            return None
+        if req.predicted_iters is None:
+            req.predicted_iters = self._predict_request_iters(req)
+        return req.predicted_iters * spi
+
+    def _retry_after_hint(self) -> float | None:
+        """Predicted backlog drain time for QueueFullError: queued work
+        (mean observed iterations each) over total lane throughput."""
+        spi = self._seconds_per_iter()
+        if (not self.predictive or spi is None
+                or self._iters_ewma is None):
+            return None
+        total_lanes = max(
+            1, sum(p.num_lanes for p in self._pools.values())
+            or self.lanes_per_pool)
+        return (len(self._queue) * self._iters_ewma * spi) / total_lanes
+
+    def _feasibility_gate(self, req: ScheduledRequest, now: float,
+                          rid: int) -> None:
+        """Refuse or degrade a request whose SLO is already unmeetable —
+        BEFORE it burns queue slots or lane time. Raises
+        ``InfeasibleDeadline`` (shed_policy='drop') or walks the degrade
+        ladder (shed_policy='degrade'). No-op when prediction is off,
+        uncalibrated, the request has no deadline, or shed_policy='none'
+        (prediction then only powers ordering + retry hints)."""
+        if (not self.predictive or req.deadline is None
+                or self.shed_policy == "none"):
+            return
+        service = self._predicted_service(req)
+        if service is None:
+            return
+        finish = now + self.feasibility_margin * service
+        if finish <= req.deadline:
+            return
+        if self.shed_policy == "drop":
+            self._c_infeasible.inc()
+            self.obs.tracer.emit(rid, "shed", policy="infeasible",
+                                 predicted_finish=finish,
+                                 deadline=req.deadline)
+            err = InfeasibleDeadline(
+                f"request {rid} cannot meet its deadline: predicted "
+                f"finish {finish:.4f} > deadline {req.deadline:.4f} "
+                f"(predicted {req.predicted_iters:.0f} iters)",
+                rid=rid, deadline=req.deadline, predicted_finish=finish,
+                predicted_iters=req.predicted_iters)
+            self._reject(rid, req.bucket, req.deadline, err, now)
+        # 'degrade': give it the deepest budget that CAN fit, labeled
+        self._c_infeasible.inc()
+        self._degrade(req, self.max_degrade_level(req))
+
+    def max_degrade_level(self, req: ScheduledRequest) -> int:
+        """Level 2 (sliced) needs coordinates to project and a finite
+        marginal relaxation (the 1-D FW dual is a KL dual); dense or
+        balanced requests top out at the deepest truncation (level 1)."""
+        return (2 if req.K is None and np.isfinite(self.cfg.reg_m)
+                else 1)
+
+    def _complete_sliced(self, req: ScheduledRequest, now: float) -> None:
+        """Finish a level-2 request on the host sliced tier: ``n_proj``
+        exact 1-D solves in one vmapped launch (O(n_proj (M+N) log(M+N))
+        — no lane, no M*N compute), the per-slice monotone plans averaged
+        into the delivered coupling, and the certified error label
+        (mean per-slice FW gap + Monte-Carlo std err) on the telemetry.
+        Completes THIS scheduling round via the pending buffer."""
+        M, N = req.shape
+        res = sliced_uot(req.x, req.y, req.a, req.b,
+                         rho=float(self.cfg.reg_m), scale=req.scale,
+                         n_proj=self.sliced_n_proj, seed=self.sliced_seed)
+        P = lift_coupling_np(res, M, N).astype(np.float32)
+        req.est_error = res.est_error
+        self._pending_completed[req.rid] = self._results[req.rid] = P
+        self._trim_results()
+        rec = RequestTelemetry(
+            rid=req.rid, bucket=req.bucket, lane=-1,
+            arrival=req.arrival, admitted=now, completed=now,
+            iters=0, converged=True, deadline=req.deadline,
+            shed="degraded", status="ok", retries=req.retries,
+            degrade_level=2, est_error=res.est_error,
+            predicted_iters=req.predicted_iters)
+        if rec.deadline is not None:
+            self._c["deadlined_completed"].inc()
+            self._c["deadline_misses"].inc(int(rec.missed))
+        self._c["completed"].inc()
+        self._h_wait.observe(rec.wait)
+        self._h_latency.observe(rec.latency)
+        self._h_iters.observe(0)
+        self.obs.tracer.emit(req.rid, "complete", status="ok", iters=0,
+                             degrade_level=2, est_error=res.est_error)
+        self._log_request(rec)
+
+    def _degrade(self, req: ScheduledRequest, level: int) -> None:
+        """Apply degrade-ladder ``level`` to a queued request (idempotent
+        upward: a request never degrades *less* than already promised)."""
+        level = min(level, self.max_degrade_level(req))
+        if level <= req.degrade_level:
+            return
+        req.degrade_level = level
+        if req.shed != "degraded":
+            req.shed = "degraded"
+            self._c["shed_degraded"].inc()
+        self._c_degrade[level].inc()
+        self.obs.tracer.emit(req.rid, "degrade", level=level)
+        if level == 1:
+            req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
+            req.est_error = estimate_truncation_error(
+                self.cfg, req.max_iters,
+                mass_a=float(req.a.sum()), mass_b=float(req.b.sum()))
+        # level 2 (sliced) bypasses the lanes entirely at admission —
+        # est_error comes from the solve itself (certified per-slice
+        # gap + Monte-Carlo std err), not a model
 
     def submit(self, K, a, b, *, deadline: float | None = None,
                priority: int = 0) -> int:
@@ -444,7 +678,9 @@ class UOTScheduler:
         """
         if len(self._queue) >= self.max_queue:
             raise QueueFullError(
-                f"queue at max_queue={self.max_queue}; retry later")
+                f"queue at max_queue={self.max_queue}; retry later",
+                queue_depth=len(self._queue),
+                retry_after=self._retry_after_hint())
         K = np.asarray(K)
         a = np.asarray(a)
         b = np.asarray(b)
@@ -465,9 +701,11 @@ class UOTScheduler:
                 validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
             except InvalidProblemError as err:
                 self._reject(rid, bucket, deadline, err, now)
-        self._queue.append(ScheduledRequest(
+        req = ScheduledRequest(
             rid=rid, K=K, a=a, b=b, shape=(M, N), bucket=bucket,
-            arrival=now, deadline=deadline, priority=priority, fault=fault))
+            arrival=now, deadline=deadline, priority=priority, fault=fault)
+        self._feasibility_gate(req, now, rid)   # may raise / degrade
+        self._queue.append(req)
         self.obs.tracer.emit(rid, "queue", depth=len(self._queue),
                              route="lane")
         return rid
@@ -488,7 +726,9 @@ class UOTScheduler:
         """
         if len(self._queue) >= self.max_queue:
             raise QueueFullError(
-                f"queue at max_queue={self.max_queue}; retry later")
+                f"queue at max_queue={self.max_queue}; retry later",
+                queue_depth=len(self._queue),
+                retry_after=self._retry_after_hint())
         # from_points computes the squared norms ONCE with the shared
         # jitted helper — reusing them at admission is what keeps the
         # batched device materialization bit-identical to a per-request
@@ -513,11 +753,13 @@ class UOTScheduler:
                 validate_problem(self.cfg, a, b, shape=(M, N), rid=rid)
             except InvalidProblemError as err:
                 self._reject(rid, bucket, deadline, err, now)
-        self._queue.append(ScheduledRequest(
+        req = ScheduledRequest(
             rid=rid, K=None, a=a, b=b, shape=(M, N), bucket=bucket,
             arrival=now, deadline=deadline, priority=priority,
             x=np.asarray(g.x), y=np.asarray(g.y), xn=np.asarray(g.xn),
-            yn=np.asarray(g.yn), scale=float(scale), fault=fault))
+            yn=np.asarray(g.yn), scale=float(scale), fault=fault)
+        self._feasibility_gate(req, now, rid)   # may raise / degrade
+        self._queue.append(req)
         self.obs.tracer.emit(rid, "queue", depth=len(self._queue),
                              route="lane")
         return rid
@@ -565,8 +807,18 @@ class UOTScheduler:
         """
         if self.fault_injector is not None:
             self.fault_injector.on_step(self)
+        if self.brownout is not None:
+            total = (sum(p.num_lanes for p in self._pools.values())
+                     or self.lanes_per_pool)
+            self._g_brownout.set(self.brownout.observe(
+                queue_pressure(len(self._queue), total)))
         completed = self._evict_finished()
         self._admit_queued()
+        if self._pending_completed:
+            # level-2 (sliced) completions produced during admission —
+            # delivered with this round's evictions
+            completed.update(self._pending_completed)
+            self._pending_completed.clear()
         for bucket, pool in list(self._pools.items()):
             if pool.requests:
                 pool.idle_steps = 0
@@ -745,7 +997,10 @@ class UOTScheduler:
                     completed=now, iters=n_iters,
                     converged=bool(conv[lane] & healthy[lane]),
                     deadline=req.deadline, shed=req.shed,
-                    status=status, retries=req.retries)
+                    status=status, retries=req.retries,
+                    degrade_level=req.degrade_level,
+                    est_error=req.est_error,
+                    predicted_iters=req.predicted_iters)
                 if rec.deadline is not None:
                     self._c["deadlined_completed"].inc()
                     self._c["deadline_misses"].inc(int(rec.missed))
@@ -753,9 +1008,34 @@ class UOTScheduler:
                 self._h_wait.observe(rec.wait)
                 self._h_latency.observe(rec.latency)
                 self._h_iters.observe(n_iters)
+                if (self.predictive and n_iters > 0
+                        and status in ("ok", "timed_out")
+                        and req.max_iters is None):
+                    # close the control loop: feed the predictor the
+                    # actual count (full solves only — truncated budgets
+                    # would bias the model), refine the online
+                    # seconds-per-iteration rate, and record the
+                    # prediction's relative error for auditing
+                    self.predictor.observe(
+                        self.cfg, n_iters, bucket=pool.bucket,
+                        mass_a=float(req.a.sum()),
+                        mass_b=float(req.b.sum()))
+                    a_ = 0.25
+                    self._iters_ewma = (
+                        n_iters if self._iters_ewma is None
+                        else self._iters_ewma + a_ * (n_iters
+                                                      - self._iters_ewma))
+                    dt = (now - admitted) / n_iters
+                    if dt > 0.0:
+                        self._spi_ewma = (
+                            dt if self._spi_ewma is None
+                            else self._spi_ewma + a_ * (dt - self._spi_ewma))
+                    if req.predicted_iters:
+                        self._h_pred_err.observe(
+                            abs(req.predicted_iters - n_iters) / n_iters)
                 tr.emit(req.rid, "complete", status=status, iters=n_iters,
                         retries=req.retries)
-                self.request_log.append(rec)
+                self._log_request(rec)
             # one pool update for the whole round's evictions; the index
             # vector is padded to the pool size with duplicates (same
             # zeroing either way) so there is ONE jit signature per pool,
@@ -797,7 +1077,7 @@ class UOTScheduler:
         if self.shed_policy == "drop":
             self._c["shed_dropped"].inc()
             self._c["rejected"].inc()
-            self.request_log.append(RequestTelemetry(
+            self._log_request(RequestTelemetry(
                 rid=req.rid, bucket=req.bucket, lane=-1,
                 arrival=req.arrival, admitted=now, completed=now,
                 iters=0, converged=False, deadline=req.deadline,
@@ -813,11 +1093,42 @@ class UOTScheduler:
                 reason="deadline already passed at admission "
                        "(shed_policy='drop')"))
             return True
-        self._c["shed_degraded"].inc()    # 'degrade'
+        # 'degrade': an expired deadline walks the ladder — level 1
+        # normally, deeper when the brownout controller says the whole
+        # system is already shedding accuracy
         self.obs.tracer.emit(req.rid, "shed", policy="degrade")
-        req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
-        req.shed = "degraded"
+        level = max(1, self.brownout.level if self.brownout else 0)
+        self._degrade(req, level)
         return False
+
+    def _degrade_if_infeasible(self, req: ScheduledRequest,
+                               now: float) -> None:
+        """Re-judge feasibility against the REMAINING deadline budget at
+        admission time — the submit-time gate cannot see queue wait. A
+        full solve that no longer fits degrades to the shallowest level
+        that does (level 1's service is the ``degrade_iters`` budget,
+        else the deepest level the request supports), so every request
+        still served at ``degrade_level == 0`` was feasibility-clean at
+        BOTH judgment points: the no-SLO-miss-among-full-quality
+        property the overload bench hard-asserts. Active only under
+        shed_policy='degrade' with a calibrated model; expired deadlines
+        are ``_shed_at_admission``'s job."""
+        if (self.shed_policy != "degrade" or not self.predictive
+                or req.deadline is None or req.degrade_level > 0):
+            return
+        spi = self._seconds_per_iter()
+        service = self._predicted_service(req)
+        if spi is None or service is None:
+            return
+        if now + self.feasibility_margin * service <= req.deadline:
+            return
+        lvl1 = min(self.cfg.num_iters, self.degrade_iters) * spi
+        level = (1 if now + self.feasibility_margin * lvl1 <= req.deadline
+                 else self.max_degrade_level(req))
+        self._c_infeasible.inc()
+        self.obs.tracer.emit(req.rid, "shed", policy="infeasible_wait",
+                             level=level)
+        self._degrade(req, level)
 
     def _admit_queued(self) -> None:
         if not self._queue:
@@ -826,9 +1137,31 @@ class UOTScheduler:
         remaining: list[ScheduledRequest] = []
         placements: dict[tuple[int, int], list[tuple[int, ScheduledRequest]]]
         placements = {}
-        for req in sorted(self._queue, key=ScheduledRequest.edf_key):
+        # predicted-finish-time EDF: with a calibrated service-time model
+        # the queue orders by least slack (deadline minus predicted
+        # service) — a long job with a near deadline outranks a short job
+        # with the same deadline; uncalibrated, this is exactly edf_key
+        if self.predictive and self._seconds_per_iter() is not None:
+            def admit_key(r):
+                return r.slack_key(self._predicted_service(r))
+        else:
+            admit_key = ScheduledRequest.edf_key
+        brownout_level = (self.brownout.level
+                          if (self.brownout is not None
+                              and self.shed_policy == "degrade") else 0)
+        for req in sorted(self._queue, key=admit_key):
             if req.shed is None and self._shed_at_admission(req, now):
                 continue                  # dropped: telemetry only, no lane
+            self._degrade_if_infeasible(req, now)
+            if brownout_level:
+                # sustained overload: new admissions shed accuracy so the
+                # backlog drains faster than it grows
+                self._degrade(req, brownout_level)
+            if req.degrade_level >= 2 and req.K is None:
+                # level 2: solve NOW on the host sliced tier — never
+                # occupies a lane, returns this same scheduling round
+                self._complete_sliced(req, now)
+                continue
             pool = self._pools.get(req.bucket)
             if pool is None:
                 pool = self._pools[req.bucket] = _LanePool(
@@ -942,13 +1275,13 @@ class UOTScheduler:
         self._g_occupancy.set(sum(occ.values()) / len(occ) if occ else 0.0)
         # the bounded telemetry window silently narrows what stats()'s
         # latency/p99 aggregates describe — count what falls off so the
-        # truncation is visible (stats()['window_dropped'] + registry)
+        # truncation is visible (stats()['window_dropped'] + registry).
+        # Request records trim at append time (_log_request — every
+        # producer path, including shed-drops and submit-time rejects);
+        # the occupancy window has exactly one producer, here.
         self._c["window_dropped_occupancy"].inc(
             max(0, len(self.occupancy_log) - self.max_log))
-        self._c["window_dropped_requests"].inc(
-            max(0, len(self.request_log) - self.max_log))
         del self.occupancy_log[:-self.max_log]
-        del self.request_log[:-self.max_log]
 
     # ---- telemetry --------------------------------------------------------
 
@@ -983,6 +1316,14 @@ class UOTScheduler:
                 "occupancy": c["window_dropped_occupancy"].value,
                 "dispositions": c["window_dropped_dispositions"].value,
             },
+            # overload-model totals (predictive admission + degrade
+            # ladder; zeros when the features are off)
+            "admission_infeasible": self._c_infeasible.value,
+            "degrade_levels": {lvl: ctr.value
+                               for lvl, ctr in self._c_degrade.items()},
+            "brownout_level": (self.brownout.level
+                               if self.brownout is not None else 0),
+            "seconds_per_iter": self._seconds_per_iter(),
         }
         status_counts: dict[str, int] = {}
         for t in self.request_log:

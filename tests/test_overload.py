@@ -1,0 +1,317 @@
+"""Overload model (repro.serve.overload + both schedulers' predictive
+admission): the brownout hysteresis controller, SLO-feasibility refusal
+(``InfeasibleDeadline``), the degrade ladder's labeled levels (truncated
+Sinkhorn at 1, sliced 1-D at 2), calibrated ``QueueFullError`` backoff
+hints, and the shed-accounting regression (window_dropped counts records
+trimmed at APPEND time, not only at snapshots).
+
+Everything runs on the jnp impl with fake clocks and a PINNED
+seconds_per_iter, so feasibility decisions are deterministic — no wall
+time anywhere.
+"""
+import numpy as np
+import pytest
+
+from repro.core import UOTConfig
+from repro.serve import (BrownoutController, InfeasibleDeadline,
+                         QueueFullError, RequestFailure, UOTScheduler,
+                         queue_pressure, submit_with_retry)
+from repro.cluster import ClusterScheduler
+
+from benchmarks.common import make_problem
+
+
+CFG = UOTConfig(reg=0.1, reg_m=1.0, num_iters=40, tol=1e-3)
+
+
+def _sched(t, **kw):
+    kw.setdefault("impl", "jnp")
+    kw.setdefault("m_bucket", 32)
+    kw.setdefault("n_bucket", 32)
+    return UOTScheduler(CFG, clock=lambda: t[0], sleep=lambda s: None, **kw)
+
+
+def _cluster(t, **kw):
+    kw.setdefault("impl", "jnp")
+    kw.setdefault("m_bucket", 32)
+    kw.setdefault("n_bucket", 32)
+    return ClusterScheduler(CFG, num_devices=2, lanes_per_device=2,
+                            clock=lambda: t[0], sleep=lambda s: None, **kw)
+
+
+def _points(seed, M=12, N=10, d=3):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(M, d)).astype(np.float32)
+    y = rng.normal(size=(N, d)).astype(np.float32)
+    a = rng.uniform(0.5, 1.0, M)
+    b = rng.uniform(0.5, 1.0, N)
+    return x, y, a / a.sum(), b / b.sum()
+
+
+class TestBrownoutController:
+    def test_hysteresis_ladder(self):
+        bc = BrownoutController(high=2.0, low=0.5, patience=3, max_level=2)
+        # patience rounds above `high` before stepping up — not one spike
+        assert bc.observe(3.0) == 0
+        assert bc.observe(3.0) == 0
+        assert bc.observe(3.0) == 1
+        # mid-band (between low and high) resets both counters
+        assert bc.observe(1.0) == 1
+        assert bc.observe(3.0) == 1
+        assert bc.observe(3.0) == 1
+        assert bc.observe(3.0) == 2
+        # capped at max_level
+        assert bc.observe(3.0) == 2
+        # recovery needs `patience` rounds BELOW `low`
+        assert bc.observe(0.1) == 2
+        assert bc.observe(0.1) == 2
+        assert bc.observe(0.1) == 1
+
+    def test_queue_pressure_units(self):
+        assert queue_pressure(8, 4) == 2.0
+        assert queue_pressure(3, 0) == 3.0   # lane count clamped to 1
+
+
+class TestFeasibilityAdmission:
+    def test_infeasible_deadline_refused_typed(self):
+        """With a pinned service-time model, a deadline the prediction
+        cannot meet is refused BEFORE queueing — typed, with the
+        prediction attached, and the rid resolves via poll."""
+        t = [0.0]
+        s = _sched(t, predictive=True, seconds_per_iter=10.0,
+                   shed_policy="drop")
+        K, a, b = make_problem(8, 8, seed=0)
+        with pytest.raises(InfeasibleDeadline) as exc:
+            s.submit(K, a, b, deadline=t[0] + 0.5)
+        err = exc.value
+        assert err.reason == "infeasible_deadline"
+        assert err.deadline == pytest.approx(0.5)
+        assert err.predicted_finish > err.deadline
+        assert err.predicted_iters > 0
+        # the rid still resolves: a 'rejected' disposition, never pending
+        out = s.poll(err.rid)
+        assert isinstance(out, RequestFailure) and out.status == "rejected"
+        assert s.stats()["admission_infeasible"] == 1
+        assert s.pending == 0
+
+    def test_feasible_deadline_admitted_and_served(self):
+        t = [0.0]
+        s = _sched(t, predictive=True, seconds_per_iter=1e-6,
+                   shed_policy="drop")
+        K, a, b = make_problem(8, 8, seed=1)
+        rid = s.submit(K, a, b, deadline=t[0] + 1e6)
+        out = s.run()
+        assert rid in out
+
+    def test_gate_inert_without_shed_policy(self):
+        """shed_policy='none': prediction powers ordering + hints but
+        never refuses work (the historical serve-everything contract)."""
+        t = [0.0]
+        s = _sched(t, predictive=True, seconds_per_iter=10.0)
+        K, a, b = make_problem(8, 8, seed=2)
+        rid = s.submit(K, a, b, deadline=t[0] + 0.5)   # hopeless, admitted
+        assert rid in s.run()
+        assert s.stats()["admission_infeasible"] == 0
+
+
+class TestDegradeLadder:
+    def test_level1_truncated_and_labeled(self):
+        """An infeasible dense request under shed_policy='degrade' runs
+        the truncated budget and carries the truncation-error label."""
+        t = [0.0]
+        s = _sched(t, predictive=True, seconds_per_iter=10.0,
+                   shed_policy="degrade", chunk_iters=4, degrade_iters=4)
+        K, a, b = make_problem(8, 8, seed=3)
+        rid = s.submit(K, a, b, deadline=t[0] + 0.5)
+        out = s.run()
+        assert rid in out
+        rec = next(r for r in s.request_log if r.rid == rid)
+        assert rec.degrade_level == 1
+        assert rec.shed == "degraded"
+        assert rec.iters <= 4             # the reduced budget, not the cap
+        assert rec.est_error is not None and rec.est_error > CFG.tol
+        assert s.stats()["degrade_levels"][1] == 1
+
+    def test_level2_sliced_same_round(self):
+        """An infeasible POINT request degrades to the sliced 1-D tier:
+        completes in the same scheduling round, no lane, certified error
+        label, nonneg coupling of the right shape."""
+        t = [0.0]
+        s = _sched(t, predictive=True, seconds_per_iter=10.0,
+                   shed_policy="degrade")
+        x, y, a, b = _points(4)
+        rid = s.submit_points(x, y, a, b, deadline=t[0] + 0.5)
+        out = s.step()
+        assert rid in out
+        P = out[rid]
+        assert P.shape == (12, 10) and np.all(np.isfinite(P))
+        assert np.all(P >= 0.0)
+        rec = next(r for r in s.request_log if r.rid == rid)
+        assert rec.degrade_level == 2 and rec.lane == -1
+        assert rec.status == "ok" and rec.converged
+        assert rec.est_error is not None and rec.est_error >= 0.0
+        assert s.stats()["degrade_levels"][2] == 1
+
+    def test_dense_requests_cap_at_level1(self):
+        """No coordinates to project -> the ladder tops out at the
+        deepest truncation, never the sliced tier."""
+        t = [0.0]
+        s = _sched(t, predictive=True, seconds_per_iter=10.0,
+                   shed_policy="degrade")
+        K, a, b = make_problem(8, 8, seed=5)
+        rid = s.submit(K, a, b, deadline=t[0] + 0.5)
+        assert rid in s.run()
+        rec = next(r for r in s.request_log if r.rid == rid)
+        assert rec.degrade_level == 1
+
+    def test_brownout_degrades_new_admissions(self):
+        """Sustained queue pressure walks the brownout level up and new
+        admissions shed accuracy until the backlog drains."""
+        t = [0.0]
+        s = _sched(t, predictive=True, shed_policy="degrade",
+                   lanes_per_pool=2,
+                   brownout=BrownoutController(high=0.5, low=0.1,
+                                               patience=1))
+        for i in range(8):
+            K, a, b = make_problem(8, 8, seed=10 + i)
+            s.submit(K, a, b)
+        out = s.run()
+        assert len(out) == 8
+        assert s.brownout.level >= 1 or s.stats()["shed_degraded"] > 0
+        degraded = [r for r in s.request_log if r.degrade_level == 1]
+        assert degraded and all(r.est_error is not None for r in degraded)
+
+
+class TestBackpressureHints:
+    def test_queue_full_carries_depth_and_hint(self):
+        """After one completion calibrates the model, QueueFullError
+        carries the observed depth and a positive drain-time hint."""
+        t = [0.0]
+        s = _sched(t, predictive=True, seconds_per_iter=0.01, max_queue=2)
+        K, a, b = make_problem(8, 8, seed=20)
+        rid = s.submit(K, a, b)
+        assert rid in s.run()             # calibrates _iters_ewma
+        s.submit(K, a, b)
+        s.submit(K, a, b)
+        with pytest.raises(QueueFullError) as exc:
+            s.submit(K, a, b)
+        assert exc.value.queue_depth == 2
+        assert exc.value.retry_after is not None
+        assert exc.value.retry_after > 0.0
+
+    def test_uncalibrated_hint_is_none(self):
+        t = [0.0]
+        s = _sched(t, max_queue=1)
+        K, a, b = make_problem(8, 8, seed=21)
+        s.submit(K, a, b)
+        with pytest.raises(QueueFullError) as exc:
+            s.submit(K, a, b)
+        assert exc.value.queue_depth == 1
+        assert exc.value.retry_after is None
+
+    def test_submit_with_retry_uses_hint_as_base(self):
+        """A retry_after hint replaces base_delay as the backoff base;
+        without it the historical capped-exponential applies."""
+
+        class _Full:
+            def __init__(self, fails, retry_after):
+                self.fails, self.retry_after, self.calls = fails, retry_after, 0
+
+            def submit(self):
+                self.calls += 1
+                if self.calls <= self.fails:
+                    raise QueueFullError("full", queue_depth=5,
+                                         retry_after=self.retry_after)
+                return 42
+
+        delays = []
+        sched = _Full(fails=1, retry_after=0.8)
+        assert submit_with_retry(sched, sleep=delays.append) == 42
+        assert len(delays) == 1 and 0.4 <= delays[0] <= 0.8
+
+        delays.clear()
+        sched = _Full(fails=1, retry_after=None)
+        assert submit_with_retry(sched, sleep=delays.append,
+                                 base_delay=0.05) == 42
+        assert len(delays) == 1 and 0.025 <= delays[0] <= 0.05
+
+    def test_submit_with_retry_gives_up(self):
+        class _Always:
+            def submit(self):
+                raise QueueFullError("full", queue_depth=1)
+
+        with pytest.raises(QueueFullError):
+            submit_with_retry(_Always(), attempts=3, sleep=lambda d: None)
+
+
+class TestShedAccountingRegression:
+    def test_window_dropped_counts_append_time_trims(self):
+        """Regression: shed-drop records land in the telemetry log
+        BETWEEN occupancy snapshots — trimming (and the window_dropped
+        counter) must happen at append time, or drops silently vanish
+        uncounted. Five drops into a 2-record window => 3 counted."""
+        t = [0.0]
+        s = _sched(t, shed_policy="drop", max_log=2)
+        rids = []
+        for i in range(5):
+            K, a, b = make_problem(8, 8, seed=30 + i)
+            rids.append(s.submit(K, a, b, deadline=-1.0))  # already expired
+        s.step()
+        assert len(s.request_log) == 2
+        st = s.stats()
+        assert st["shed_dropped"] == 5
+        assert st["window_dropped"]["requests"] == 3
+        # the disposition store shares the max_log window: the newest
+        # drops still resolve, and what fell off is COUNTED, not silent
+        assert st["window_dropped"]["dispositions"] == 3
+        for rid in rids[-2:]:
+            out = s.poll(rid)
+            assert isinstance(out, RequestFailure)
+            assert out.status == "rejected"
+
+
+class TestClusterOverload:
+    def test_cluster_infeasible_refused(self):
+        t = [0.0]
+        c = _cluster(t, predictive=True, seconds_per_iter=10.0,
+                     shed_policy="drop")
+        K, a, b = make_problem(8, 8, seed=40)
+        with pytest.raises(InfeasibleDeadline):
+            c.submit(K, a, b, deadline=t[0] + 0.5)
+        assert c.stats()["admission_infeasible"] == 1
+
+    def test_gang_routed_requests_exempt_from_gate(self):
+        """The lane-calibrated service model doesn't describe gang
+        solves: a gang-routed request is never feasibility-refused."""
+        t = [0.0]
+        c = _cluster(t, predictive=True, seconds_per_iter=10.0,
+                     shed_policy="drop", lane_budget=lambda m, n: False)
+        K, a, b = make_problem(8, 8, seed=41)
+        rid = c.submit(K, a, b, deadline=t[0] + 0.5)   # hopeless; admitted
+        assert rid >= 0 and c.pending == 1
+        assert c.stats()["admission_infeasible"] == 0
+
+    def test_cluster_sliced_route_labeled(self):
+        """Cluster level-2 completions are recorded route='sliced',
+        device=-1, with the certified error label."""
+        t = [0.0]
+        c = _cluster(t, predictive=True, seconds_per_iter=10.0,
+                     shed_policy="degrade")
+        x, y, a, b = _points(42)
+        rid = c.submit_points(x, y, a, b, deadline=t[0] + 0.5)
+        out = c.step()
+        assert rid in out
+        rec = next(r for r in c.request_log if r.rid == rid)
+        assert rec.route == "sliced" and rec.device == -1
+        assert rec.degrade_level == 2
+        assert rec.est_error is not None and rec.est_error >= 0.0
+
+    def test_cluster_queue_full_carries_depth(self):
+        t = [0.0]
+        c = _cluster(t, max_queue=1)
+        K, a, b = make_problem(8, 8, seed=43)
+        c.submit(K, a, b)
+        with pytest.raises(QueueFullError) as exc:
+            c.submit(K, a, b)
+        assert exc.value.queue_depth == 1
+        assert exc.value.retry_after is None

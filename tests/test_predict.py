@@ -1,0 +1,123 @@
+"""Iteration prediction (core.predict): analytic model shape, the
+truncation-error inverse, and the online predictor's calibration
+criterion — p90 relative error <= 30% on a held-out half of a
+(reg, reg_m, imbalance) sweep against the log-domain solver's actual
+iteration counts (the PR's acceptance bar for the service-time model).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import UOTConfig, sinkhorn_uot_log
+from repro.core.predict import (IterPredictor, analytic_iters,
+                                estimate_truncation_error, predict_iters)
+
+
+def _cfg(reg=0.05, reg_m=1.0, tol=1e-4, num_iters=400):
+    return UOTConfig(reg=reg, reg_m=reg_m, num_iters=num_iters, tol=tol,
+                     translation_invariant=True)
+
+
+class TestAnalytic:
+    def test_no_tol_runs_the_cap(self):
+        assert analytic_iters(_cfg(tol=None)) == 400.0
+
+    def test_tighter_tol_more_iters(self):
+        loose = analytic_iters(_cfg(tol=1e-2))
+        tight = analytic_iters(_cfg(tol=1e-6))
+        assert tight > loose
+
+    def test_weaker_relaxation_more_iters(self):
+        # larger reg_m -> fi closer to 1 -> slower contraction
+        fast = analytic_iters(_cfg(reg_m=0.1))
+        slow = analytic_iters(_cfg(reg_m=10.0))
+        assert slow > fast
+
+    def test_balanced_limit_is_the_cap(self):
+        assert analytic_iters(_cfg(reg_m=float("inf"))) == 400.0
+
+    def test_clipped_to_config_range(self):
+        assert 1.0 <= analytic_iters(_cfg(reg_m=100.0, tol=1e-12)) <= 400.0
+
+    def test_predict_iters_reads_marginals(self):
+        class P:
+            a = np.full(8, 0.25)
+            b = np.full(8, 0.125)
+
+        bal = analytic_iters(_cfg())
+        imb = predict_iters(P(), _cfg())
+        assert imb >= bal   # imbalance can only add iterations
+
+    def test_truncation_error_inverts(self):
+        cfg = _cfg()
+        # running the analytically-predicted count lands near tol
+        iters = analytic_iters(cfg)
+        err = estimate_truncation_error(cfg, iters)
+        assert err == pytest.approx(cfg.tol, rel=1e-6)
+        # truncating earlier is worse, monotonically
+        assert (estimate_truncation_error(cfg, iters / 4)
+                > estimate_truncation_error(cfg, iters / 2) > err)
+
+
+def _actual_iters(cfg, a, b, C):
+    _, _, stats = sinkhorn_uot_log(jnp.asarray(C), jnp.asarray(a),
+                                   jnp.asarray(b), cfg)
+    return int(stats["iters"])
+
+
+class TestOnlineCalibration:
+    def test_p90_relative_error_under_30pct(self):
+        """The acceptance criterion: observe half the sweep, predict the
+        other half; p90 of |pred - actual| / actual must be <= 0.30."""
+        rng = np.random.default_rng(0)
+        M, N = 24, 32
+        C = np.abs(rng.normal(size=(M, 1)) - rng.normal(size=(1, N))) ** 2
+        samples = []
+        for reg in (0.02, 0.05, 0.1):
+            for reg_m in (0.3, 1.0, 3.0):
+                for imb in (1.0, 1.5, 2.2):
+                    for jit in range(2):
+                        a = rng.uniform(0.5, 1.0, M)
+                        b = rng.uniform(0.5, 1.0, N)
+                        a /= a.sum()
+                        b /= b.sum() / imb
+                        cfg = _cfg(reg=reg, reg_m=reg_m)
+                        samples.append(
+                            (cfg, a, b, _actual_iters(cfg, a, b, C)))
+        rng.shuffle(samples)
+        pred = IterPredictor()
+        half = len(samples) // 2
+        for cfg, a, b, actual in samples[:half]:
+            pred.observe(cfg, actual, bucket=(M, N),
+                         mass_a=float(a.sum()), mass_b=float(b.sum()))
+        errs = []
+        for cfg, a, b, actual in samples[half:]:
+            p = pred.predict(cfg, bucket=(M, N), mass_a=float(a.sum()),
+                             mass_b=float(b.sum()))
+            errs.append(abs(p - actual) / actual)
+        assert float(np.percentile(errs, 90)) <= 0.30
+
+    def test_cold_predictor_falls_back_to_analytic(self):
+        cfg = _cfg()
+        pred = IterPredictor()
+        assert pred.predict(cfg, bucket=(8, 8)) == analytic_iters(cfg)
+
+    def test_observation_moves_the_prediction(self):
+        cfg = _cfg()
+        pred = IterPredictor()
+        base = analytic_iters(cfg)
+        pred.observe(cfg, base * 2.0, bucket=(8, 8))
+        assert pred.predict(cfg, bucket=(8, 8)) == pytest.approx(
+            base * 2.0, rel=1e-6)
+        # an unseen bucket uses the global cell, not the raw analytic
+        assert pred.predict(cfg, bucket=(64, 64)) == pytest.approx(
+            base * 2.0, rel=1e-6)
+
+    def test_snapshot_shape(self):
+        pred = IterPredictor()
+        pred.observe(_cfg(), 10.0, bucket=(8, 8))
+        snap = pred.snapshot()
+        # one observe populates the fine cell, its (reg, reg_m) regime
+        # cell, and the global cell
+        assert "global" in snap and len(snap) == 3

@@ -1,0 +1,248 @@
+"""Exact 1-D (un)balanced OT + sliced UOT (core.solve_1d, geometry.sliced).
+
+Validation strategy (certificate-based — the solver REPORTS its own
+accuracy, so the assertions lean on the certificates instead of magic
+tolerances):
+
+* balanced: exact parity with an LP oracle (scipy linprog) for p in
+  {1, 2}, plan marginal feasibility;
+* unbalanced: dual feasibility (f + g <= c everywhere), weak duality,
+  the certified gap honest against an entropic reference (dual lower-
+  bounds the reference objective universally; primal exceeds it by at
+  most a few certified gaps);
+* jnp twin: parity with the host path, vmap shape contract;
+* sliced: per-slice parity with the host solver, convergence in n_proj
+  toward a high-n_proj sliced reference, the statistical-lower-bound
+  property vs a dense solve, and the lifted coupling's mass accounting.
+"""
+import numpy as np
+import pytest
+import scipy.optimize
+
+import jax.numpy as jnp
+
+from repro.core import UOTConfig, sinkhorn_uot_log
+from repro.core.problem import uot_cost
+from repro.core.solve_1d import (Plan1D, Solve1DResult, solve_1d,
+                                 solve_1d_balanced_np, solve_1d_np,
+                                 uot_objective_np)
+from repro.geometry.sliced import (lift_coupling_np, sliced_directions,
+                                   sliced_uot)
+
+
+def _random_1d(rng, M, N, imbalance=1.0):
+    x = rng.normal(size=M)
+    y = rng.normal(size=N) + 0.25
+    a = rng.uniform(0.2, 1.0, size=M)
+    b = rng.uniform(0.2, 1.0, size=N)
+    a /= a.sum()
+    b /= b.sum() / imbalance
+    return x, a, y, b
+
+
+def _lp_cost(x, a, y, b, p, cost_scale):
+    """Balanced 1-D OT by LP — the oracle the merge must match."""
+    M, N = len(x), len(y)
+    C = cost_scale * np.abs(x[:, None] - y[None, :]) ** p
+    A_eq, b_eq = [], []
+    for i in range(M):
+        row = np.zeros(M * N)
+        row[i * N:(i + 1) * N] = 1.0
+        A_eq.append(row)
+        b_eq.append(a[i])
+    for j in range(N):
+        row = np.zeros(M * N)
+        row[j::N] = 1.0
+        A_eq.append(row)
+        b_eq.append(b[j])
+    res = scipy.optimize.linprog(C.ravel(), A_eq=np.array(A_eq),
+                                 b_eq=np.array(b_eq), bounds=(0, None),
+                                 method="highs")
+    assert res.status == 0
+    return res.fun
+
+
+class TestBalanced:
+    @pytest.mark.parametrize("p", [1, 2])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_lp_parity(self, p, seed):
+        rng = np.random.default_rng(seed)
+        x, a, y, b = _random_1d(rng, 7, 9)
+        plan = solve_1d_balanced_np(x, a, y, b, p=p, cost_scale=1.3)
+        ref = _lp_cost(x, a, y, b, p, 1.3)
+        assert plan.cost == pytest.approx(ref, abs=1e-7)
+
+    def test_plan_marginals(self):
+        rng = np.random.default_rng(3)
+        x, a, y, b = _random_1d(rng, 12, 5)
+        plan = solve_1d_balanced_np(x, a, y, b)
+        ra = np.zeros(12)
+        rb = np.zeros(5)
+        np.add.at(ra, plan.i, plan.w)
+        np.add.at(rb, plan.j, plan.w)
+        np.testing.assert_allclose(ra, a, atol=1e-12)
+        np.testing.assert_allclose(rb, b, atol=1e-12)
+
+    def test_rho_inf_reduces_to_balanced(self):
+        rng = np.random.default_rng(4)
+        x, a, y, b = _random_1d(rng, 8, 8)
+        res = solve_1d_np(x, a, y, b, rho=float("inf"))
+        plan = solve_1d_balanced_np(x, a, y, b)
+        assert res.primal == pytest.approx(plan.cost, abs=1e-12)
+        assert res.dual <= res.primal + 1e-9
+
+
+class TestUnbalanced:
+    @pytest.mark.parametrize("rho", [0.05, 0.5, 5.0])
+    @pytest.mark.parametrize("imbalance", [1.0, 1.6])
+    def test_certificates(self, rho, imbalance):
+        rng = np.random.default_rng(10)
+        x, a, y, b = _random_1d(rng, 14, 11, imbalance)
+        res = solve_1d_np(x, a, y, b, rho=rho, n_fw=32)
+        # dual feasibility: f + g <= c on every pair
+        C = np.abs(x[:, None] - y[None, :]) ** 2
+        slack = res.f[:, None] + res.g[None, :] - C
+        assert slack.max() <= 1e-7
+        # weak duality + a nonnegative certified gap
+        assert res.dual <= res.primal + 1e-9
+        assert res.gap >= 0.0
+        # the delivered plan's true objective IS the reported primal
+        P = np.zeros((14, 11))
+        np.add.at(P, (res.plan.i, res.plan.j), res.plan.w)
+        assert uot_objective_np(P, C, a, b, rho) == pytest.approx(
+            res.primal, rel=1e-6, abs=1e-9)
+
+    @pytest.mark.parametrize("rho", [0.1, 1.0])
+    def test_vs_entropic_reference(self, rho):
+        """The certificate is honest against an independent solver: the
+        dual lower-bounds the entropic reference objective (which upper-
+        bounds the true optimum), and the primal exceeds the reference
+        by at most a few certified gaps."""
+        rng = np.random.default_rng(11)
+        x, a, y, b = _random_1d(rng, 16, 12, 1.3)
+        C = np.abs(x[:, None] - y[None, :]) ** 2
+        res = solve_1d_np(x, a, y, b, rho=rho, n_fw=48)
+        cfg = UOTConfig(reg=0.01, reg_m=rho, num_iters=3000, tol=1e-9,
+                        translation_invariant=True)
+        P_ref, _, _ = sinkhorn_uot_log(jnp.asarray(C), jnp.asarray(a),
+                                       jnp.asarray(b), cfg)
+        ref = uot_objective_np(np.asarray(P_ref), C, a, b, rho)
+        scale = max(abs(ref), 1.0)
+        assert res.dual <= ref + 1e-6 * scale
+        assert res.primal <= ref + max(3.0 * res.gap, 1e-3 * scale)
+
+
+class TestJnpTwin:
+    @pytest.mark.parametrize("rho", [0.2, 2.0])
+    def test_parity_with_host(self, rho):
+        rng = np.random.default_rng(20)
+        x, a, y, b = _random_1d(rng, 10, 13, 1.2)
+        out = solve_1d(x, a, y, b, rho, n_fw=24)
+        ref = solve_1d_np(x, a, y, b, rho=rho, n_fw=24)
+        scale = max(abs(ref.primal), 1e-3)
+        # fp32 trajectory vs fp64 trajectory: same envelope up to fp32
+        assert float(out["primal"]) == pytest.approx(
+            ref.primal, abs=2e-2 * scale)
+        assert float(out["dual"]) == pytest.approx(
+            ref.dual, abs=2e-2 * scale)
+        assert float(out["gap"]) >= 0.0
+
+    def test_vmap_shapes(self):
+        import jax
+        rng = np.random.default_rng(21)
+        M, N, S = 9, 7, 8
+        xs = rng.normal(size=(S, M)).astype(np.float32)
+        ys = rng.normal(size=(S, N)).astype(np.float32)
+        a = np.full(M, 1.0 / M, np.float32)
+        b = np.full(N, 1.0 / N, np.float32)
+
+        def one(xi, yi):
+            return solve_1d(xi, a, yi, b, 0.5, n_fw=8)
+
+        out = jax.vmap(one)(jnp.asarray(xs), jnp.asarray(ys))
+        assert out["primal"].shape == (S,)
+        assert out["seg_i"].shape == (S, M + N)
+        assert out["seg_w"].shape == (S, M + N)
+        assert np.all(np.asarray(out["gap"]) >= 0.0)
+
+
+class TestSliced:
+    def _clouds(self, seed=30, M=24, N=20, d=3):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(M, d))
+        y = rng.normal(size=(N, d)) + 0.3
+        a = rng.uniform(0.3, 1.0, size=M)
+        b = rng.uniform(0.3, 1.0, size=N)
+        a /= a.sum()
+        b /= b.sum()
+        return x, y, a, b
+
+    def test_directions_unit_norm(self):
+        theta = np.asarray(sliced_directions(4, 16, seed=1))
+        np.testing.assert_allclose(np.linalg.norm(theta, axis=1), 1.0,
+                                   atol=1e-6)
+
+    def test_per_slice_parity(self):
+        """Each slice of the vmapped launch brackets the same optimum as
+        a host fp64 1-D solve of the same projected problem: the two
+        certified [dual, primal] intervals must overlap, so the primal
+        values differ by at most the sum of the certified gaps (the
+        fp32 and fp64 FW *trajectories* may diverge — the certificates
+        are what both paths guarantee)."""
+        x, y, a, b = self._clouds()
+        d = x.shape[1]
+        rho = 1.0
+        res = sliced_uot(x, y, a, b, rho=rho, n_proj=4, seed=2, n_fw=24)
+        theta = np.asarray(sliced_directions(d, 4, seed=2))
+        for s in range(4):
+            ref = solve_1d_np(x @ theta[s], a, y @ theta[s], b, rho=rho,
+                              cost_scale=float(d), n_fw=24)
+            scale = max(abs(ref.primal), 1e-3)
+            gap_s = res.primal[s] - res.dual[s]
+            slack = gap_s + ref.gap + 2e-2 * scale
+            # both intervals contain the optimum -> primals are within
+            # the combined certified slack, and each dual stays below
+            # the other path's primal
+            assert abs(res.primal[s] - ref.primal) <= slack
+            assert res.dual[s] <= ref.primal + 2e-2 * scale
+            assert ref.dual <= res.primal[s] + 2e-2 * scale
+
+    def test_n_proj_convergence(self):
+        """More projections -> closer to the many-projection sliced
+        value (the estimator converges to the sliced functional)."""
+        x, y, a, b = self._clouds(seed=31)
+        ref = sliced_uot(x, y, a, b, rho=0.5, n_proj=512, seed=99).cost
+        errs = []
+        for n_proj in (4, 64):
+            got = sliced_uot(x, y, a, b, rho=0.5, n_proj=n_proj,
+                             seed=7).cost
+            errs.append(abs(got - ref) / abs(ref))
+        assert errs[1] < errs[0]
+        assert errs[1] < 0.2
+
+    def test_lower_bound_vs_dense(self):
+        """mean(dual) is a statistical lower bound on the true UOT cost:
+        the projection of the dense optimal plan is feasible per slice
+        with identical KL terms."""
+        x, y, a, b = self._clouds(seed=32, M=16, N=14)
+        rho = 1.0
+        C = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+        cfg = UOTConfig(reg=0.02, reg_m=rho, num_iters=2000, tol=1e-8,
+                        translation_invariant=True)
+        P_ref, _, _ = sinkhorn_uot_log(jnp.asarray(C), jnp.asarray(a),
+                                       jnp.asarray(b), cfg)
+        dense = uot_objective_np(np.asarray(P_ref), C, a, b, rho)
+        res = sliced_uot(x, y, a, b, rho=rho, n_proj=256, seed=5)
+        # 4 sigma of slack on the Monte-Carlo estimate of the bound
+        assert res.lower_bound <= dense + 4.0 * res.std_err + res.mean_gap
+
+    def test_est_error_and_lift(self):
+        x, y, a, b = self._clouds(seed=33)
+        res = sliced_uot(x, y, a, b, rho=0.5, n_proj=8, seed=3)
+        assert res.est_error >= res.mean_gap >= 0.0
+        P = lift_coupling_np(res, x.shape[0], y.shape[0])
+        assert P.shape == (x.shape[0], y.shape[0])
+        assert np.all(P >= 0.0)
+        # lifted mass = mean over slices of each slice's plan mass
+        assert P.sum() == pytest.approx(float(res.seg_w.sum()) / 8,
+                                        rel=1e-6)

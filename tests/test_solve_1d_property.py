@@ -1,0 +1,91 @@
+"""Property tests (hypothesis): the 1-D solver's certificates hold for
+ANY instance — dual feasibility, weak duality, LP parity of the balanced
+merge, and sliced error shrinking in n_proj.
+
+Seeded deterministic instances of the same properties always run in
+tests/test_solve_1d.py; this file widens the search to hypothesis-chosen
+supports, weights, and (rho, imbalance) when hypothesis is installed
+(mirrors tests/test_faults_property.py's guard).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.solve_1d import (solve_1d_balanced_np, solve_1d_np,
+                                 uot_objective_np)
+from repro.geometry.sliced import sliced_uot
+
+finite = dict(allow_nan=False, allow_infinity=False)
+
+
+def _instance(seed, M, N, imbalance):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=M)
+    y = rng.normal(size=N)
+    a = rng.uniform(0.1, 1.0, size=M)
+    b = rng.uniform(0.1, 1.0, size=N)
+    a /= a.sum()
+    b /= b.sum() / imbalance
+    return x, a, y, b
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), M=st.integers(2, 24),
+       N=st.integers(2, 24),
+       rho=st.floats(0.02, 20.0, **finite),
+       imbalance=st.floats(0.3, 3.0, **finite),
+       p=st.sampled_from([1, 2]))
+def test_certificates_hold_everywhere(seed, M, N, rho, imbalance, p):
+    """For ANY instance: dual feasible, weak duality, gap >= 0, and the
+    delivered plan's true objective equals the reported primal."""
+    x, a, y, b = _instance(seed, M, N, imbalance)
+    res = solve_1d_np(x, a, y, b, rho=rho, p=p, n_fw=16)
+    C = np.abs(x[:, None] - y[None, :]) ** p
+    assert (res.f[:, None] + res.g[None, :] - C).max() <= 1e-6
+    assert res.dual <= res.primal + 1e-8
+    assert res.gap >= 0.0
+    P = np.zeros((M, N))
+    np.add.at(P, (res.plan.i, res.plan.j), res.plan.w)
+    obj = uot_objective_np(P, C, a, b, rho)
+    assert obj == pytest.approx(res.primal, rel=1e-6, abs=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), M=st.integers(2, 16),
+       N=st.integers(2, 16), p=st.sampled_from([1, 2]))
+def test_balanced_monotone_optimal(seed, M, N, p):
+    """The quantile-merge plan can never be beaten by a random feasible
+    perturbation toward another coupling (exactness spot check without
+    an LP per example: optimality against the independent coupling)."""
+    x, a, y, b = _instance(seed, M, N, 1.0)
+    plan = solve_1d_balanced_np(x, a, y, b, p=p)
+    C = np.abs(x[:, None] - y[None, :]) ** p
+    indep = np.outer(a, b) / a.sum()
+    assert plan.cost <= float((indep * C).sum()) + 1e-9
+    # and its marginals are exact
+    ra = np.zeros(M)
+    rb = np.zeros(N)
+    np.add.at(ra, plan.i, plan.w)
+    np.add.at(rb, plan.j, plan.w)
+    np.testing.assert_allclose(ra, a, atol=1e-10)
+    np.testing.assert_allclose(rb, b, atol=1e-10)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), rho=st.floats(0.1, 5.0, **finite))
+def test_sliced_error_shrinks_in_n_proj(seed, rho):
+    """The Monte-Carlo half of the sliced label shrinks with more
+    projections; the certified half stays a valid gap."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(12, 3))
+    y = rng.normal(size=(10, 3))
+    a = np.full(12, 1.0 / 12)
+    b = np.full(10, 1.0 / 10)
+    lo = sliced_uot(x, y, a, b, rho=rho, n_proj=8, seed=seed)
+    hi = sliced_uot(x, y, a, b, rho=rho, n_proj=128, seed=seed)
+    assert hi.std_err <= lo.std_err + 1e-12
+    assert lo.mean_gap >= 0.0 and hi.mean_gap >= 0.0
+    assert hi.est_error <= lo.est_error + lo.mean_gap + 1e-9
