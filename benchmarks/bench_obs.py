@@ -17,6 +17,12 @@ bar bounds. Each mode runs ``REPEATS`` times after a shared compile
 warmup and keeps its best (min makespan / min p99) replay, so scheduler
 jitter does not masquerade as obs overhead.
 
+The *on* mode is the full default bundle — which since the measured-
+performance layer includes the wall-clock profiler hooks (``PhaseTimer``
+round phases + the ``ops.launch_profiler`` kernel timer with its
+per-launch device sync), so the <= 5% bar covers profiling too, not just
+tracing and byte accounting.
+
 Hard-asserts (the obs-overhead CI job): on-vs-off overhead <= 5% on both
 throughput (makespan) and p99 latency. ``BENCH_OBS_SMOKE=1`` shrinks the
 trace for CI — at smoke scale the p99 of a 16-request trace is a
@@ -88,6 +94,13 @@ def run():
     assert s_on.obs.tracer.enabled and s_on.obs.traffic.enabled
     assert len(s_on.obs.tracer.events) > 0
     assert s_on.obs.traffic.totals()["bytes"] > 0
+    # ... including the measured-performance instruments: kernel cells
+    # recorded and round phases timed when on, null twins when off —
+    # this is what puts the profiler's per-launch sync under the bar
+    assert s_on.obs.profile.enabled and len(s_on.obs.profile.cells()) > 0
+    assert s_on.obs.registry.histogram(
+        "profile.phase.serve.chunk").snapshot()["count"] > 0
+    assert not s_off.obs.profile.enabled and not s_off.obs.phases.enabled
     # the registry stays live either way: stats() totals must agree
     assert s_off.stats()["completed"] == s_on.stats()["completed"] == n
 

@@ -1,11 +1,32 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Timing discipline: every ``us_per_call`` this module helps produce is a
+**steady-state** number — ``time_fn`` warms up (trace + compile happen on
+the warmup calls) before the timed reps, and ``time_fn_full`` additionally
+reports the first (cold, trace+compile-inclusive) call separately so the
+two regimes are never conflated in one figure. Suites that time a single
+call by hand must warm that call up first for the same reason.
+
+``bench_meta()`` stamps each ``BENCH_<suite>.json`` with enough provenance
+to compare runs honestly (schema version, git sha, jax versions, machine
+fingerprint); ``check_payload()`` is the perf-regression gate ``run.py
+--check`` applies against committed snapshots — it skips cross-machine
+comparisons outright rather than flagging noise as regression.
+"""
 from __future__ import annotations
 
+import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# Bumped whenever the BENCH_<suite>.json payload shape changes:
+# 1 = bare {suite, backend, platform, records}
+# 2 = + meta block (git sha, versions, machine fingerprint), records may
+#     carry first_us (cold trace+compile call) next to us_per_call
+BENCH_SCHEMA_VERSION = 2
 
 # Records of every emit() since the last reset_records(); run.py drains this
 # into per-suite BENCH_<suite>.json files so the perf trajectory accumulates.
@@ -25,8 +46,14 @@ def make_problem(M, N, reg=0.05, seed=0, dtype=jnp.float32, peak=1.0):
     return (jnp.asarray(K, dtype), jnp.asarray(a), jnp.asarray(b))
 
 
-def time_fn(fn, *args, warmup=1, iters=3):
-    """Median wall time (s) of fn(*args) with block_until_ready."""
+def time_fn_full(fn, *args, warmup=1, iters=3):
+    """``(first_s, median_s)``: the cold first call (trace + compile +
+    execute) timed separately from the steady-state median of ``iters``
+    post-warmup reps. ``warmup`` counts calls *after* the first — with the
+    default 1, the timed reps start on call 3."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    first = time.perf_counter() - t0
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -34,13 +61,28 @@ def time_fn(fn, *args, warmup=1, iters=3):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return first, float(np.median(ts))
 
 
-def emit(name: str, us_per_call: float, derived: str):
+def time_fn(fn, *args, warmup=1, iters=3):
+    """Median steady-state wall time (s) of fn(*args) with
+    block_until_ready; the cold call is burned as warmup. Use
+    ``time_fn_full`` when the trace+compile cost itself is the datum."""
+    _, med = time_fn_full(fn, *args, warmup=warmup, iters=iters)
+    return med
+
+
+def emit(name: str, us_per_call: float, derived: str, *,
+         first_us: float | None = None):
+    """Record one benchmark line. ``us_per_call`` must be steady-state;
+    pass the cold trace+compile call as ``first_us`` so it lands in the
+    JSON without polluting the comparable number."""
     print(f"{name},{us_per_call:.1f},{derived}")
-    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                    "derived": derived})
+    rec = {"name": name, "us_per_call": round(us_per_call, 1),
+           "derived": derived}
+    if first_us is not None:
+        rec["first_us"] = round(first_us, 1)
+    RECORDS.append(rec)
 
 
 def reset_records() -> list[dict]:
@@ -48,3 +90,73 @@ def reset_records() -> list[dict]:
     global RECORDS
     out, RECORDS = RECORDS, []
     return out
+
+
+def _git_sha() -> str | None:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except OSError:
+        return None
+
+
+def bench_meta() -> dict:
+    """Provenance block for ``BENCH_*.json`` / ``OBS_*.json`` payloads:
+    schema version, git sha, jax/jaxlib versions, backend, device kind,
+    and the hostname-free machine fingerprint ``check_payload`` keys
+    comparability on."""
+    import jaxlib
+    from repro.obs.measure import machine_fingerprint
+    fp = machine_fingerprint()
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": fp["backend"],
+        "device_kind": fp["device_kind"],
+        "fingerprint": fp,
+    }
+
+
+def check_payload(fresh: dict, baseline: dict, *, threshold: float = 1.3,
+                  min_us: float = 50.0) -> dict:
+    """Perf-regression verdict for one suite: fresh vs committed baseline.
+
+    Returns ``{"status": "ok"|"fail"|"skip", "reason", "failures",
+    "compared"}``. Skips (never fails) when either payload predates the
+    meta schema or the machine fingerprints differ — a number measured on
+    another machine is not a baseline, it is a different experiment.
+    Records are matched by name; records below ``min_us`` steady-state are
+    ignored (sub-50us host timings are noise-dominated), as are
+    non-positive sentinels. A record regresses when
+    ``fresh > threshold * baseline`` on ``us_per_call``.
+    """
+    fm, bm = fresh.get("meta"), baseline.get("meta")
+    if not fm or not bm:
+        return {"status": "skip", "reason": "missing meta (pre-v2 schema)",
+                "failures": [], "compared": 0}
+    f_id = (fm.get("fingerprint") or {}).get("id")
+    b_id = (bm.get("fingerprint") or {}).get("id")
+    if f_id is None or b_id is None or f_id != b_id:
+        return {"status": "skip",
+                "reason": f"machine fingerprint mismatch "
+                          f"({f_id} vs baseline {b_id})",
+                "failures": [], "compared": 0}
+    base_by_name = {r["name"]: r for r in baseline.get("records", [])}
+    failures, compared = [], 0
+    for rec in fresh.get("records", []):
+        base = base_by_name.get(rec["name"])
+        if base is None:
+            continue
+        f_us, b_us = rec.get("us_per_call", 0), base.get("us_per_call", 0)
+        if f_us <= 0 or b_us <= 0 or b_us < min_us:
+            continue
+        compared += 1
+        if f_us > threshold * b_us:
+            failures.append({"name": rec["name"], "baseline_us": b_us,
+                             "fresh_us": f_us,
+                             "ratio": round(f_us / b_us, 3)})
+    return {"status": "fail" if failures else "ok",
+            "reason": "", "failures": failures, "compared": compared}

@@ -6,7 +6,12 @@ across PRs. Each suite also gets an ``OBS_<suite>.json`` — the
 process-global observability dump (``repro.obs.global_dump``: registry
 counters/gauges/histograms + the HBM-traffic accountant's per-route byte
 totals and roofline summary), reset between suites so each file describes
-one suite's work. Mapping to the paper:
+one suite's work. Both payloads carry a ``meta`` provenance block
+(``common.bench_meta``: schema version, git sha, jax versions, machine
+fingerprint); ``--check`` re-reads the committed ``BENCH_<suite>.json``
+from ``--baseline-dir`` before writing and fails the run when any record
+regresses past ``--threshold`` (default 1.3x) on the same machine —
+cross-machine comparisons are skipped, not judged. Mapping to the paper:
   bench_uot          -> Fig 9/10 (CPU single/multi-thread performance)
   bench_traffic      -> Fig 11  (cache misses -> HBM traffic)
   bench_kernel       -> Fig 8/13/14 (GPU tiling/perf/throughput -> TPU roofline)
@@ -68,6 +73,17 @@ def main(argv=None) -> None:
     parser.add_argument("--suite", action="append", default=None,
                         help="run only these suites (repeatable), e.g. "
                              "--suite bench_batch")
+    parser.add_argument("--check", action="store_true",
+                        help="after each suite, compare its fresh records "
+                             "against the committed baseline in "
+                             "--baseline-dir (common.check_payload); exit "
+                             "1 on any regression")
+    parser.add_argument("--baseline-dir", default=".",
+                        help="directory holding baseline BENCH_<suite>.json "
+                             "files for --check (default: cwd)")
+    parser.add_argument("--threshold", type=float, default=1.3,
+                        help="per-record slowdown ratio that counts as a "
+                             "regression for --check (default 1.3)")
     args = parser.parse_args(argv)
 
     from repro import obs as obslib
@@ -91,12 +107,22 @@ def main(argv=None) -> None:
 
     out_dir = pathlib.Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
+    baseline_dir = pathlib.Path(args.baseline_dir)
+    meta = common.bench_meta()
     print("name,us_per_call,derived")
     failed = 0
+    regressed = 0
     for mod in mods:
         suite = mod.__name__.split(".")[-1]
         json_path = out_dir / f"BENCH_{suite}.json"
         obs_path = out_dir / f"OBS_{suite}.json"
+        # read the baseline BEFORE writing the fresh payload — --check
+        # with out-dir == baseline-dir must not clobber-then-compare
+        baseline = None
+        if args.check:
+            bpath = baseline_dir / f"BENCH_{suite}.json"
+            if bpath.exists():
+                baseline = json.loads(bpath.read_text())
         common.reset_records()
         # zero the process-global registry + traffic accountant so the
         # suite's OBS dump describes this suite's work only
@@ -116,13 +142,35 @@ def main(argv=None) -> None:
             "suite": suite,
             "backend": jax.default_backend(),
             "platform": platform.platform(),
+            "meta": meta,
             "records": common.reset_records(),
         }
         json_path.write_text(json.dumps(payload, indent=2) + "\n")
         obs_path.write_text(
-            json.dumps({"suite": suite, **obslib.global_dump()}, indent=2)
+            json.dumps({"suite": suite, "meta": meta,
+                        **obslib.global_dump()}, indent=2)
             + "\n")
-    if failed:
+        if args.check:
+            if baseline is None:
+                print(f"check {suite}: SKIP (no baseline in "
+                      f"{baseline_dir})", file=sys.stderr)
+                continue
+            verdict = common.check_payload(payload, baseline,
+                                           threshold=args.threshold)
+            if verdict["status"] == "skip":
+                print(f"check {suite}: SKIP ({verdict['reason']})",
+                      file=sys.stderr)
+            elif verdict["status"] == "fail":
+                regressed += 1
+                for f in verdict["failures"]:
+                    print(f"check {suite}: REGRESSION {f['name']} "
+                          f"{f['baseline_us']} -> {f['fresh_us']} us "
+                          f"({f['ratio']}x > {args.threshold}x)",
+                          file=sys.stderr)
+            else:
+                print(f"check {suite}: OK ({verdict['compared']} records "
+                      f"within {args.threshold}x)", file=sys.stderr)
+    if failed or regressed:
         raise SystemExit(1)
 
 

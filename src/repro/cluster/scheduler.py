@@ -111,6 +111,7 @@ EITHER queue (it is route-independent and cheaper than any launch).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable
@@ -124,7 +125,8 @@ from repro.core.problem import UOTConfig
 from repro.core import distributed
 from repro.core.health import (InvalidProblemError, escalate_log_solve,
                                validate_problem)
-from repro.core.predict import IterPredictor, estimate_truncation_error
+from repro.core.predict import (IterPredictor, estimate_truncation_error,
+                                measured_seconds_per_iter)
 from repro.geometry import PointCloudGeometry
 from repro.geometry.sliced import lift_coupling_np, sliced_uot
 from repro.kernels import ops
@@ -240,6 +242,7 @@ class ClusterScheduler:
                  escalate_factor: int = 2, fault_injector=None,
                  predictive: bool = False,
                  seconds_per_iter: float | None = None,
+                 measurements=None,
                  feasibility_margin: float = 1.0,
                  brownout: "BrownoutController | None" = None,
                  predictor: "IterPredictor | None" = None,
@@ -328,6 +331,13 @@ class ClusterScheduler:
         self._spi_pinned = seconds_per_iter
         self._spi_ewma: float | None = None
         self._iters_ewma: float | None = None
+        # Measured performance (see UOTScheduler's ctor comment): a
+        # MeasurementStore feeds the service-time model (pinned >
+        # measured > completion EWMA) and makes impl='auto' chunk
+        # dispatch measurement-driven via ops.dispatch_advisor.
+        self.measurements = measurements
+        self._advisor = (obslib.MeasuredDispatch(measurements)
+                         if measurements is not None else None)
         self._pending_completed: dict[int, np.ndarray] = {}
         # lane-pool budget: buckets failing it route to the gang. The
         # default is the resident-tier VMEM predicate — a conservative
@@ -421,9 +431,18 @@ class ClusterScheduler:
         healthy = sum(1 for h in self._device_health if h == "ok")
         return max(1, healthy * self.lanes_per_device)
 
-    def _seconds_per_iter(self) -> float | None:
+    def _seconds_per_iter(self, bucket=None) -> float | None:
+        """Pinned > measured chunk rate (per-bucket, then aggregate) >
+        completion EWMA > None (``UOTScheduler._seconds_per_iter``)."""
         if self._spi_pinned is not None:
             return self._spi_pinned
+        if self.measurements is not None:
+            M, N = bucket if bucket is not None else (None, None)
+            spi = measured_seconds_per_iter(self.measurements, M=M, N=N)
+            if spi is None and bucket is not None:
+                spi = measured_seconds_per_iter(self.measurements)
+            if spi is not None:
+                return spi
         return self._spi_ewma
 
     def _predict_request_iters(self, req: ScheduledRequest) -> float:
@@ -432,7 +451,7 @@ class ClusterScheduler:
             mass_a=float(req.a.sum()), mass_b=float(req.b.sum()))
 
     def _predicted_service(self, req: ScheduledRequest) -> float | None:
-        spi = self._seconds_per_iter()
+        spi = self._seconds_per_iter(req.bucket)
         if not self.predictive or spi is None:
             return None
         if req.predicted_iters is None:
@@ -669,15 +688,16 @@ class ClusterScheduler:
         """The terminal disposition of ``rid``: the finished coupling, a
         ``RequestFailure`` (failed / rejected / lost), or None only while
         genuinely pending. Take semantics — handed out exactly once."""
-        out = self._results.pop(rid, None)
-        if out is not None:
-            self.obs.tracer.emit(rid, "poll", resolved="coupling")
+        with self.obs.phases.phase("cluster.poll"):
+            out = self._results.pop(rid, None)
+            if out is not None:
+                self.obs.tracer.emit(rid, "poll", resolved="coupling")
+                return out
+            out = self._dispositions.pop(rid, None)
+            self.obs.tracer.emit(
+                rid, "poll",
+                resolved="failure" if out is not None else "pending")
             return out
-        out = self._dispositions.pop(rid, None)
-        self.obs.tracer.emit(
-            rid, "poll",
-            resolved="failure" if out is not None else "pending")
-        return out
 
     # ---- the scheduling loop ---------------------------------------------
 
@@ -697,19 +717,25 @@ class ClusterScheduler:
             self._g_brownout.set(self.brownout.observe(queue_pressure(
                 len(self._queue) + len(self._gang_queue),
                 self._healthy_lanes())))
-        self._prep_admissions()
-        completed = self._evict_finished()
-        self._admit_queued()
-        completed.update(self._solve_gang())
+        ph = self.obs.phases
+        with ph.phase("cluster.prep"):
+            self._prep_admissions()
+        with ph.phase("cluster.evict"):
+            completed = self._evict_finished()
+        with ph.phase("cluster.admit"):
+            self._admit_queued()
+        with ph.phase("cluster.gang"):
+            completed.update(self._solve_gang())
         if self._pending_completed:
             # level-2 (sliced) completions produced during admission /
             # gang triage — delivered with this round's evictions
             completed.update(self._pending_completed)
             self._pending_completed.clear()
-        self._advance_pools()
-        if self.step_mode == "sync":
-            for pool in self._pools.values():
-                jax.block_until_ready(pool.state.lanes.P)
+        with ph.phase("cluster.chunk"):
+            self._advance_pools()
+            if self.step_mode == "sync":
+                for pool in self._pools.values():
+                    jax.block_until_ready(pool.state.lanes.P)
         self._steps += 1
         self._snapshot_occupancy()
         return completed
@@ -1356,10 +1382,22 @@ class ClusterScheduler:
             chunk_iters=self.chunk_iters)
 
     def _advance_pools(self) -> None:
+        # The launch profiler forces a block_until_ready per timed
+        # launch; in async mode that sync would destroy the deliberate
+        # host/device overlap the double-buffered loop exists for, so
+        # kernel profiling is sync-mode only. Phase timers (pure host
+        # timestamps) and the dispatch advisor stay on in both modes.
+        profiler = (self.obs.profile if self.step_mode == "sync"
+                    else None)
+        advisor = self._advisor
         for bucket, pool in list(self._pools.items()):
             if pool.requests:
                 pool.idle_steps = 0
-                with ops.dispatch_counters() as counters:
+                with ops.dispatch_counters() as counters, \
+                        ops.launch_profiler(profiler), \
+                        (ops.dispatch_advisor(advisor)
+                         if advisor is not None
+                         else contextlib.nullcontext()):
                     pool.state = cluster_stepped(
                         pool.state, self.chunk_iters, self.cfg,
                         mesh=self.mesh, axis=self.axis,

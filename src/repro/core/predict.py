@@ -27,6 +27,16 @@ Serving uses this in three places (``repro.serve``'s overload model):
   truncated iteration budget into the marginal-error label attached to
   level-1 degraded results.
 
+Iterations become *seconds* via a per-iteration rate. Historically that
+rate was an assumed constant (``seconds_per_iter=``) or a completion-fed
+EWMA; ``measured_seconds_per_iter`` replaces the constant with measured
+per-chunk service time from a ``repro.obs.measure.MeasurementStore`` —
+the profiler's chunk cells record wall-clock us per L-lane
+chunk_iters-iteration advance, and dividing by ``L * chunk_iters`` gives
+the per-lane-iteration rate the service model wants. Both schedulers
+consult it (``measurements=``) between the pinned value and the online
+EWMA: pinned beats measured beats learned beats uncalibrated.
+
 Everything here is host-side float arithmetic — nothing jitted, nothing
 per-element; one ``predict`` costs a dict lookup and two ``log`` calls.
 """
@@ -36,7 +46,26 @@ import dataclasses
 import math
 
 __all__ = ["analytic_iters", "predict_iters", "estimate_truncation_error",
-           "IterPredictor"]
+           "IterPredictor", "measured_seconds_per_iter"]
+
+
+def measured_seconds_per_iter(store, *, M: int | None = None,
+                              N: int | None = None,
+                              itemsize: int | None = None) -> float | None:
+    """Seconds per lane-iteration from measured chunk cells.
+
+    ``store`` is a ``repro.obs.measure.MeasurementStore`` (or None).
+    ``M``/``N`` select one pool bucket's padded shape; None aggregates
+    over every chunk cell (the bucketless rate ``_retry_after_hint``-
+    style consumers want). Returns None when the store holds no matching
+    steady-state chunk measurement — the caller falls back to its EWMA,
+    never to a guess.
+    """
+    if store is None:
+        return None
+    us = store.us_per_lane_iter(kernel="chunk", M=M, N=N,
+                                itemsize=itemsize)
+    return us * 1e-6 if us is not None else None
 
 # measured multiplicative bias of the analytic rate bound on the
 # log-domain solver (see module docstring); the EWMA refines per bucket

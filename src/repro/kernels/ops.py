@@ -45,7 +45,15 @@ When a problem's whole padded tile fits the VMEM budget
 convergence in a ``lax.while_loop``, and stores once — per-solve instead of
 per-iteration traffic. ``impl='auto'`` on the solve entry points routes
 between the two tiers by that static budget test (decisions are observable
-via ``dispatch_stats``).
+via ``dispatch_stats``). The budget is only the *fallback*: with a
+``dispatch_advisor()`` installed (``repro.obs.measure.MeasuredDispatch``
+over a persisted measurement store), a resident-eligible 'auto'
+resolution routes by *measured* per-tier cost instead — when both tiers
+of the (kernel, shape, dtype, source) cell hold steady-state wall-clock
+data, the measured-faster tier wins; cells without data defer to the
+static budget. Correctness constraints are never advised away: shapes
+over the VMEM budget and sub-fp32 stepped pools stay streamed
+regardless of measurements.
 
 Cost geometries
 ---------------
@@ -110,6 +118,14 @@ BUDGET (modeled upper bound): per-lane tol early exit happens on device
 and is invisible to the host without extra syncs. tests/test_obs.py
 asserts the accountant against this table cell by cell.
 
+Measured performance: ``launch_profiler()`` below is the wall-clock twin
+of ``dispatch_observer()`` — it times every routed solve/chunk launch
+(to completion; installing it syncs each launch) keyed by the SAME table
+parameters, so ``repro.obs.measure`` divides each cell's modeled bytes
+by its measured seconds into achieved GB/s and a measured roofline
+fraction, and ``dispatch_advisor()`` feeds those measurements back into
+the 'auto' routing above.
+
 bf16 storage on the resident tier upcasts once at load and downcasts once
 at store, so the per-iteration bf16 rounding of the streamed path
 disappears: resident bf16 iterates are the fp32 trajectory rounded once.
@@ -144,6 +160,7 @@ import contextlib
 import contextvars
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -312,6 +329,81 @@ def dispatch_observer(cb):
         _DISPATCH_OBS.reset(token)
 
 
+# Kernel-launch profiling rides the same contextvar-stack idiom one layer
+# deeper than the dispatch observers: where ``dispatch_observer`` sees the
+# routing *decision*, ``launch_profiler`` times the routed *launch* itself
+# (``repro.obs.profile.KernelProfiler`` is the intended subscriber — its
+# cells are keyed by the same parameters the traffic formulas take, so
+# measured seconds divide modeled bytes directly). Timing a launch forces
+# a ``block_until_ready`` sync, so nothing is timed unless a profiler is
+# actually installed — and ``launch_profiler`` refuses disabled/null
+# profilers outright, keeping the ``obs=False`` path sync-free.
+_LAUNCH_PROF: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "uot_launch_profilers", default=())
+
+
+@contextlib.contextmanager
+def launch_profiler(profiler):
+    """Install ``profiler.observe_launch(kernel=, M=, N=, itemsize=, impl=,
+    source=, lanes=, iters=, seconds=)`` for every solve/chunk launch in
+    the dynamic extent (this thread/task). ``impl`` is the resolved tier
+    ('resident'/'streamed'); ``seconds`` is host wall time to completion
+    (the launch is synced — do not install on a path whose async overlap
+    you are measuring). A None or ``enabled=False`` profiler installs
+    nothing. Profilers stack like the dispatch observers.
+    """
+    if profiler is None or not getattr(profiler, "enabled", False):
+        yield profiler
+        return
+    token = _LAUNCH_PROF.set(_LAUNCH_PROF.get() + (profiler,))
+    try:
+        yield profiler
+    finally:
+        _LAUNCH_PROF.reset(token)
+
+
+def _profiled(kernel, fn, *, M, N, itemsize, impl, source="dense",
+              lanes=1, iters=1):
+    """Run ``fn()``; when profilers are installed, time it to completion
+    and feed every installed profiler the measurement cell."""
+    profs = _LAUNCH_PROF.get()
+    if not profs:
+        return fn()
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn())
+    dt = time.perf_counter() - t0
+    for p in profs:
+        p.observe_launch(kernel=kernel, M=M, N=N, itemsize=itemsize,
+                         impl=impl, source=source, lanes=lanes, iters=iters,
+                         seconds=dt)
+    return out
+
+
+# Measurement-driven dispatch: ``impl='auto'`` consults installed advisors
+# (``repro.obs.measure.MeasuredDispatch`` over a persisted measurement
+# store) BEFORE falling back to the static ``resident_fits`` budget.
+# Advice is only taken where the static semantics already allow resident
+# (the VMEM budget and the sub-fp32 stepped exclusion are correctness
+# constraints, not tunables) — so an advisor can flip a resident-eligible
+# shape to streamed when measurements say streaming is faster, never the
+# reverse past the budget.
+_DISPATCH_ADVISORS: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "uot_dispatch_advisors", default=())
+
+
+@contextlib.contextmanager
+def dispatch_advisor(advisor):
+    """Install ``advisor.advise(M=, N=, itemsize=, implicit=, stepped=)
+    -> 'resident' | 'streamed' | None`` for ``impl='auto'`` resolutions in
+    the dynamic extent (this thread/task). The innermost advisor with an
+    opinion (non-None) wins; None defers to the static budget."""
+    token = _DISPATCH_ADVISORS.set(_DISPATCH_ADVISORS.get() + (advisor,))
+    try:
+        yield advisor
+    finally:
+        _DISPATCH_ADVISORS.reset(token)
+
+
 def dispatch_stats() -> dict:
     """{'resident': ..., 'streamed': ...} decisions made by ``impl='auto'``
     in the innermost active ``dispatch_counters()`` scope (the process-wide
@@ -462,6 +554,10 @@ def _resolve_auto(impl, M, N, cfg, storage_dtype, *, stepped_sdt=None,
     chunk-boundary invariance; see ``uot_resident.resident_stepped``).
     ``implicit`` selects the implicit-geometry VMEM budget (no input tile
     — see ``resident_fits``), widening the resident shape range.
+
+    With a ``dispatch_advisor`` installed, a resident-eligible 'auto'
+    resolution asks it first — measured tier costs override the static
+    budget's guess where a measurement cell has data (None defers).
     """
     fits = resident_fits(M, N, cfg, storage_dtype=storage_dtype,
                          implicit=implicit)
@@ -471,17 +567,22 @@ def _resolve_auto(impl, M, N, cfg, storage_dtype, *, stepped_sdt=None,
                 f"({M}, {N}) exceeds the resident VMEM budget; use "
                 f"impl='auto' to fall back to the streamed tier")
         return True
+    s = _storage(cfg, stepped_sdt if stepped_sdt is not None
+                 else storage_dtype).itemsize
     resident = fits and not (stepped_sdt is not None
                              and jnp.dtype(stepped_sdt).itemsize < 4)
+    if resident:
+        for adv in reversed(_DISPATCH_ADVISORS.get()):
+            choice = adv.advise(M=M, N=N, itemsize=s, implicit=implicit,
+                                stepped=stepped_sdt is not None)
+            if choice in ("resident", "streamed"):
+                resident = choice == "resident"
+                break
     kind = "resident" if resident else "streamed"
     _count_dispatch(kind)
-    observers = _DISPATCH_OBS.get()
-    if observers:
-        s = _storage(cfg, stepped_sdt if stepped_sdt is not None
-                     else storage_dtype).itemsize
-        for cb in observers:
-            cb(kind, M=M, N=N, itemsize=s, num_iters=cfg.num_iters,
-               implicit=implicit)
+    for cb in _DISPATCH_OBS.get():
+        cb(kind, M=M, N=N, itemsize=s, num_iters=cfg.num_iters,
+           implicit=implicit)
     return resident
 
 
@@ -671,21 +772,31 @@ def _solve_fused_batched_geometry(geom, a, b, cfg, *, block_m=None,
     interp = _interpret_default(interpret)
     impl = _impl_default(impl, interp)
     M, N = geom.shape
+    s = _storage(cfg, storage_dtype).itemsize
     if impl in ("auto", "resident"):
         if _resolve_auto(impl, M, N, cfg, storage_dtype, implicit=True):
-            P, colsum, _, _ = solve_fused_resident(
-                None, a, b, cfg, interpret=interpret,
-                storage_dtype=storage_dtype, geometry=geom)
+            P, colsum, _, _ = _profiled(
+                "solve", lambda: solve_fused_resident(
+                    None, a, b, cfg, interpret=interpret,
+                    storage_dtype=storage_dtype, geometry=geom),
+                M=M, N=N, itemsize=s, impl="resident", source="implicit",
+                lanes=B, iters=cfg.num_iters)
             return P, colsum
         impl = _impl_default(None, interp)  # over budget: streamed default
     if impl == "jnp":
         A0 = geom.kernel(cfg.reg)
-        return _solve_fused_batched_streamed(
-            A0, a, b, cfg, block_m=block_m, interpret=interpret,
-            storage_dtype=storage_dtype, impl="jnp")
-    return _solve_fused_batched_geometry_streamed(
-        geom, a, b, cfg, block_m=block_m, interpret=interpret,
-        storage_dtype=storage_dtype)
+        return _profiled(
+            "solve", lambda: _solve_fused_batched_streamed(
+                A0, a, b, cfg, block_m=block_m, interpret=interpret,
+                storage_dtype=storage_dtype, impl="jnp"),
+            M=M, N=N, itemsize=s, impl="streamed", source="implicit",
+            lanes=B, iters=cfg.num_iters)
+    return _profiled(
+        "solve", lambda: _solve_fused_batched_geometry_streamed(
+            geom, a, b, cfg, block_m=block_m, interpret=interpret,
+            storage_dtype=storage_dtype),
+        M=M, N=N, itemsize=s, impl="streamed", source="implicit",
+        lanes=B, iters=cfg.num_iters)
 
 
 def solve_fused_batched(A0: jax.Array, a: jax.Array, b: jax.Array,
@@ -731,17 +842,24 @@ def solve_fused_batched(A0: jax.Array, a: jax.Array, b: jax.Array,
             geometry, a, b, cfg, block_m=block_m, interpret=interpret,
             storage_dtype=storage_dtype, impl=impl)
     impl = _impl_default(impl, _interpret_default(interpret))
+    B, M, N = A0.shape
+    s = _storage(cfg, storage_dtype).itemsize
     if impl in ("auto", "resident"):
-        _, M, N = A0.shape
         if _resolve_auto(impl, M, N, cfg, storage_dtype):
-            P, colsum, _, _ = solve_fused_resident(
-                A0, a, b, cfg, interpret=interpret,
-                storage_dtype=storage_dtype)
+            P, colsum, _, _ = _profiled(
+                "solve", lambda: solve_fused_resident(
+                    A0, a, b, cfg, interpret=interpret,
+                    storage_dtype=storage_dtype),
+                M=M, N=N, itemsize=s, impl="resident", lanes=B,
+                iters=cfg.num_iters)
             return P, colsum
         impl = None  # over budget: fall through to the streamed default
-    return _solve_fused_batched_streamed(
-        A0, a, b, cfg, block_m=block_m, interpret=interpret,
-        storage_dtype=storage_dtype, impl=impl)
+    return _profiled(
+        "solve", lambda: _solve_fused_batched_streamed(
+            A0, a, b, cfg, block_m=block_m, interpret=interpret,
+            storage_dtype=storage_dtype, impl=impl),
+        M=M, N=N, itemsize=s, impl="streamed", lanes=B,
+        iters=cfg.num_iters)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_m", "interpret",
@@ -1152,16 +1270,22 @@ def solve_fused_stepped(state: LaneState, n_iters: int, cfg: UOTConfig, *,
     iteration, which would break chunk-boundary invariance.
     """
     impl = _impl_default(impl, _interpret_default(interpret))
+    L, Mp, Np = state.P.shape
+    s = jnp.dtype(state.P.dtype).itemsize
     if impl in ("auto", "resident"):
-        Mp, Np = state.P.shape[1:]
         if _resolve_auto(impl, Mp, Np, cfg, state.P.dtype,
                          stepped_sdt=state.P.dtype):
-            return solve_fused_stepped_resident(state, n_iters, cfg,
-                                                interpret=interpret)
+            return _profiled(
+                "chunk", lambda: solve_fused_stepped_resident(
+                    state, n_iters, cfg, interpret=interpret),
+                M=Mp, N=Np, itemsize=s, impl="resident", lanes=L,
+                iters=n_iters)
         impl = None  # over budget (or sub-fp32 pool): streamed default
-    return _solve_fused_stepped_streamed(state, n_iters, cfg,
-                                         block_m=block_m,
-                                         interpret=interpret, impl=impl)
+    return _profiled(
+        "chunk", lambda: _solve_fused_stepped_streamed(
+            state, n_iters, cfg, block_m=block_m, interpret=interpret,
+            impl=impl),
+        M=Mp, N=Np, itemsize=s, impl="streamed", lanes=L, iters=n_iters)
 
 
 def solve_fused_stepped_resident(state: LaneState, n_iters: int,

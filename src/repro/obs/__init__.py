@@ -29,6 +29,34 @@ scheduler-local metrics stay isolated for ``stats()`` while
 global and resets it between suites (``reset_global()``). Tracers are
 NOT globally merged: rid spaces are per scheduler, so spans live with
 their scheduler (``sched.obs.tracer``).
+
+Measured performance
+--------------------
+The accountant's bytes are *modeled*; two further members carry the
+*measured* half (``repro.obs.profile`` / ``repro.obs.measure``):
+
+* ``phases`` — ``PhaseTimer``: scheduler round phases under
+  ``profile.phase.<name>`` (total) and ``...<name>.self`` (exclusive of
+  nested phases). Names: ``serve.{evict,admit,chunk,poll}`` and
+  ``cluster.{prep,evict,admit,gang,chunk,poll}``, in seconds.
+* ``profile`` — ``KernelProfiler``: every dispatched solve/chunk timed
+  per measurement cell ``kernel|MxN|s<itemsize>|impl|source|L|T`` (the
+  traffic formulas' own parameters), first-call (trace+compile) under
+  ``profile.compile.<cell>`` split from steady-state execute under
+  ``profile.kernel.<cell>``. The hook is installed around launches via
+  ``ops.launch_profiler`` and forces a device sync per timed launch —
+  which is why ``enabled=False`` swaps in null twins that install
+  nothing.
+
+``measure.MeasurementStore`` persists a profiler's cells as
+fingerprint-stamped JSON (schema in its docstring); dividing each
+cell's modeled bytes by its measured seconds yields achieved GB/s and
+a **measured** roofline fraction (``store.achieved()``) next to the
+accountant's modeled one. Stored cells feed back into serving:
+``measure.MeasuredDispatch`` advises ``ops`` ``impl='auto'`` when both
+tiers of a cell have data, and ``core.predict.measured_seconds_per_iter``
+turns predicted iterations into predicted seconds from measured chunk
+cost (both schedulers accept ``measurements=``).
 """
 from __future__ import annotations
 
@@ -43,10 +71,18 @@ from repro.obs.traffic import (NullAccountant, TrafficAccountant,
                                chunk_bytes, cost_source_bytes,
                                gang_collective_bytes, modeled_flops,
                                solve_bytes)
+from repro.obs.profile import (KernelProfiler, NullKernelProfiler,
+                               NullPhaseTimer, PhaseTimer, cell_key,
+                               parse_cell_key)
+from repro.obs.measure import (MeasuredDispatch, MeasurementMismatch,
+                               MeasurementStore, machine_fingerprint)
 
 __all__ = [
     "Observability", "MetricsRegistry", "Counter", "Gauge", "Histogram",
     "SpanTracer", "NullTracer", "TrafficAccountant", "NullAccountant",
+    "PhaseTimer", "NullPhaseTimer", "KernelProfiler", "NullKernelProfiler",
+    "MeasurementStore", "MeasuredDispatch", "MeasurementMismatch",
+    "machine_fingerprint", "cell_key", "parse_cell_key",
     "TERMINAL_STATUSES", "DEFAULT_TIME_BUCKETS", "DEFAULT_COUNT_BUCKETS",
     "geometric_buckets", "cost_source_bytes", "solve_bytes", "chunk_bytes",
     "gang_collective_bytes", "modeled_flops", "get_global", "reset_global",
@@ -77,15 +113,26 @@ class Observability:
             self.tracer = SpanTracer(clock=clock)
             self.traffic = TrafficAccountant(
                 parent=parent.traffic if parent is not None else None)
+            # wall-clock instruments (see "Measured performance" above):
+            # these time the HOST, so they run on perf_counter regardless
+            # of the scheduler's (possibly simulated) clock
+            self.phases = PhaseTimer(self.registry)
+            self.profile = KernelProfiler(
+                self.registry,
+                parent=(parent.profile if parent is not None
+                        and parent.profile.enabled else None))
         else:
             self.tracer = NullTracer(clock=clock)
             self.traffic = NullAccountant()
+            self.phases = NullPhaseTimer()
+            self.profile = NullKernelProfiler()
 
     def dump(self) -> dict:
-        """Registry + traffic snapshot (the ``OBS_<suite>.json`` payload;
-        spans export separately as JSONL via ``tracer.write_jsonl``)."""
+        """Registry + traffic + profile snapshot (the ``OBS_<suite>.json``
+        payload; spans export separately via ``tracer.write_jsonl``)."""
         return {"enabled": self.enabled, "registry": self.registry.dump(),
-                "traffic": self.traffic.dump()}
+                "traffic": self.traffic.dump(),
+                "profile": self.profile.dump()}
 
 
 class _GlobalObservability(Observability):
@@ -98,6 +145,7 @@ class _GlobalObservability(Observability):
         self.registry.reset()
         self.traffic.reset()
         self.tracer.clear()
+        self.profile.reset()
 
 
 _GLOBAL: _GlobalObservability | None = None

@@ -96,6 +96,7 @@ distributed gang — with results bit-identical to this class per request.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable
@@ -107,7 +108,8 @@ from repro import obs as obslib
 from repro.core.problem import UOTConfig
 from repro.core.health import (InvalidProblemError, escalate_log_solve,
                                validate_problem)
-from repro.core.predict import IterPredictor, estimate_truncation_error
+from repro.core.predict import (IterPredictor, estimate_truncation_error,
+                                measured_seconds_per_iter)
 from repro.geometry import PointCloudGeometry
 from repro.geometry.sliced import lift_coupling_np, sliced_uot
 from repro.kernels import ops
@@ -370,6 +372,7 @@ class UOTScheduler:
                  escalate_factor: int = 2, fault_injector=None,
                  predictive: bool = False,
                  seconds_per_iter: float | None = None,
+                 measurements=None,
                  feasibility_margin: float = 1.0,
                  brownout: "BrownoutController | None" = None,
                  predictor: "IterPredictor | None" = None,
@@ -444,6 +447,18 @@ class UOTScheduler:
         self._spi_pinned = seconds_per_iter
         self._spi_ewma: float | None = None
         self._iters_ewma: float | None = None
+        # Measured performance (repro.obs.measure): a MeasurementStore
+        # recorded on THIS machine. Two consumers: the service-time model
+        # converts predicted iterations to seconds via measured chunk
+        # cost (after the pinned value, before the completion EWMA — a
+        # pinned value is the caller asserting units, e.g. a simulated
+        # clock, and must win), and impl='auto' chunk dispatch consults
+        # the store's per-tier cells via ops.dispatch_advisor. NB the
+        # store holds wall-clock us: do not combine with a simulated
+        # clock unless the trace was measured in the same units.
+        self.measurements = measurements
+        self._advisor = (obslib.MeasuredDispatch(measurements)
+                         if measurements is not None else None)
         self._pending_completed: dict[int, np.ndarray] = {}
         self.clock = clock
         self.sleep = sleep
@@ -537,10 +552,19 @@ class UOTScheduler:
 
     # ---- service-time model (predictive=True) -----------------------------
 
-    def _seconds_per_iter(self) -> float | None:
-        """Pinned value, else the online EWMA, else None (uncalibrated)."""
+    def _seconds_per_iter(self, bucket=None) -> float | None:
+        """Pinned value, else the measured chunk rate (per-bucket when
+        ``bucket`` is given, else aggregated), else the online EWMA, else
+        None (uncalibrated)."""
         if self._spi_pinned is not None:
             return self._spi_pinned
+        if self.measurements is not None:
+            M, N = bucket if bucket is not None else (None, None)
+            spi = measured_seconds_per_iter(self.measurements, M=M, N=N)
+            if spi is None and bucket is not None:
+                spi = measured_seconds_per_iter(self.measurements)
+            if spi is not None:
+                return spi
         return self._spi_ewma
 
     def _predict_request_iters(self, req: ScheduledRequest) -> float:
@@ -550,7 +574,7 @@ class UOTScheduler:
 
     def _predicted_service(self, req: ScheduledRequest) -> float | None:
         """Predicted lane seconds for ``req``, None while uncalibrated."""
-        spi = self._seconds_per_iter()
+        spi = self._seconds_per_iter(req.bucket)
         if not self.predictive or spi is None:
             return None
         if req.predicted_iters is None:
@@ -784,15 +808,16 @@ class UOTScheduler:
         Take semantics: a result is handed out exactly once and then
         dropped, so an uncollected backlog cannot grow without bound.
         """
-        out = self._results.pop(rid, None)
-        if out is not None:
-            self.obs.tracer.emit(rid, "poll", resolved="coupling")
+        with self.obs.phases.phase("serve.poll"):
+            out = self._results.pop(rid, None)
+            if out is not None:
+                self.obs.tracer.emit(rid, "poll", resolved="coupling")
+                return out
+            out = self._dispositions.pop(rid, None)
+            self.obs.tracer.emit(
+                rid, "poll",
+                resolved="failure" if out is not None else "pending")
             return out
-        out = self._dispositions.pop(rid, None)
-        self.obs.tracer.emit(
-            rid, "poll",
-            resolved="failure" if out is not None else "pending")
-        return out
 
     # ---- the scheduling loop ---------------------------------------------
 
@@ -812,28 +837,41 @@ class UOTScheduler:
                      or self.lanes_per_pool)
             self._g_brownout.set(self.brownout.observe(
                 queue_pressure(len(self._queue), total)))
-        completed = self._evict_finished()
-        self._admit_queued()
+        ph = self.obs.phases
+        with ph.phase("serve.evict"):
+            completed = self._evict_finished()
+        with ph.phase("serve.admit"):
+            self._admit_queued()
         if self._pending_completed:
             # level-2 (sliced) completions produced during admission —
             # delivered with this round's evictions
             completed.update(self._pending_completed)
             self._pending_completed.clear()
-        for bucket, pool in list(self._pools.items()):
-            if pool.requests:
-                pool.idle_steps = 0
-                with ops.dispatch_counters() as counters:
-                    pool.state = ops.solve_fused_stepped(
-                        pool.state, self.chunk_iters, self.cfg,
-                        interpret=self.interpret, impl=self.impl)
-                self._charge_chunk(pool, counters)
-            else:
-                # a pool pins lanes x Mp x Np of device memory; traffic
-                # whose shape never recurs must not pin it forever
-                pool.idle_steps += 1
-                if (self.pool_idle_ttl is not None
-                        and pool.idle_steps > self.pool_idle_ttl):
-                    del self._pools[bucket]
+        with ph.phase("serve.chunk"):
+            for bucket, pool in list(self._pools.items()):
+                if pool.requests:
+                    pool.idle_steps = 0
+                    # launch_profiler times the chunk to completion (a
+                    # no-op install under obs=False); the advisor makes
+                    # impl='auto' routing measurement-driven when a
+                    # MeasurementStore was passed
+                    with ops.dispatch_counters() as counters, \
+                            ops.launch_profiler(self.obs.profile), \
+                            (ops.dispatch_advisor(self._advisor)
+                             if self._advisor is not None
+                             else contextlib.nullcontext()):
+                        pool.state = ops.solve_fused_stepped(
+                            pool.state, self.chunk_iters, self.cfg,
+                            interpret=self.interpret, impl=self.impl)
+                    self._charge_chunk(pool, counters)
+                else:
+                    # a pool pins lanes x Mp x Np of device memory;
+                    # traffic whose shape never recurs must not pin it
+                    # forever
+                    pool.idle_steps += 1
+                    if (self.pool_idle_ttl is not None
+                            and pool.idle_steps > self.pool_idle_ttl):
+                        del self._pools[bucket]
         self._steps += 1
         self._snapshot_occupancy()
         return completed
