@@ -130,17 +130,19 @@ def verify_traffic(records):
 
 
 def replay(trace, cfg, t_chunk, *, lanes, chunk, m_bucket, mesh,
-           injector=None):
+           injector=None, slos=None):
     """Drive the cluster step loop on the simulated clock. Returns
     (results by trace index, rid by trace index, makespan, scheduler);
     refused submissions land in the rid map too (their typed failure is
-    pollable by that rid)."""
+    pollable by that rid). ``slos`` attaches the operational telemetry
+    plane (windows/burn rates in *simulated* seconds)."""
     now = [0.0]
     cs = ClusterScheduler(cfg, mesh=mesh, num_devices=N_DEV,
                           lanes_per_device=lanes, chunk_iters=chunk,
                           m_bucket=m_bucket, impl="jnp",
                           max_results=len(trace) + 8,
-                          fault_injector=injector, clock=lambda: now[0])
+                          fault_injector=injector, clock=lambda: now[0],
+                          slos=slos)
     i, rid_of, rid_to_idx, out = 0, {}, {}, {}
     while i < len(trace) or cs.pending or cs.in_flight:
         if (not cs.pending and not cs.in_flight
@@ -194,13 +196,23 @@ def run():
     mesh = cluster_mesh(N_DEV) if jax.device_count() >= N_DEV else None
     kw = dict(lanes=lanes, chunk=chunk, m_bucket=m_bucket, mesh=mesh)
 
-    base_out, _, base_T, _ = replay(
-        [trace[i] for i in clean], cfg, t_chunk, **kw)
+    # chaos-signature SLOs (sim-clock windows): a quarantine or a typed
+    # request failure inside the window is an incident — objective 0.5
+    # on a counter delta means "fires on the first event"
+    slos = (obslib.SLO("cluster_quarantine", objective=0.5, window=60.0,
+                       series=obslib.CounterDelta(
+                           "cluster.devices_quarantined"), patience=1),
+            obslib.SLO("cluster_failures", objective=0.5, window=60.0,
+                       series=obslib.CounterDelta("cluster.failed"),
+                       patience=1))
+
+    base_out, _, base_T, base_cs = replay(
+        [trace[i] for i in clean], cfg, t_chunk, slos=slos, **kw)
     assert len(base_out) == len(clean)
 
     blackout = faults.DeviceBlackout(BLACKOUT_DEV, at_step=2)
     chaos_out, rid_of, chaos_T, cs = replay(
-        chaos_trace, cfg, t_chunk, injector=blackout, **kw)
+        chaos_trace, cfg, t_chunk, injector=blackout, slos=slos, **kw)
     st = cs.stats()
 
     # --- zero requests lost: every index resolves exactly once ---------
@@ -236,6 +248,31 @@ def run():
             if t.route == "lane" and t.retries > 0]
     assert all(t.device != BLACKOUT_DEV for t in late)
     tag = "smoke" if smoke else f"n{n}"
+
+    # --- alert correctness: the blackout trips the quarantine SLO with a
+    # flight-recorder incident capture attached; the fault-free baseline
+    # replay (same SLO set, same clock discipline) fires nothing --------
+    assert cs.obs.slo.fired("cluster_quarantine"), cs.obs.slo.states()
+    assert cs.flight.triggered("alert:cluster_quarantine"), \
+        [d.trigger for d in cs.flight.dumps]
+    assert cs.flight.triggered("quarantine"), \
+        [d.trigger for d in cs.flight.dumps]
+    alert_dump = next(d for d in cs.flight.dumps
+                      if d.trigger == "alert:cluster_quarantine")
+    assert alert_dump.rounds, "alert dump captured no scheduler rounds"
+    base_alerts = [a for a in base_cs.obs.slo.alerts if a.state == "firing"]
+    assert not base_alerts, \
+        f"fault-free baseline fired alerts: {base_alerts}"
+    assert not base_cs.flight.triggered("alert:"), \
+        [d.trigger for d in base_cs.flight.dumps]
+    flight_path = pathlib.Path(tempfile.gettempdir()) / "FLIGHT_chaos.jsonl"
+    cs.flight.write_jsonl(flight_path, dump=alert_dump)
+    reloaded_fl = obslib.FlightRecorder.load_jsonl(flight_path)
+    assert len(reloaded_fl.rounds) == len(alert_dump.rounds)
+    emit(f"chaos_alerts_{tag}",
+         sum(a.state == "firing" for a in cs.obs.slo.alerts),
+         f"slo=cluster_quarantine,dumps={len(cs.flight.dumps)},"
+         f"baseline_alerts=0,flight={flight_path.name}")
 
     # --- zero span loss: JSONL round-trip + one terminal span per rid --
     trace_path = pathlib.Path(tempfile.gettempdir()) / "OBS_chaos.jsonl"

@@ -208,12 +208,12 @@ def run():
         return ClusterScheduler(CFG, shed_policy="drop", clock=clock,
                                 **common)
 
-    def build_ladder(clock):
+    def build_ladder(clock, slos=None):
         return ClusterScheduler(
             CFG, shed_policy="degrade", predictive=True,
             seconds_per_iter=SPI, feasibility_margin=MARGIN,
             brownout=BrownoutController(high=1.0, low=0.25, patience=2),
-            clock=clock, **common)
+            clock=clock, slos=slos, **common)
 
     sched_d, comp_d, ref_d, lo_d, span_d = replay(build_drop, trace, warm,
                                                   budget)
@@ -248,17 +248,38 @@ def run():
          f"ladder_vs_drop={ratio:.2f}x,floor=1.5x,lost=0")
 
     # deepening overload: a 12x spike must escalate past truncation into
-    # the sliced tier (at 3x the controller rightly stops at level 1)
+    # the sliced tier (at 3x the controller rightly stops at level 1).
+    # The operational plane watches the same signature: a degrade-fraction
+    # SLO over sim-clock windows must fire during the spike and leave a
+    # flight-recorder incident capture behind.
+    from repro import obs as obslib
+    spike_slos = (obslib.SLO(
+        "cluster_degrade_fraction", objective=0.25, window=60.0,
+        series=obslib.CounterRatio("cluster.shed_degraded",
+                                   "cluster.submitted"),
+        patience=1, min_count=4),)
     spike_trace = make_trace(max(n // 2, 4 * total_lanes), 4.0 * rate,
                              seed=1)
-    sched_s, comp_s, ref_s, lo_s, span_s = replay(build_ladder,
-                                                  spike_trace, warm, budget)
+    sched_s, comp_s, ref_s, lo_s, span_s = replay(
+        lambda clock: build_ladder(clock, slos=spike_slos),
+        spike_trace, warm, budget)
     spike = account(sched_s, comp_s, ref_s, lo_s, span_s)
     st_s = sched_s.stats()
     assert st_s["degrade_levels"][2] > 0, (
         f"12x spike never reached the sliced tier: {st_s['degrade_levels']}")
     assert spike["full_miss"] == 0, (
         f"{spike['full_miss']} full-quality SLO misses under the spike")
+    assert sched_s.obs.slo.fired("cluster_degrade_fraction"), \
+        sched_s.obs.slo.states()
+    assert sched_s.flight.triggered("alert:cluster_degrade_fraction"), \
+        [d.trigger for d in sched_s.flight.dumps]
+    spike_dump = next(d for d in sched_s.flight.dumps
+                      if d.trigger == "alert:cluster_degrade_fraction")
+    assert spike_dump.rounds, "spike alert dump captured no rounds"
     emit(f"overload_spike_goodput_{tag}", spike["goodput"],
          f"deg_ok={spike['deg_ok']},levels={st_s['degrade_levels']},"
          f"brownout_peak>=2,lost=0")
+    emit(f"overload_spike_alerts_{tag}",
+         sum(a.state == "firing" for a in sched_s.obs.slo.alerts),
+         f"slo=cluster_degrade_fraction,"
+         f"dump_rounds={len(spike_dump.rounds)}")

@@ -101,20 +101,22 @@ def sim_flush(trace, cfg, *, max_batch, warmup=True):
 
 
 def sim_scheduler(trace, cfg, *, lanes_per_pool, chunk_iters, warmup=True,
-                  deadline_budget=None, obs=None):
+                  deadline_budget=None, obs=None, slos=None):
     """Continuous-batching serving of the trace; returns
     (latencies, makespan, scheduler) — the scheduler for its telemetry.
     With ``deadline_budget`` set, every request gets the deadline
     ``arrival + budget`` (simulated clock), so the scheduler's own
     deadline-miss telemetry is exercised and reported. ``obs`` passes
     through to the scheduler (``False`` disables tracing/traffic —
-    ``bench_obs`` measures the difference)."""
+    ``bench_obs`` measures the difference); ``slos`` declares SLO
+    objectives for the operational plane (windows run on the simulated
+    clock, so burn rates are in simulated seconds)."""
     import time
 
     def build(clock):
         return UOTScheduler(cfg, lanes_per_pool=lanes_per_pool,
                             chunk_iters=chunk_iters, impl="jnp",
-                            clock=clock, obs=obs)
+                            clock=clock, obs=obs, slos=slos)
 
     if warmup:
         sched = build(lambda: 0.0)

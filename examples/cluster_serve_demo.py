@@ -25,7 +25,21 @@ out of placement — zero requests lost, every coupling still bit-identical
 to the healthy 8-device run (requeued solves replay from the intact host
 payload).
 
+The operational flags exercise PR 10's telemetry plane:
+
+* ``--dashboard``      — periodically render the live text dashboard from
+                         the exporter's JSON snapshot during the 8-device
+                         replay and the blackout drill (windowed
+                         throughput/latency, occupancy, firing alerts);
+* ``--record PATH``    — write the blackout drill's flight-recorder
+                         incident capture (the quarantine-triggered dump)
+                         as replayable JSONL;
+* ``--replay PATH``    — load a recorded capture, render its text
+                         timeline, and exit (no mesh, no solves — the
+                         black box is a post-mortem artifact).
+
 Run:  PYTHONPATH=src python examples/cluster_serve_demo.py [--smoke]
+          [--dashboard] [--record PATH | --replay PATH]
 """
 import os
 
@@ -59,11 +73,14 @@ def make_trace(n, rate_hz, seed, cfg):
     return trace
 
 
-def replay(build, trace, t_chunk, label):
+def replay(build, trace, t_chunk, label, dashboard=False):
+    from repro.obs import render_dashboard
+
     now = [0.0]
     sched = build(lambda: now[0])
     i, lat, out = 0, {}, {}
     rid_to_idx = {}
+    steps = 0
     while i < len(trace) or sched.pending or sched.in_flight:
         if (not sched.pending and not sched.in_flight
                 and trace[i][0] > now[0]):
@@ -75,6 +92,14 @@ def replay(build, trace, t_chunk, label):
             out[rid_to_idx[rid]] = P
             lat[rid_to_idx[rid]] = now[0] - trace[rid_to_idx[rid]][0]
         now[0] += t_chunk
+        steps += 1
+        if dashboard and sched.exporter.enabled and steps % 20 == 0:
+            print(f"\n  -- dashboard @ step {steps} "
+                  f"(t={now[0] * 1e3:.1f} ms sim) --")
+            print(render_dashboard(sched.exporter.snapshot()))
+    if dashboard and sched.exporter.enabled:
+        print(f"\n  -- dashboard (final, t={now[0] * 1e3:.1f} ms sim) --")
+        print(render_dashboard(sched.exporter.snapshot()))
     lats = [lat[k] for k in range(len(trace))]
     print(f"  {label}: throughput {len(trace) / now[0]:7.1f} req/s   "
           f"p50 {np.percentile(lats, 50) * 1e3:6.1f} ms   "
@@ -83,11 +108,27 @@ def replay(build, trace, t_chunk, label):
 
 
 def main():
-    import sys
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="render the live exporter dashboard during replays")
+    ap.add_argument("--record", metavar="PATH",
+                    help="write the blackout drill's flight capture (JSONL)")
+    ap.add_argument("--replay", metavar="PATH",
+                    help="render a recorded flight capture and exit")
+    args = ap.parse_args()
+
+    if args.replay:
+        from repro.obs import FlightRecorder
+        dump = FlightRecorder.load_jsonl(args.replay)
+        print(FlightRecorder.render(dump))
+        return
 
     import jax
     assert jax.device_count() == 8, jax.device_count()
-    smoke = "--smoke" in sys.argv
+    smoke = args.smoke
     if smoke:
         cfg = UOTConfig(reg=0.1, reg_m=1.0, num_iters=24, tol=1e-3)
         lanes, chunk = 2, 4
@@ -119,12 +160,22 @@ def main():
                                    clock=clock),
         trace, t_chunk, "1 device  (UOTScheduler)  ")
     mesh = cluster_mesh(8)
+    from repro.obs import SLO, CounterDelta, default_slos
+    # operational objectives for the cluster replays: the starter serve
+    # set on cluster.* metrics, plus the chaos signature (a quarantine
+    # inside the window is an incident — objective 0.5 on a counter
+    # delta fires on the first event)
+    demo_slos = tuple(default_slos("cluster", window=60.0)) + (
+        SLO("cluster_quarantine", objective=0.5, window=60.0,
+            series=CounterDelta("cluster.devices_quarantined"),
+            patience=1),)
     out8, cs = replay(
         lambda clock: ClusterScheduler(cfg, mesh=mesh,
                                        lanes_per_device=lanes,
                                        chunk_iters=chunk, impl="jnp",
-                                       clock=clock),
-        trace, t_chunk, "8 devices (ClusterScheduler)")
+                                       clock=clock, slos=demo_slos),
+        trace, t_chunk, "8 devices (ClusterScheduler)",
+        dashboard=args.dashboard)
 
     assert all(np.array_equal(out1[k], out8[k]) for k in range(n))
     print("\nevery request bit-identical across 1-device and 8-device runs")
@@ -180,8 +231,10 @@ def main():
         lambda clock: ClusterScheduler(cfg, mesh=mesh,
                                        lanes_per_device=lanes,
                                        chunk_iters=chunk, impl="jnp",
-                                       fault_injector=drill, clock=clock),
-        wave, t_chunk, "8 devices, 1 blacked out   ")
+                                       fault_injector=drill, clock=clock,
+                                       slos=demo_slos),
+        wave, t_chunk, "8 devices, 1 blacked out   ",
+        dashboard=args.dashboard)
     st_bo = cs_bo.stats()
     assert drill.fired and st_bo["device_health"][2] == "quarantined"
     assert sorted(out_bo) == list(range(n)), "requests lost in blackout"
@@ -193,6 +246,22 @@ def main():
           f" {st_bo['requeued']} in-flight requests requeued to healthy"
           f" devices,\n  zero requests lost, all {n} couplings"
           f" bit-identical to the healthy 8-device run")
+
+    # --- the black box caught it: quarantine + alert dumps retained ------
+    assert cs_bo.flight.triggered("quarantine"), \
+        [d.trigger for d in cs_bo.flight.dumps]
+    assert cs_bo.obs.slo.fired("cluster_quarantine")
+    capture = next(d for d in cs_bo.flight.dumps
+                   if d.trigger == "quarantine")
+    print(f"\nflight recorder: {len(cs_bo.flight.dumps)} incident captures "
+          f"({', '.join(d.trigger for d in cs_bo.flight.dumps)})")
+    if args.record:
+        lines = cs_bo.flight.write_jsonl(args.record, dump=capture)
+        print(f"  wrote {lines} JSONL lines to {args.record} "
+              f"(replay with --replay {args.record})")
+    else:
+        from repro.obs import FlightRecorder
+        print(FlightRecorder.render(capture, max_rounds=8))
 
 
 if __name__ == "__main__":

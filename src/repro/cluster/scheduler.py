@@ -249,7 +249,8 @@ class ClusterScheduler:
                  sliced_n_proj: int = 32, sliced_seed: int = 0,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
-                 obs: "obslib.Observability | bool | None" = None):
+                 obs: "obslib.Observability | bool | None" = None,
+                 slos=None, op_interval: int = 4):
         if lanes_per_device < 1:
             raise ValueError("lanes_per_device must be >= 1")
         if chunk_iters < 1:
@@ -357,6 +358,22 @@ class ClusterScheduler:
             obs = obslib.Observability(enabled=False, clock=clock,
                                        chain=False)
         self.obs = obs
+        # Operational plane (mirrors UOTScheduler): rolling windows,
+        # ``slos=`` burn-rate alerting, and the flight recorder, with
+        # the cluster's extra dump_on triggers — device quarantine and
+        # gang_timeout — wired where those breaches latch.
+        if not obs.windows.enabled or slos:
+            obs.attach_operational(slos=slos or (), clock=clock,
+                                   on_alert=(self._on_alert,))
+        self.flight = obs.flight
+        self.exporter = obs.exporter
+        # window tick + SLO evaluation run every ``op_interval`` rounds
+        # (and whenever the scheduler drains): the full-registry
+        # snapshot is the plane's only per-round O(metrics) cost, and
+        # decimating it keeps the whole plane inside bench_obs's <= 5%
+        # bar without losing alerting resolution (burn-rate windows are
+        # many rounds wide by construction)
+        self.op_interval = max(1, int(op_interval))
         reg = obs.registry
         self._c = {k: reg.counter("cluster." + k)
                    for k in _COUNTER_NAMES + (
@@ -539,6 +556,7 @@ class ClusterScheduler:
             self._c["shed_degraded"].inc()
         self._c_degrade[level].inc()
         self.obs.tracer.emit(req.rid, "degrade", level=level)
+        self.obs.flight.note("degrade", rid=req.rid, level=level)
         if level == 1:
             req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
             req.est_error = estimate_truncation_error(
@@ -584,6 +602,13 @@ class ClusterScheduler:
         while len(self._dispositions) > self.max_log:
             self._dispositions.pop(next(iter(self._dispositions)))
             self._c["window_dropped_dispositions"].inc()
+        fl = self.obs.flight
+        if fl.enabled:
+            fl.note("failure", rid=failure.rid, status=failure.status)
+            if failure.status == "failed":
+                # dump_on RequestFailure (see UOTScheduler)
+                fl.dump("request_failure",
+                        reason=f"rid {failure.rid}: {failure.reason}")
 
     def _reject(self, rid: int, bucket, deadline,
                 err: InvalidProblemError, now: float) -> None:
@@ -738,7 +763,35 @@ class ClusterScheduler:
                     jax.block_until_ready(pool.state.lanes.P)
         self._steps += 1
         self._snapshot_occupancy()
+        self._operational_round()
         return completed
+
+    def _on_alert(self, alert) -> None:
+        """SLO alert routing (see UOTScheduler._on_alert): note the
+        transition in the black box, freeze it when an alert fires."""
+        fl = self.obs.flight
+        fl.note("alert", slo=alert.name, state=alert.state,
+                burn=alert.burn_fast)
+        if alert.state == "firing":
+            fl.dump(f"alert:{alert.name}", reason=alert.describe())
+
+    def _operational_round(self) -> None:
+        """Per-round operational-plane upkeep (null twins under
+        obs=False): flight round with the cluster's device-health
+        summary, windows tick, SLO evaluation."""
+        obs = self.obs
+        if obs.flight.enabled:
+            obs.flight.record_round(
+                self._steps, queued=len(self._queue),
+                gang_queued=len(self._gang_queue),
+                in_flight=self.in_flight,
+                occupancy=self._g_occupancy.value,
+                quarantined=self._device_health.count("quarantined"),
+                deadline_misses=self._c["deadline_misses"].value)
+        if (self._steps % self.op_interval == 0
+                or (not self.in_flight and not self.pending)):
+            obs.windows.tick()
+            obs.slo.evaluate()
 
     def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
         """Step until queues and lanes drain (or ``max_steps`` more steps
@@ -806,6 +859,7 @@ class ClusterScheduler:
         req.retries += 1
         self._c["requeued"].inc()
         self.obs.tracer.emit(req.rid, "requeue", retries=req.retries)
+        self.obs.flight.note("requeue", rid=req.rid, retries=req.retries)
         self._queue.append(req)
 
     def _trim_results(self) -> None:
@@ -838,6 +892,14 @@ class ClusterScheduler:
                     and unhealthy[d] == active[d]):
                 self._device_health[d] = "quarantined"
                 self._c["devices_quarantined"].inc()
+                fl = self.obs.flight
+                if fl.enabled:
+                    # dump_on quarantine: the blackout signature is an
+                    # incident — capture the rounds that led up to it
+                    fl.note("quarantine", device=d, active=active[d])
+                    fl.dump("quarantine",
+                            reason=f"device {d}: all {active[d]} active "
+                                   "lanes unhealthy in one round")
                 for bucket in flags:
                     pool = self._pools[bucket]
                     drained = [s for s in pool.requests if s[0] == d]
@@ -1021,6 +1083,7 @@ class ClusterScheduler:
         pool-slice state in every pool (``cluster_poison_device``). The
         next eviction round sees every active lane of the device
         unhealthy and quarantines it."""
+        self.obs.flight.note("fault", device=device, tag="blackout")
         for pool in self._pools.values():
             pool.state = cluster_poison_device(pool.state, device)
 
@@ -1059,6 +1122,7 @@ class ClusterScheduler:
                 shed="dropped", status="rejected", device=-1,
                 route="dropped"))
             self.obs.tracer.emit(req.rid, "shed", policy="drop")
+            self.obs.flight.note("shed", rid=req.rid, policy="drop")
             self.obs.tracer.emit(req.rid, "complete", status="rejected",
                                  reason="deadline passed at admission "
                                         "(shed_policy='drop')")
@@ -1177,6 +1241,8 @@ class ClusterScheduler:
             pool.requests[(device, lane)] = req
             pool.admitted_at[(device, lane)] = now
             self._device_placed[device] += 1
+            self.obs.flight.note("place", rid=req.rid, lane=lane,
+                                 device=device)
             self.obs.tracer.emit(req.rid, "place", lane=lane, device=device,
                                  bucket=list(pool.bucket), route="lane")
             placements.setdefault(pool.bucket, []).append(
@@ -1340,6 +1406,17 @@ class ClusterScheduler:
                 self._gang_degrade = True
                 status = "timed_out"
                 self._c["timed_out"].inc()
+                fl = self.obs.flight
+                if fl.enabled:
+                    # dump_on gang_timeout: the latch permanently
+                    # degrades the gang tier — incident-worthy
+                    fl.note("gang_timeout", rid=req.rid,
+                            elapsed=done - t0)
+                    fl.dump("gang_timeout",
+                            reason=f"rid {req.rid}: gang solve took "
+                                   f"{done - t0:.3f}s > "
+                                   f"{self.gang_timeout:.3f}s; degraded "
+                                   "budget latched")
             completed[req.rid] = self._results[req.rid] = P
             self._trim_results()
             self._c["gang_completed"].inc()

@@ -57,6 +57,53 @@ accountant's modeled one. Stored cells feed back into serving:
 tiers of a cell have data, and ``core.predict.measured_seconds_per_iter``
 turns predicted iterations into predicted seconds from measured chunk
 cost (both schedulers accept ``measurements=``).
+
+Operational telemetry
+---------------------
+Every surface above is cumulative-since-start; the *operational plane*
+(``attach_operational``) adds the windowed / alerting / incident-capture
+layer on top. Four members, each with an ``obs=False`` null twin:
+
+* ``windows`` — ``windows.WindowedAggregator``: ring of cumulative
+  registry snapshots on the scheduler's injected clock, ticked once per
+  round; ``windows.window(N)`` yields per-window counter deltas/rates,
+  gauge last-values, and histogram-delta p50/p90/p99 (total at 0/1
+  observations — ``registry.percentile_from_state`` never emits NaN).
+* ``slo`` — ``slo.SLOMonitor`` over declarative ``slo.SLO(name,
+  objective, window, series)`` objectives, evaluated per round with
+  multi-window (fast/slow) burn-rate rules and BrownoutController-style
+  hysteresis. Transitions are typed ``slo.Alert`` events routed through
+  the registry (``slo.alerts.firing``/``.resolved`` counters,
+  ``slo.<name>.burn``/``.firing`` gauges), the span tracer (an
+  ``alert`` event under control-plane rid ``-1``), and ``on_alert``
+  callbacks.
+* ``flight`` — ``flight.FlightRecorder``: bounded black-box ring of
+  per-round scheduler state (queue depth, in-flight, occupancy, device
+  health) plus lifecycle notes (placements, sheds, faults, requeues).
+  Both schedulers wire ``dump_on`` triggers — a firing alert
+  (``alert:<slo>``), device ``quarantine``, ``gang_timeout``, and a
+  terminal ``request_failure`` — each freezing the ring into a
+  replayable JSONL capture (``write_jsonl``/``load_jsonl``/``render``).
+* ``exporter`` — ``export.Exporter``: Prometheus text exposition
+  (``prometheus()``; validated by ``export.parse_prometheus_text``),
+  whole-bundle JSON ``snapshot()``/``delta()``, and the stdlib scrape
+  endpoint ``serve_http()`` (``/metrics`` + ``/snapshot.json``).
+
+Metric names the plane adds (joining the schedulers' ``serve.*`` /
+``cluster.*`` namespaces):
+
+======================== ==============================================
+``slo.alerts.firing``    counter: alert transitions into firing
+``slo.alerts.resolved``  counter: alert transitions into resolved
+``slo.<name>.burn``      gauge: the SLO's fast-window burn rate
+``slo.<name>.firing``    gauge: 0/1 current alert state
+======================== ==============================================
+
+Schema crib: an ``Alert`` is ``{name, state: firing|resolved, t, value,
+objective, burn_fast, burn_slow, window, fast_window}``; a flight
+capture is a JSONL header ``{"flight": {trigger, reason, t, rounds,
+meta}}`` followed by one round per line ``{t, step, events: [{kind, t,
+...}], queued, in_flight, occupancy, ...}``.
 """
 from __future__ import annotations
 
@@ -65,7 +112,7 @@ from typing import Callable
 
 from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
                                 DEFAULT_COUNT_BUCKETS, DEFAULT_TIME_BUCKETS,
-                                geometric_buckets)
+                                geometric_buckets, percentile_from_state)
 from repro.obs.trace import NullTracer, SpanTracer, TERMINAL_STATUSES
 from repro.obs.traffic import (NullAccountant, TrafficAccountant,
                                chunk_bytes, cost_source_bytes,
@@ -76,6 +123,16 @@ from repro.obs.profile import (KernelProfiler, NullKernelProfiler,
                                parse_cell_key)
 from repro.obs.measure import (MeasuredDispatch, MeasurementMismatch,
                                MeasurementStore, machine_fingerprint)
+from repro.obs.windows import (NullWindowedAggregator, WindowedAggregator,
+                               WindowView)
+from repro.obs.slo import (SLO, Alert, CounterDelta, CounterRate,
+                           CounterRatio, Drift, GaugeSeries,
+                           HistPercentile, NullSLOMonitor, SLOMonitor,
+                           Series, default_slos, roofline_drift)
+from repro.obs.flight import FlightDump, FlightRecorder, NullFlightRecorder
+from repro.obs.export import (Exporter, NullExporter, ObsHTTPServer,
+                              parse_prometheus_text, prometheus_text,
+                              render_dashboard, serve_http, snapshot_delta)
 
 __all__ = [
     "Observability", "MetricsRegistry", "Counter", "Gauge", "Histogram",
@@ -84,9 +141,18 @@ __all__ = [
     "MeasurementStore", "MeasuredDispatch", "MeasurementMismatch",
     "machine_fingerprint", "cell_key", "parse_cell_key",
     "TERMINAL_STATUSES", "DEFAULT_TIME_BUCKETS", "DEFAULT_COUNT_BUCKETS",
-    "geometric_buckets", "cost_source_bytes", "solve_bytes", "chunk_bytes",
-    "gang_collective_bytes", "modeled_flops", "get_global", "reset_global",
-    "global_dump",
+    "geometric_buckets", "percentile_from_state", "cost_source_bytes",
+    "solve_bytes", "chunk_bytes", "gang_collective_bytes", "modeled_flops",
+    "get_global", "reset_global", "global_dump",
+    # operational plane (windows / SLO / flight / exporters)
+    "WindowedAggregator", "NullWindowedAggregator", "WindowView",
+    "SLO", "Alert", "SLOMonitor", "NullSLOMonitor", "Series",
+    "CounterRatio", "CounterDelta", "CounterRate", "HistPercentile",
+    "GaugeSeries", "Drift", "roofline_drift", "default_slos",
+    "FlightRecorder", "NullFlightRecorder", "FlightDump",
+    "Exporter", "NullExporter", "ObsHTTPServer", "serve_http",
+    "prometheus_text", "parse_prometheus_text", "snapshot_delta",
+    "render_dashboard",
 ]
 
 
@@ -107,8 +173,16 @@ class Observability:
             parent = get_global()
         self.enabled = enabled
         self.parent = parent
+        self.clock = clock
         self.registry = MetricsRegistry(
             parent=parent.registry if parent is not None else None)
+        # operational plane: null until attach_operational() builds it
+        # (schedulers attach; the attributes always exist so callers
+        # never need hasattr guards)
+        self.windows = NullWindowedAggregator()
+        self.slo = NullSLOMonitor()
+        self.flight = NullFlightRecorder()
+        self.exporter = NullExporter()
         if enabled:
             self.tracer = SpanTracer(clock=clock)
             self.traffic = TrafficAccountant(
@@ -127,12 +201,45 @@ class Observability:
             self.phases = NullPhaseTimer()
             self.profile = NullKernelProfiler()
 
+    def attach_operational(self, *, slos=(), clock=None,
+                           max_window: float = 900.0,
+                           flight_capacity: int = 256,
+                           keep_dumps: int = 8, on_alert=(),
+                           window_seconds=(60.0,)) -> "Observability":
+        """Build the operational plane (windows + SLO monitor + flight
+        recorder + exporter) onto this bundle — see the module
+        docstring's "Operational telemetry" section. Under
+        ``enabled=False`` the members stay their null twins, so the
+        whole plane costs three no-op attribute calls per round.
+        ``clock`` defaults to the bundle's own (schedulers pass their
+        possibly-simulated clock so windows run in DES seconds)."""
+        clock = clock if clock is not None else self.clock
+        if self.enabled:
+            self.windows = WindowedAggregator(
+                self.registry, clock=clock, max_window=max_window)
+            self.flight = FlightRecorder(
+                capacity=flight_capacity, keep_dumps=keep_dumps,
+                clock=clock)
+            self.slo = SLOMonitor(
+                self.windows, slos, registry=self.registry,
+                tracer=self.tracer, clock=clock, on_alert=on_alert)
+            self.exporter = Exporter(
+                self, windows=self.windows, slo=self.slo,
+                flight=self.flight, window_seconds=window_seconds)
+        return self
+
     def dump(self) -> dict:
-        """Registry + traffic + profile snapshot (the ``OBS_<suite>.json``
-        payload; spans export separately via ``tracer.write_jsonl``)."""
-        return {"enabled": self.enabled, "registry": self.registry.dump(),
-                "traffic": self.traffic.dump(),
-                "profile": self.profile.dump()}
+        """Registry + traffic + profile (+ operational plane, when
+        attached) snapshot — the ``OBS_<suite>.json`` payload; spans
+        export separately via ``tracer.write_jsonl``."""
+        out = {"enabled": self.enabled, "registry": self.registry.dump(),
+               "traffic": self.traffic.dump(),
+               "profile": self.profile.dump()}
+        if self.slo.enabled:
+            out["slo"] = self.slo.dump()
+        if self.windows.enabled:
+            out["windows_samples"] = self.windows.samples
+        return out
 
 
 class _GlobalObservability(Observability):
@@ -146,6 +253,9 @@ class _GlobalObservability(Observability):
         self.traffic.reset()
         self.tracer.clear()
         self.profile.reset()
+        self.windows.reset()
+        self.slo.reset()
+        self.flight.reset()
 
 
 _GLOBAL: _GlobalObservability | None = None

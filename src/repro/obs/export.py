@@ -1,0 +1,342 @@
+"""Exporters: Prometheus text exposition, JSON snapshot/delta dumps,
+and a stdlib HTTP scrape endpoint for the whole observability bundle.
+
+``Exporter`` wraps one ``Observability`` bundle plus its operational
+plane (windows / SLO monitor / flight recorder, attached by
+``Observability.attach_operational``) and renders three surfaces:
+
+* ``prometheus()`` — the text exposition format (version 0.0.4):
+  counters (``_total`` suffix), gauges, and full cumulative histograms
+  (``_bucket{le=...}`` with the ``+Inf`` bucket, ``_sum``, ``_count``),
+  plus per-SLO ``slo_burn_rate``/``slo_firing`` gauges with an
+  ``slo=`` label. Metric names sanitize dots to underscores
+  (``serve.latency_s`` -> ``serve_latency_s``). ``parse_prometheus_text``
+  is the matching validator (the CI scrape smoke's "curl parses").
+* ``snapshot()`` — one JSON-able dict of the whole bundle: registry,
+  traffic, profiler cells, windowed views (one per configured window
+  width), SLO states + alert history, and flight-recorder dump
+  summaries. ``delta(prev, cur)`` subtracts two snapshots' registry
+  sections (counter deltas, histogram count/sum deltas) for cheap
+  periodic shipping.
+* ``serve_http()`` — a daemon-threaded stdlib HTTP server exposing
+  ``/metrics`` (Prometheus) and ``/snapshot.json``; returns a handle
+  with ``.port``/``.url``/``.close()``. Binds port 0 by default so
+  tests and demos never collide.
+
+``render_dashboard`` turns a snapshot into the live text dashboard
+``examples/cluster_serve_demo.py --dashboard`` shows (windowed
+throughput / p99 / occupancy / degrade + active alerts).
+
+``NullExporter`` is the ``obs=False`` twin: empty snapshot, empty
+exposition, no server.
+"""
+from __future__ import annotations
+
+import http.server
+import json
+import re
+import threading
+
+from repro.obs.registry import Counter, Gauge, Histogram
+
+__all__ = ["Exporter", "NullExporter", "prometheus_text",
+           "parse_prometheus_text", "snapshot_delta", "serve_http",
+           "ObsHTTPServer", "render_dashboard"]
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+# one exposition line: name{labels} value  — labels optional
+_SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(\{[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\""
+    r"(?:,[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\")*\})?"
+    r" ([0-9eE+.infa-]+)$")
+
+
+def sanitize_name(name: str) -> str:
+    """A registry metric name as a valid Prometheus metric name."""
+    n = _NAME_RE.sub("_", name)
+    if n and n[0].isdigit():
+        n = "_" + n
+    return n
+
+
+def _fmt(v: float) -> str:
+    if v == float("inf"):
+        return "+Inf"
+    return repr(float(v)) if isinstance(v, float) else str(v)
+
+
+def prometheus_text(registry, *, slo=None) -> str:
+    """Text exposition of a registry (+ SLO burn gauges). Histogram
+    buckets are cumulative with the mandatory ``+Inf`` bucket equal to
+    ``_count``, per the format spec."""
+    lines: list[str] = []
+    for name, m in registry.metrics():
+        n = sanitize_name(name)
+        if isinstance(m, Counter):
+            lines.append(f"# TYPE {n}_total counter")
+            lines.append(f"{n}_total {m.value}")
+        elif isinstance(m, Gauge):
+            lines.append(f"# TYPE {n} gauge")
+            lines.append(f"{n} {_fmt(m.value)}")
+        elif isinstance(m, Histogram):
+            st = m.state()
+            lines.append(f"# TYPE {n} histogram")
+            cum = 0
+            for edge, c in zip(m.buckets, st["counts"]):
+                cum += c
+                lines.append(f'{n}_bucket{{le="{_fmt(edge)}"}} {cum}')
+            lines.append(f'{n}_bucket{{le="+Inf"}} {st["count"]}')
+            lines.append(f"{n}_sum {_fmt(st['sum'])}")
+            lines.append(f"{n}_count {st['count']}")
+    if slo is not None and getattr(slo, "enabled", False):
+        states = slo.states()
+        if states:
+            lines.append("# TYPE slo_burn_rate gauge")
+            for name, st in states.items():
+                lines.append(f'slo_burn_rate{{slo="{sanitize_name(name)}"}}'
+                             f' {_fmt(st["burn_fast"])}')
+            lines.append("# TYPE slo_firing gauge")
+            for name, st in states.items():
+                lines.append(f'slo_firing{{slo="{sanitize_name(name)}"}} '
+                             f'{1 if st["firing"] else 0}')
+    return "\n".join(lines) + "\n" if lines else ""
+
+
+def parse_prometheus_text(text: str) -> dict:
+    """Validate an exposition payload; returns ``{metric_name:
+    [(labels, value), ...]}``. Raises ``ValueError`` on any line that is
+    neither a comment nor a well-formed sample — the CI scrape smoke's
+    definition of "parses as valid Prometheus exposition"."""
+    out: dict[str, list] = {}
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip() or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"line {i + 1}: not a valid exposition "
+                             f"sample: {line!r}")
+        name, labelstr, value = m.groups()
+        labels = {}
+        if labelstr:
+            for pair in labelstr[1:-1].split(","):
+                k, v = pair.split("=", 1)
+                labels[k] = v.strip('"')
+        out.setdefault(name, []).append(
+            (labels, float(value.replace("+Inf", "inf"))))
+    if not out:
+        raise ValueError("no samples in exposition payload")
+    return out
+
+
+def snapshot_delta(prev: dict, cur: dict) -> dict:
+    """Difference of two ``Exporter.snapshot()`` registry sections:
+    counter deltas, histogram count/sum deltas, gauges at their current
+    value. Metrics absent from ``prev`` delta from zero."""
+    pr = prev.get("registry", {})
+    cr = cur.get("registry", {})
+    out = {"counters": {}, "gauges": dict(cr.get("gauges", {})),
+           "histograms": {}}
+    pc = pr.get("counters", {})
+    for name, v in cr.get("counters", {}).items():
+        out["counters"][name] = v - pc.get(name, 0)
+    ph = pr.get("histograms", {})
+    for name, snap in cr.get("histograms", {}).items():
+        base = ph.get(name, {})
+        out["histograms"][name] = {
+            "count": snap["count"] - base.get("count", 0),
+            "sum": snap["sum"] - base.get("sum", 0.0)}
+    return out
+
+
+class Exporter:
+    """The full-bundle export surface (see module docstring)."""
+
+    enabled = True
+
+    def __init__(self, obs, *, windows=None, slo=None, flight=None,
+                 window_seconds=(60.0,)):
+        self.obs = obs
+        self.windows = windows if windows is not None \
+            else getattr(obs, "windows", None)
+        self.slo = slo if slo is not None else getattr(obs, "slo", None)
+        self.flight = flight if flight is not None \
+            else getattr(obs, "flight", None)
+        self.window_seconds = tuple(window_seconds)
+
+    def snapshot(self) -> dict:
+        snap = {"enabled": True, "registry": self.obs.registry.dump(),
+                "traffic": self.obs.traffic.dump(),
+                "profile": self.obs.profile.dump(),
+                "windows": {}, "slo": {}, "flight": {}}
+        w = self.windows
+        if w is not None and w.enabled:
+            for s in self.window_seconds:
+                snap["windows"][f"{s:g}s"] = w.window(s).dump()
+        if self.slo is not None and self.slo.enabled:
+            snap["slo"] = self.slo.dump()
+        fl = self.flight
+        if fl is not None and fl.enabled:
+            snap["flight"] = {
+                "rounds": len(fl.rounds()),
+                "dumps": [{"trigger": d.trigger, "reason": d.reason,
+                           "t": d.t, "rounds": len(d.rounds)}
+                          for d in fl.dumps]}
+        return snap
+
+    delta = staticmethod(snapshot_delta)
+
+    def prometheus(self) -> str:
+        return prometheus_text(self.obs.registry, slo=self.slo)
+
+    def serve_http(self, host: str = "127.0.0.1",
+                   port: int = 0) -> "ObsHTTPServer":
+        return serve_http(self, host=host, port=port)
+
+
+class NullExporter:
+    """``obs=False`` twin: empty surfaces, no endpoint."""
+
+    enabled = False
+
+    def __init__(self, *_, **__):
+        pass
+
+    def snapshot(self) -> dict:
+        return {"enabled": False, "registry": {}, "traffic": {},
+                "profile": {}, "windows": {}, "slo": {}, "flight": {}}
+
+    delta = staticmethod(snapshot_delta)
+
+    def prometheus(self) -> str:
+        return ""
+
+    def serve_http(self, host: str = "127.0.0.1", port: int = 0) -> None:
+        return None
+
+
+class ObsHTTPServer:
+    """Handle for a running scrape endpoint (daemon thread)."""
+
+    def __init__(self, server: http.server.ThreadingHTTPServer,
+                 thread: threading.Thread):
+        self._server = server
+        self._thread = thread
+
+    @property
+    def port(self) -> int:
+        return self._server.server_address[1]
+
+    @property
+    def url(self) -> str:
+        host = self._server.server_address[0]
+        return f"http://{host}:{self.port}"
+
+    def close(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        self._thread.join(timeout=5.0)
+
+
+def serve_http(exporter, *, host: str = "127.0.0.1",
+               port: int = 0) -> ObsHTTPServer:
+    """Start the scrape endpoint: ``GET /metrics`` (text exposition),
+    ``GET /snapshot.json`` (full-bundle JSON). Port 0 picks a free
+    port; read it back from the returned handle."""
+
+    class _Handler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):                                  # noqa: N802
+            if self.path.split("?")[0] in ("/metrics", "/"):
+                body = exporter.prometheus().encode()
+                ctype = "text/plain; version=0.0.4; charset=utf-8"
+            elif self.path.split("?")[0] == "/snapshot.json":
+                body = json.dumps(exporter.snapshot(),
+                                  default=str).encode()
+                ctype = "application/json"
+            else:
+                self.send_response(404)
+                self.end_headers()
+                return
+            self.send_response(200)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):   # quiet: obs must not spam stderr
+            pass
+
+    srv = http.server.ThreadingHTTPServer((host, port), _Handler)
+    srv.daemon_threads = True
+    thread = threading.Thread(target=srv.serve_forever, daemon=True,
+                              name="obs-scrape")
+    thread.start()
+    return ObsHTTPServer(srv, thread)
+
+
+def _find_prefix(windows: dict) -> str | None:
+    for wdump in windows.values():
+        for name in wdump.get("counters", {}):
+            if name.endswith(".completed"):
+                return name[:-len(".completed")]
+    return None
+
+
+def render_dashboard(snapshot: dict, *, width: int = 64) -> str:
+    """The live text dashboard: windowed throughput / p99 latency /
+    occupancy / degrade activity + active alerts, from one
+    ``Exporter.snapshot()`` dict (works on the JSON round-trip too)."""
+    windows = snapshot.get("windows", {})
+    if not windows:
+        return "(operational plane not attached — no windowed data)"
+    wkey = next(iter(windows))
+    w = windows[wkey]
+    prefix = _find_prefix(windows) or "serve"
+    ctr = w.get("counters", {})
+    hist = w.get("histograms", {})
+    gauges = w.get("gauges", {})
+
+    def cd(name):
+        return ctr.get(f"{prefix}.{name}", {"delta": 0, "rate": 0.0})
+
+    lat = hist.get(f"{prefix}.latency_s",
+                   {"count": 0, "p50": 0.0, "p99": 0.0})
+    completed = cd("completed")
+    bar = "-" * width
+    lines = [
+        bar,
+        f" operational telemetry [{prefix}] — window {wkey} "
+        f"(covered {w.get('span_s', 0.0):.1f}s)",
+        bar,
+        f" throughput   {completed['rate']:8.2f} req/s   "
+        f"(completed {completed['delta']}, "
+        f"submitted {cd('submitted')['delta']})",
+        f" latency      p50 {lat['p50']:.4g}s  p99 {lat['p99']:.4g}s  "
+        f"(n={lat['count']})",
+        f" occupancy    {gauges.get(prefix + '.occupancy', 0.0):6.2f}    "
+        f"queued {gauges.get(prefix + '.queued', 0.0):.0f}  "
+        f"in-flight {gauges.get(prefix + '.in_flight', 0.0):.0f}",
+        f" deadline     misses {cd('deadline_misses')['delta']} / "
+        f"{cd('deadlined_completed')['delta']} deadlined",
+        f" degrade      shed {cd('shed_degraded')['delta']}  "
+        f"dropped {cd('shed_dropped')['delta']}  "
+        f"level {gauges.get(prefix + '.degrade.brownout_level', 0.0):.0f}",
+    ]
+    slo = snapshot.get("slo", {})
+    states = slo.get("slos", {}) if slo else {}
+    firing = [n for n, st in states.items() if st.get("firing")]
+    if states:
+        if firing:
+            details = ", ".join(
+                f"{n} (burn {states[n]['burn_fast']:.1f}x)"
+                for n in firing)
+            lines.append(f" ALERTS       {details}")
+        else:
+            lines.append(f" alerts       none firing "
+                         f"({len(states)} SLOs green)")
+    fl = snapshot.get("flight", {})
+    if fl:
+        lines.append(f" flight       {fl.get('rounds', 0)} rounds "
+                     f"retained, {len(fl.get('dumps', []))} dumps")
+    lines.append(bar)
+    return "\n".join(lines)

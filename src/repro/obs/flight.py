@@ -1,0 +1,230 @@
+"""Black-box flight recorder: a bounded ring of per-round scheduler
+state, frozen into replayable incident captures by ``dump_on`` triggers.
+
+Both schedulers (``serve/scheduler.py``, ``cluster/scheduler.py``) feed
+one of these per instance:
+
+* during a round, lifecycle notes accumulate via ``note(kind, ...)`` —
+  placements, shed/degrade decisions, injected faults, unhealthy
+  evictions, requeues, quarantines, gang timeouts, alert transitions;
+* at the end of every round ``record_round(step, **state)`` closes the
+  round: queue depth, in-flight count, occupancy, device-health summary
+  plus that round's notes, appended to a ring of the last ``capacity``
+  rounds. O(capacity) memory forever, like ``occupancy_log``.
+
+A **dump** freezes the ring: ``dump(trigger, reason=...)`` snapshots
+every retained round into an immutable ``FlightDump`` and keeps it in a
+bounded ``dumps`` deque. The schedulers wire the triggers the incident
+response actually needs — a firing SLO alert (``alert:<name>``), device
+quarantine, a gang-timeout breach, and a terminal ``RequestFailure`` —
+so the moment something goes wrong, the black box already holds the N
+rounds that led up to it.
+
+Capture format is JSONL (``write_jsonl``/``load_jsonl`` round-trip): a
+header line ``{"flight": {...}}`` with trigger/reason/meta, then one
+round per line. ``render`` draws the text-timeline treatment
+``trace.render_timeline`` established — one row per round with an
+occupancy bar and event glyphs — for eyeballs; the JSONL is the machine
+surface (``examples/cluster_serve_demo.py --record/--replay``).
+
+``NullFlightRecorder`` is the ``obs=False`` twin: free ``note`` /
+``record_round``, never a dump.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import threading
+import time
+from typing import Callable
+
+__all__ = ["FlightRecorder", "NullFlightRecorder", "FlightDump"]
+
+# glyphs for the rendered timeline (trace.render_timeline's initials
+# idiom applied to round events)
+_GLYPHS = {
+    "place": "P", "shed": "x", "degrade": "D", "fault": "F",
+    "unhealthy": "u", "failure": "X", "requeue": "r", "quarantine": "Q",
+    "gang_timeout": "G", "alert": "A", "escalate": "!",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FlightDump:
+    """One frozen capture: the rounds retained at trigger time."""
+
+    trigger: str
+    reason: str
+    t: float
+    rounds: tuple
+    meta: dict
+
+    def to_header(self) -> dict:
+        return {"flight": {"trigger": self.trigger, "reason": self.reason,
+                           "t": self.t, "rounds": len(self.rounds),
+                           "meta": self.meta}}
+
+
+class FlightRecorder:
+    """Bounded per-round black box with triggered dumps."""
+
+    enabled = True
+
+    def __init__(self, *, capacity: int = 256, keep_dumps: int = 8,
+                 clock: Callable[[], float] = time.monotonic):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.clock = clock
+        self._rounds: collections.deque[dict] = collections.deque(
+            maxlen=capacity)
+        self._events: list[dict] = []
+        self.dumps: collections.deque[FlightDump] = collections.deque(
+            maxlen=keep_dumps)
+        self._lock = threading.Lock()
+
+    # -- capture ----------------------------------------------------------
+    def note(self, kind: str, **fields) -> None:
+        """Buffer one lifecycle event into the currently-open round."""
+        e = {"kind": kind, "t": self.clock()}
+        e.update(fields)
+        with self._lock:
+            self._events.append(e)
+
+    def record_round(self, step: int, **state) -> None:
+        """Close the open round: scheduler state + accumulated notes."""
+        with self._lock:
+            ev, self._events = self._events, []
+            r = {"t": self.clock(), "step": int(step), "events": ev}
+            r.update(state)
+            self._rounds.append(r)
+
+    def rounds(self) -> list[dict]:
+        with self._lock:
+            return list(self._rounds)
+
+    # -- dumps ------------------------------------------------------------
+    def dump(self, trigger: str, *, reason: str = "",
+             context: dict | None = None) -> FlightDump:
+        """Freeze the ring (plus any not-yet-closed notes) into a
+        capture; retained in the bounded ``dumps`` deque."""
+        with self._lock:
+            rounds = [dict(r) for r in self._rounds]
+            if self._events:
+                rounds.append({"t": self.clock(), "step": None,
+                               "events": list(self._events),
+                               "open": True})
+        d = FlightDump(trigger=trigger, reason=reason, t=self.clock(),
+                       rounds=tuple(rounds), meta=dict(context or {}))
+        self.dumps.append(d)
+        return d
+
+    def triggered(self, prefix: str) -> bool:
+        """Whether any retained dump's trigger starts with ``prefix``
+        (the replay-assert surface: ``triggered('alert:')``)."""
+        return any(d.trigger.startswith(prefix) for d in self.dumps)
+
+    # -- persistence ------------------------------------------------------
+    def write_jsonl(self, path, dump: FlightDump | None = None) -> int:
+        """Header line + one round per line; returns lines written.
+        Without ``dump``, the newest retained capture is written (a
+        fresh ``manual`` capture if none exists)."""
+        if dump is None:
+            dump = self.dumps[-1] if self.dumps else self.dump("manual")
+        with open(path, "w") as f:
+            f.write(json.dumps(dump.to_header()) + "\n")
+            for r in dump.rounds:
+                f.write(json.dumps(r) + "\n")
+        return 1 + len(dump.rounds)
+
+    @staticmethod
+    def load_jsonl(path) -> FlightDump:
+        with open(path) as f:
+            lines = [json.loads(ln) for ln in f if ln.strip()]
+        if not lines or "flight" not in lines[0]:
+            raise ValueError(f"{path}: not a flight capture (missing "
+                             "header line)")
+        hdr = lines[0]["flight"]
+        return FlightDump(trigger=hdr["trigger"], reason=hdr["reason"],
+                          t=hdr["t"], rounds=tuple(lines[1:]),
+                          meta=hdr.get("meta", {}))
+
+    # -- human rendering --------------------------------------------------
+    @staticmethod
+    def render(dump: FlightDump, *, bar_width: int = 10,
+               max_rounds: int | None = None) -> str:
+        """Text timeline of a capture: one row per round — step, time,
+        queue depth, in-flight, an occupancy bar, event glyphs. For
+        eyeballs, not parsers — JSONL is the machine surface."""
+        rounds = list(dump.rounds)
+        if max_rounds is not None and len(rounds) > max_rounds:
+            rounds = rounds[-max_rounds:]
+        lines = [f"flight capture — trigger={dump.trigger} "
+                 f"t={dump.t:.6f} ({len(dump.rounds)} rounds)"]
+        if dump.reason:
+            lines.append(f"  reason: {dump.reason}")
+        lines.append(f"{'step':>6} {'t':>12} {'queued':>6} {'fly':>4} "
+                     f"{'occupancy':<{bar_width + 6}} events")
+        for r in rounds:
+            occ = float(r.get("occupancy", 0.0))
+            filled = max(0, min(bar_width,
+                                int(round(occ * bar_width))))
+            bar = "#" * filled + "." * (bar_width - filled)
+            glyphs = []
+            for e in r.get("events", ()):
+                g = _GLYPHS.get(e.get("kind"), "?")
+                rid = e.get("rid")
+                detail = (str(rid) if rid is not None
+                          else str(e.get("device", e.get("slo", ""))))
+                glyphs.append(g + detail)
+            step = r.get("step")
+            lines.append(
+                f"{'open' if step is None else step:>6} "
+                f"{r.get('t', 0.0):>12.6f} {r.get('queued', 0):>6} "
+                f"{r.get('in_flight', 0):>4} "
+                f"|{bar}| {occ:.2f} {' '.join(glyphs)}".rstrip())
+        return "\n".join(lines)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._rounds.clear()
+            self._events.clear()
+        self.dumps.clear()
+
+
+class NullFlightRecorder:
+    """``obs=False`` twin: records nothing, never dumps."""
+
+    enabled = False
+    dumps: tuple = ()
+
+    def __init__(self, *_, **__):
+        pass
+
+    def note(self, kind: str, **fields) -> None:
+        pass
+
+    def record_round(self, step: int, **state) -> None:
+        pass
+
+    def rounds(self) -> list:
+        return []
+
+    def dump(self, trigger: str, *, reason: str = "",
+             context: dict | None = None) -> None:
+        return None
+
+    def triggered(self, prefix: str) -> bool:
+        return False
+
+    def write_jsonl(self, path, dump=None) -> int:
+        with open(path, "w"):
+            pass
+        return 0
+
+    load_jsonl = staticmethod(FlightRecorder.load_jsonl)
+    render = staticmethod(FlightRecorder.render)
+
+    def reset(self) -> None:
+        pass

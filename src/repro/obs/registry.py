@@ -28,11 +28,64 @@ Histogram percentiles are linearly interpolated inside the bucket that
 holds the target rank and clamped to the observed [min, max], so they are
 exact at the recorded extremes and within one bucket width of the true
 order statistic everywhere else (asserted vs numpy in tests).
+``percentile_from_state`` is the same estimator over a bare bucket-count
+vector — the windowed-delta path (``repro.obs.windows`` subtracts two
+cumulative ``Histogram.state()`` snapshots) computes percentiles through
+it, and it is *total*: 0 observations return 0.0 and 1 observation
+returns a value clamped inside its bucket, never NaN/None, so windowed
+deltas can feed the exporters unguarded.
 """
 from __future__ import annotations
 
 import bisect
 import threading
+
+
+def percentile_from_state(buckets, counts, q: float,
+                          lo: float | None = None,
+                          hi: float | None = None) -> float:
+    """Interpolated q-th percentile (q in [0, 100]) from bucket counts
+    alone — ``counts`` has one overflow slot beyond ``buckets``' upper
+    edges, exactly the ``Histogram.state()['counts']`` layout (or the
+    element-wise difference of two such snapshots).
+
+    Total by construction (the 0-/1-observation hardening):
+
+    * **0 observations** -> ``0.0``. A windowed delta over a quiet
+      period is an empty population; the documented sentinel is 0.0,
+      matching ``Histogram.percentile`` on a fresh histogram.
+    * **1 observation** -> the estimate interpolates inside the single
+      occupied bucket and is clamped to that bucket's edges (to
+      ``lo``/``hi`` when the caller knows the observed extremes), so it
+      is finite and within one bucket width of the true value.
+
+    ``lo``/``hi`` optionally clamp to observed extremes: the cumulative
+    ``Histogram.percentile`` passes its exact min/max; windowed deltas
+    cannot (min/max are not subtractable) and rely on bucket edges.
+    """
+    total = sum(counts)
+    if total <= 0:
+        return 0.0
+    target = q / 100.0 * total
+    cum = 0
+    for i, c in enumerate(counts):
+        if not c:
+            continue
+        if cum + c >= target:
+            lo_edge = (buckets[i - 1] if i > 0
+                       else (lo if lo is not None else min(0.0, buckets[0])))
+            hi_edge = (buckets[i] if i < len(buckets)
+                       else (hi if hi is not None else buckets[-1]))
+            frac = (target - cum) / c
+            est = lo_edge + (hi_edge - lo_edge) * max(0.0, min(1.0, frac))
+            if lo is not None:
+                est = max(lo, est)
+            if hi is not None:
+                est = min(hi, est)
+            return est
+        cum += c
+    # float rounding pushed the target past the last occupied bucket
+    return hi if hi is not None else buckets[-1]
 
 
 def geometric_buckets(lo: float, hi: float, factor: float = 2.0) -> tuple:
@@ -158,22 +211,35 @@ class Histogram:
 
     def percentile(self, q: float) -> float:
         """Estimated q-th percentile (q in [0, 100]): linear interpolation
-        inside the target rank's bucket, clamped to the observed range."""
+        inside the target rank's bucket, clamped to the observed range.
+        Total at every population size — 0 observations return 0.0, 1
+        observation returns that observation (``percentile_from_state``'s
+        clamp against the exact min/max collapses to it)."""
         if not self._count:
             return 0.0
-        target = q / 100.0 * self._count
-        cum = 0
-        for i, c in enumerate(self._counts):
-            if not c:
-                continue
-            if cum + c >= target:
-                lo = self.buckets[i - 1] if i > 0 else self._min
-                hi = self.buckets[i] if i < len(self.buckets) else self._max
-                frac = (target - cum) / c
-                est = lo + (hi - lo) * max(0.0, min(1.0, frac))
-                return max(self._min, min(self._max, est))
-            cum += c
-        return self._max
+        return percentile_from_state(self.buckets, self._counts, q,
+                                     lo=self._min, hi=self._max)
+
+    def state(self) -> dict:
+        """Mergeable/subtractable cumulative state: ``{'counts', 'count',
+        'sum', 'min', 'max'}`` with ``counts`` a tuple carrying the
+        overflow slot. Two snapshots subtract element-wise into a
+        windowed population (``repro.obs.windows``); min/max are reported
+        for completeness but are NOT subtractable — windowed percentiles
+        clamp to bucket edges instead (``percentile_from_state``)."""
+        with self._lock:
+            return {"counts": tuple(self._counts), "count": self._count,
+                    "sum": self._sum,
+                    "min": self._min if self._count else None,
+                    "max": self._max if self._count else None}
+
+    def raw(self) -> tuple:
+        """``(counts, count, sum)`` under one lock acquire — the
+        allocation-light form of ``state()`` the per-round window tick
+        uses (``repro.obs.windows._snap`` runs inside the scheduler
+        step, so this path is on the obs-overhead budget)."""
+        with self._lock:
+            return tuple(self._counts), self._count, self._sum
 
     def snapshot(self) -> dict:
         return {
@@ -197,6 +263,7 @@ class MetricsRegistry:
         self.parent = parent
         self._lock = threading.Lock()
         self._metrics: dict[str, object] = {}
+        self._sorted: list[tuple[str, object]] | None = None
 
     def _get_or_create(self, name: str, kind, **kwargs):
         with self._lock:
@@ -214,6 +281,7 @@ class MetricsRegistry:
             # lost the creation race: keep the first one (its parent link
             # is identical — parent metrics are get-or-create too)
             m = self._metrics.setdefault(name, m)
+            self._sorted = None
         return m
 
     def counter(self, name: str) -> Counter:
@@ -232,6 +300,17 @@ class MetricsRegistry:
 
     def names(self) -> list[str]:
         return sorted(self._metrics)
+
+    def metrics(self) -> list[tuple[str, object]]:
+        """Stable (name, metric) snapshot of the namespace — the
+        iteration surface ``repro.obs.windows`` ticks over and the
+        Prometheus exporter renders from. The sorted list is cached and
+        invalidated on registration (creation is rare after warmup; the
+        per-round window tick calls this every time)."""
+        with self._lock:
+            if self._sorted is None:
+                self._sorted = sorted(self._metrics.items())
+            return self._sorted
 
     def dump(self) -> dict:
         """JSON-able snapshot: {'counters': {...}, 'gauges': {...},
@@ -257,3 +336,4 @@ class MetricsRegistry:
         built)."""
         with self._lock:
             self._metrics.clear()
+            self._sorted = None

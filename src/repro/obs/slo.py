@@ -1,0 +1,419 @@
+"""Declarative SLO objectives and multi-window burn-rate alerting.
+
+An ``SLO(name, objective, window, series)`` binds a bound (``objective``,
+the value the series must stay under) to a windowed series read from a
+``WindowedAggregator`` (``repro.obs.windows``). ``SLOMonitor.evaluate()``
+— called once per scheduling round by both schedulers — reads each SLO's
+series over a **fast/slow window pair** and converts the values to burn
+rates (``value / objective``; for ratio SLOs this is the classic
+error-budget burn multiple):
+
+* the SLO *fires* only when the burn rate is at or above ``burn`` in
+  BOTH windows — the slow window proves the breach is sustained, the
+  fast window proves it is still happening (the standard multi-window
+  burn-rate rule, so a long-resolved incident can't keep an alert up);
+* it *resolves* when the fast burn falls below ``clear_ratio * burn``;
+* both transitions require ``patience`` consecutive evaluations — the
+  same two-watermark + patience hysteresis as the overload ladder's
+  ``BrownoutController`` (``repro.serve.overload``), so one noisy round
+  neither raises nor clears an alert.
+
+Series over a window (``Series`` implementations below):
+
+=================  =====================================================
+``CounterRatio``   bad/total counter-delta fraction (deadline-miss
+                   rate, degrade fraction). ``value`` is None when the
+                   denominator's windowed delta is 0 — no data, no burn.
+``CounterDelta``   raw windowed counter delta (device quarantines, gang
+                   timeouts: objective 0.5 fires on the first event).
+``CounterRate``    windowed events/second.
+``HistPercentile`` windowed interpolated percentile (p99 latency).
+``GaugeSeries``    last-set gauge value (brownout level, queue depth).
+``Drift``          any zero-arg callable — e.g. the measured-vs-modeled
+                   roofline drift from ``repro.obs.measure`` via
+                   ``roofline_drift(store)``.
+=================  =====================================================
+
+``Alert`` is the typed transition event. Each one is appended to the
+monitor's bounded ``alerts`` history, counted in the registry
+(``slo.alerts.firing`` / ``slo.alerts.resolved``), mirrored into gauges
+(``slo.<name>.burn``, ``slo.<name>.firing``), emitted through the span
+tracer as an ``alert`` event under the control-plane rid ``-1`` (see
+``repro.obs.trace`` — excluded from the zero-span-loss audit), and fed
+to ``on_alert`` callbacks — the schedulers hook the flight recorder's
+``dump`` there, so a firing alert freezes the black box.
+
+``NullSLOMonitor`` is the ``obs=False`` twin: no SLOs, ``evaluate`` is
+free, never an alert.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+__all__ = ["SLO", "Alert", "SLOMonitor", "NullSLOMonitor",
+           "Series", "CounterRatio", "CounterDelta", "CounterRate",
+           "HistPercentile", "GaugeSeries", "Drift", "roofline_drift",
+           "default_slos"]
+
+
+class Series:
+    """A windowed scalar. ``value(view)`` returns the reading or None
+    (no data — treated as zero burn); ``count(view)`` is the population
+    the reading is based on, gating ``SLO.min_count``."""
+
+    def value(self, view) -> float | None:
+        raise NotImplementedError
+
+    def count(self, view) -> float:
+        return float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterRatio(Series):
+    """bad/total windowed counter-delta fraction."""
+
+    bad: str
+    total: str
+
+    def value(self, view) -> float | None:
+        tot = view.counter_delta(self.total)
+        if tot <= 0:
+            return None
+        return view.counter_delta(self.bad) / tot
+
+    def count(self, view) -> float:
+        return float(view.counter_delta(self.total))
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterDelta(Series):
+    name: str
+
+    def value(self, view) -> float | None:
+        return float(view.counter_delta(self.name))
+
+    def count(self, view) -> float:
+        return float(view.counter_delta(self.name))
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterRate(Series):
+    name: str
+
+    def value(self, view) -> float | None:
+        return view.rate(self.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class HistPercentile(Series):
+    name: str
+    q: float = 99.0
+
+    def value(self, view) -> float | None:
+        if view.hist_count(self.name) <= 0:
+            return None
+        return view.percentile(self.name, self.q)
+
+    def count(self, view) -> float:
+        return float(view.hist_count(self.name))
+
+
+@dataclasses.dataclass(frozen=True)
+class GaugeSeries(Series):
+    name: str
+
+    def value(self, view) -> float | None:
+        return view.gauge(self.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Drift(Series):
+    """Window-independent external reading (both windows see the same
+    value, so the multi-window rule degenerates to a plain threshold
+    with hysteresis — appropriate for slowly-refreshed sources)."""
+
+    fn: Callable[[], float | None]
+
+    def value(self, view) -> float | None:
+        return self.fn()
+
+
+def roofline_drift(store, *, q: float = 0.5) -> Drift:
+    """Measured-vs-modeled roofline drift from a
+    ``measure.MeasurementStore``: the median (by default) over cells of
+    ``|1 - measured_roofline_fraction|`` — 0.0 when measured bandwidth
+    matches the modeled datasheet roofline, growing toward 1.0 as the
+    machine drifts from the model. Returns None (no burn) until the
+    store has cells with achieved bandwidth."""
+
+    def _drift() -> float | None:
+        cells = store.achieved()
+        fracs = sorted(
+            abs(1.0 - c["measured_roofline_fraction"]) for c in
+            cells.values() if c.get("measured_roofline_fraction")
+            is not None)
+        if not fracs:
+            return None
+        i = min(len(fracs) - 1, int(q * len(fracs)))
+        return fracs[i]
+
+    return Drift(_drift)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """One objective: ``series`` must stay under ``objective`` over
+    ``window`` seconds. ``fast_fraction`` sizes the confirmation window
+    (default 1/12, the classic 5m-of-1h pairing); ``burn`` is the
+    burn-rate multiple that fires (1.0 = exactly at the objective)."""
+
+    name: str
+    objective: float
+    window: float
+    series: Series
+    fast_fraction: float = 1.0 / 12.0
+    burn: float = 1.0
+    clear_ratio: float = 0.9
+    patience: int = 1
+    min_count: float = 0.0
+
+    def __post_init__(self):
+        if self.objective <= 0:
+            raise ValueError(f"SLO {self.name!r}: objective must be > 0 "
+                             "(burn rate divides by it)")
+        if self.window <= 0:
+            raise ValueError(f"SLO {self.name!r}: window must be > 0")
+        if not 0 < self.fast_fraction <= 1:
+            raise ValueError(f"SLO {self.name!r}: fast_fraction in (0, 1]")
+
+    @property
+    def fast_window(self) -> float:
+        return self.window * self.fast_fraction
+
+
+@dataclasses.dataclass(frozen=True)
+class Alert:
+    """A typed SLO state transition (the routed event, JSON-able via
+    ``dataclasses.asdict``)."""
+
+    name: str
+    state: str          # 'firing' | 'resolved'
+    t: float
+    value: float | None
+    objective: float
+    burn_fast: float
+    burn_slow: float
+    window: float
+    fast_window: float
+
+    def describe(self) -> str:
+        v = "n/a" if self.value is None else f"{self.value:.4g}"
+        return (f"slo {self.name} {self.state}: value {v} vs objective "
+                f"{self.objective:g} (burn {self.burn_fast:.2f}x fast / "
+                f"{self.burn_slow:.2f}x slow over {self.fast_window:g}s/"
+                f"{self.window:g}s)")
+
+
+class _SLOState:
+    __slots__ = ("firing", "above", "below", "value", "burn_fast",
+                 "burn_slow")
+
+    def __init__(self):
+        self.firing = False
+        self.above = 0
+        self.below = 0
+        self.value: float | None = None
+        self.burn_fast = 0.0
+        self.burn_slow = 0.0
+
+
+class SLOMonitor:
+    """Evaluates a set of SLOs against a ``WindowedAggregator`` and
+    routes ``Alert`` transitions (registry + tracer + callbacks)."""
+
+    enabled = True
+
+    def __init__(self, windows, slos=(), *, registry=None, tracer=None,
+                 clock: Callable[[], float] = time.monotonic,
+                 on_alert=(), history: int = 256):
+        self.windows = windows
+        self.registry = registry
+        self.tracer = tracer
+        self.clock = clock
+        self.on_alert = list(on_alert)
+        self.alerts: collections.deque[Alert] = collections.deque(
+            maxlen=history)
+        self.slos: list[SLO] = []
+        self._states: dict[str, _SLOState] = {}
+        for slo in slos:
+            self.add(slo)
+
+    def add(self, slo: SLO) -> None:
+        if slo.name in self._states:
+            raise ValueError(f"duplicate SLO name {slo.name!r}")
+        self.slos.append(slo)
+        self._states[slo.name] = _SLOState()
+
+    def evaluate(self) -> list[Alert]:
+        """One evaluation round; returns the transitions it produced."""
+        out: list[Alert] = []
+        for slo in self.slos:
+            st = self._states[slo.name]
+            # fresh=False: evaluate() runs right after the round's
+            # tick(), so the newest ticked sample is "now" — skipping
+            # the per-query registry snapshot keeps the whole plane
+            # inside bench_obs's <= 5% overhead bar
+            slow = self.windows.window(slo.window, fresh=False)
+            fast = self.windows.window(slo.fast_window, fresh=False)
+            v_slow = slo.series.value(slow)
+            v_fast = slo.series.value(fast)
+            burn_slow = (v_slow / slo.objective) if v_slow is not None \
+                else 0.0
+            burn_fast = (v_fast / slo.objective) if v_fast is not None \
+                else 0.0
+            st.value = v_slow
+            st.burn_fast = burn_fast
+            st.burn_slow = burn_slow
+            hot = (burn_fast >= slo.burn and burn_slow >= slo.burn
+                   and slo.series.count(slow) >= slo.min_count)
+            cool = burn_fast < slo.burn * slo.clear_ratio
+            # BrownoutController-style hysteresis: consecutive rounds on
+            # one side of the watermark pair move the state, anything
+            # else resets both counters
+            if hot:
+                st.above += 1
+                st.below = 0
+            elif cool:
+                st.below += 1
+                st.above = 0
+            else:
+                st.above = 0
+                st.below = 0
+            if not st.firing and st.above >= slo.patience:
+                st.firing = True
+                st.above = 0
+                out.append(self._emit(slo, st, "firing"))
+            elif st.firing and st.below >= slo.patience:
+                st.firing = False
+                st.below = 0
+                out.append(self._emit(slo, st, "resolved"))
+            if self.registry is not None:
+                self.registry.gauge(f"slo.{slo.name}.burn").set(burn_fast)
+                self.registry.gauge(f"slo.{slo.name}.firing").set(
+                    float(st.firing))
+        return out
+
+    def _emit(self, slo: SLO, st: _SLOState, state: str) -> Alert:
+        alert = Alert(
+            name=slo.name, state=state, t=self.clock(), value=st.value,
+            objective=slo.objective, burn_fast=st.burn_fast,
+            burn_slow=st.burn_slow, window=slo.window,
+            fast_window=slo.fast_window)
+        self.alerts.append(alert)
+        if self.registry is not None:
+            self.registry.counter(f"slo.alerts.{state}").inc()
+        if self.tracer is not None:
+            # control-plane rid -1: excluded from the span-loss audit
+            self.tracer.emit(-1, "alert", slo=slo.name, state=state,
+                             burn_fast=st.burn_fast,
+                             burn_slow=st.burn_slow)
+        for cb in self.on_alert:
+            cb(alert)
+        return alert
+
+    # -- readback ---------------------------------------------------------
+    def firing(self) -> list[str]:
+        """Names of the SLOs currently in the firing state."""
+        return [s.name for s in self.slos if self._states[s.name].firing]
+
+    def fired(self, name: str) -> bool:
+        """Whether ``name`` ever produced a 'firing' transition (survives
+        resolution — the replay-assert surface)."""
+        return any(a.name == name and a.state == "firing"
+                   for a in self.alerts)
+
+    def states(self) -> dict:
+        out = {}
+        for slo in self.slos:
+            st = self._states[slo.name]
+            out[slo.name] = {
+                "firing": st.firing, "value": st.value,
+                "burn_fast": st.burn_fast, "burn_slow": st.burn_slow,
+                "objective": slo.objective, "window": slo.window,
+                "fast_window": slo.fast_window, "burn": slo.burn,
+            }
+        return out
+
+    def dump(self) -> dict:
+        """JSON-able SLO section of the exporter payload."""
+        return {"enabled": True, "slos": self.states(),
+                "alerts": [dataclasses.asdict(a) for a in self.alerts]}
+
+    def reset(self) -> None:
+        self.alerts.clear()
+        for name in self._states:
+            self._states[name] = _SLOState()
+
+
+class NullSLOMonitor:
+    """``obs=False`` twin: no objectives, free ``evaluate``."""
+
+    enabled = False
+    slos: tuple = ()
+    alerts: tuple = ()
+
+    def __init__(self, *_, **__):
+        pass
+
+    def add(self, slo) -> None:
+        pass
+
+    def evaluate(self) -> list:
+        return []
+
+    def firing(self) -> list:
+        return []
+
+    def fired(self, name: str) -> bool:
+        return False
+
+    def states(self) -> dict:
+        return {}
+
+    def dump(self) -> dict:
+        return {"enabled": False, "slos": {}, "alerts": []}
+
+    def reset(self) -> None:
+        pass
+
+
+def default_slos(prefix: str = "serve", *, window: float = 60.0,
+                 deadline_miss: float = 0.05,
+                 degrade_fraction: float = 0.25,
+                 p99_latency: float | None = None) -> list[SLO]:
+    """A reasonable starter set over a scheduler's ``<prefix>.*``
+    metrics: deadline-miss rate and degrade fraction (both ratio SLOs
+    with a small ``min_count`` so a single early miss doesn't page),
+    plus an optional p99 latency bound in seconds."""
+    slos = [
+        SLO(name=f"{prefix}_deadline_miss", objective=deadline_miss,
+            window=window,
+            series=CounterRatio(f"{prefix}.deadline_misses",
+                                f"{prefix}.deadlined_completed"),
+            min_count=8, patience=2),
+        SLO(name=f"{prefix}_degrade_fraction", objective=degrade_fraction,
+            window=window,
+            series=CounterRatio(f"{prefix}.shed_degraded",
+                                f"{prefix}.submitted"),
+            min_count=8, patience=2),
+    ]
+    if p99_latency is not None:
+        slos.append(SLO(
+            name=f"{prefix}_p99_latency", objective=p99_latency,
+            window=window,
+            series=HistPercentile(f"{prefix}.latency_s", 99.0),
+            min_count=8, patience=2))
+    return slos

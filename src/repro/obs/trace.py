@@ -37,6 +37,12 @@ The zero-span-loss invariant (asserted by ``bench_serve`` /
 submitted rid carries exactly one ``complete`` event. ``terminal_status``
 folds a later ``lost`` marker in, matching what ``poll`` would return.
 
+Control-plane events use **negative rids**: the SLO monitor
+(``repro.obs.slo``) emits ``alert`` transitions under rid ``-1``. They
+carry no request lifecycle, so ``rids()`` and ``check_complete`` skip
+negative rids — an alert never shows up as a lost span. ``span(-1)``
+still returns them for inspection.
+
 Export is JSONL (one event per line, ``write_jsonl``/``load_jsonl``
 round-trip exactly) and ``render_timeline`` draws a text timeline for
 humans. ``NullTracer`` is the disabled twin: same surface, ``emit`` is a
@@ -72,10 +78,13 @@ class SpanTracer:
     # ---- span queries -----------------------------------------------------
 
     def rids(self) -> list[int]:
-        """Every rid that emitted at least one event, in first-seen order."""
+        """Every *request* rid that emitted at least one event, in
+        first-seen order. Negative rids are control-plane events (SLO
+        alerts) and are excluded — use ``span(-1)`` to read them."""
         seen: dict[int, None] = {}
         for e in self.events:
-            seen.setdefault(e["rid"], None)
+            if e["rid"] >= 0:
+                seen.setdefault(e["rid"], None)
         return list(seen)
 
     def span(self, rid: int) -> list[dict]:

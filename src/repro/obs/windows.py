@@ -1,0 +1,267 @@
+"""Rolling time windows over the metrics registry.
+
+Every registry surface is cumulative-since-start; operations questions
+are windowed ("what is p99 latency over the last minute", "is the
+degrade fraction rising *now*"). ``WindowedAggregator`` closes that gap
+without touching any emitter: it periodically snapshots the cumulative
+state of every metric in a registry into a bounded ring, and a
+``window(seconds)`` query subtracts the snapshot at the window's start
+from a fresh one at its end —
+
+* **counters** — windowed delta and rate (delta / actual span),
+* **gauges** — last-set value (windows don't change gauge semantics),
+* **histograms** — the element-wise difference of two cumulative
+  ``Histogram.state()`` bucket vectors is exactly the window's
+  population, so windowed p50/p90/p99 come from the same interpolation
+  the cumulative percentiles use (``registry.percentile_from_state``,
+  clamped to bucket edges since min/max are not subtractable; total at
+  0/1 observations by construction — never NaN).
+
+Clock discipline matches the schedulers: ``clock=`` is injected, so a
+DES bench ticking a simulated clock gets windows in simulated seconds
+and fake-clock tests are bit-deterministic. ``tick()`` is called once
+per scheduling round (cost: one dict copy per metric — the obs-overhead
+gate in ``bench_obs`` covers it); queries take a *fresh* snapshot for
+the window's end, so they are exact as of the call, not as of the last
+tick. The ring is pruned to ``max_window`` seconds (plus one sample at
+or before the horizon, so a full-width window always has a baseline)
+and hard-capped at ``max_samples``.
+
+``NullWindowedAggregator`` is the ``obs=False`` twin: same surface,
+``tick`` is a no-op and every window is empty.
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+import time
+from typing import Callable
+
+from repro.obs.registry import (Counter, Gauge, Histogram,
+                                percentile_from_state)
+
+__all__ = ["WindowedAggregator", "NullWindowedAggregator", "WindowView"]
+
+
+class _Sample:
+    __slots__ = ("t", "counters", "gauges", "hists")
+
+    def __init__(self, t: float, counters: dict, gauges: dict, hists: dict):
+        self.t = t
+        self.counters = counters
+        self.gauges = gauges
+        # name -> (counts tuple incl. overflow, count, sum)
+        self.hists = hists
+
+
+_EMPTY = _Sample(0.0, {}, {}, {})
+
+
+class WindowView:
+    """One window query's result: the delta between a baseline sample
+    and a fresh end-of-window sample. ``span`` is the *actual* covered
+    duration — shorter than ``requested`` while the ring is younger
+    than the window (rates divide by the actual span, so a cold start
+    never inflates throughput)."""
+
+    def __init__(self, base: _Sample, cur: _Sample, *, buckets: dict,
+                 requested: float):
+        self._base = base
+        self._cur = cur
+        self._buckets = buckets
+        self.requested = float(requested)
+        self.start = base.t
+        self.end = cur.t
+        self.span = max(0.0, cur.t - base.t)
+
+    # -- counters ---------------------------------------------------------
+    def counter_delta(self, name: str) -> int:
+        return (self._cur.counters.get(name, 0)
+                - self._base.counters.get(name, 0))
+
+    def rate(self, name: str) -> float:
+        """Windowed events/second; 0.0 on a zero-width window."""
+        return self.counter_delta(name) / self.span if self.span > 0 else 0.0
+
+    # -- gauges -----------------------------------------------------------
+    def gauge(self, name: str, default: float = 0.0) -> float:
+        return self._cur.gauges.get(name, default)
+
+    # -- histograms -------------------------------------------------------
+    def _hist_delta(self, name: str):
+        cur = self._cur.hists.get(name)
+        if cur is None:
+            return None, 0, 0.0
+        base = self._base.hists.get(name)
+        if base is None:
+            return cur[0], cur[1], cur[2]
+        dcounts = tuple(a - b for a, b in zip(cur[0], base[0]))
+        return dcounts, cur[1] - base[1], cur[2] - base[2]
+
+    def hist_count(self, name: str) -> int:
+        return self._hist_delta(name)[1]
+
+    def hist_mean(self, name: str) -> float:
+        _, n, s = self._hist_delta(name)
+        return s / n if n else 0.0
+
+    def percentile(self, name: str, q: float) -> float:
+        """Windowed interpolated percentile — total at every population
+        size (0 observations -> 0.0; see ``percentile_from_state``)."""
+        dcounts, n, _ = self._hist_delta(name)
+        if dcounts is None or n <= 0:
+            return 0.0
+        return percentile_from_state(self._buckets[name], dcounts, q)
+
+    # -- export -----------------------------------------------------------
+    def dump(self) -> dict:
+        """JSON-able windowed snapshot (the ``windows`` section of the
+        exporter payload)."""
+        out = {
+            "requested_s": self.requested, "span_s": self.span,
+            "start": self.start, "end": self.end,
+            "counters": {}, "gauges": dict(self._cur.gauges),
+            "histograms": {},
+        }
+        for name in self._cur.counters:
+            out["counters"][name] = {
+                "delta": self.counter_delta(name), "rate": self.rate(name)}
+        for name in self._cur.hists:
+            out["histograms"][name] = {
+                "count": self.hist_count(name),
+                "mean": self.hist_mean(name),
+                "p50": self.percentile(name, 50),
+                "p90": self.percentile(name, 90),
+                "p99": self.percentile(name, 99),
+            }
+        return out
+
+
+class WindowedAggregator:
+    """Ring buffer of cumulative registry snapshots; windowed queries.
+
+    ``tick()`` once per scheduling round; ``window(seconds)`` any time.
+    Thread-safe: samples are immutable once appended and the ring is
+    lock-guarded.
+    """
+
+    enabled = True
+
+    def __init__(self, registry, *,
+                 clock: Callable[[], float] = time.monotonic,
+                 max_window: float = 900.0, max_samples: int = 4096):
+        if max_window <= 0:
+            raise ValueError("max_window must be > 0")
+        self.registry = registry
+        self.clock = clock
+        self.max_window = float(max_window)
+        self.max_samples = int(max_samples)
+        # parallel lists (not a deque): baseline lookup is a bisect on
+        # _times — O(log n) per window query instead of a ring scan,
+        # which matters because the SLO monitor queries every round
+        self._samples: list[_Sample] = []
+        self._times: list[float] = []
+        self._buckets: dict[str, tuple] = {}   # histogram name -> edges
+        self._lock = threading.Lock()
+        # seed the ring with a construction-time baseline so activity
+        # between construction and the first tick is windowed too
+        self.tick()
+
+    def _snap(self, t: float) -> _Sample:
+        counters: dict[str, int] = {}
+        gauges: dict[str, float] = {}
+        hists: dict[str, tuple] = {}
+        for name, m in self.registry.metrics():
+            if isinstance(m, Counter):
+                counters[name] = m.value
+            elif isinstance(m, Gauge):
+                gauges[name] = m.value
+            elif isinstance(m, Histogram):
+                hists[name] = m.raw()
+                if name not in self._buckets:
+                    self._buckets[name] = m.buckets
+        return _Sample(t, counters, gauges, hists)
+
+    def tick(self) -> None:
+        """Record one cumulative sample at the injected clock's now."""
+        t = self.clock()
+        s = self._snap(t)
+        with self._lock:
+            self._samples.append(s)
+            self._times.append(t)
+            horizon = t - self.max_window
+            # keep one sample at or before the horizon: it is the
+            # baseline of a full-width window
+            drop = 0
+            n = len(self._samples)
+            while drop < n - 1 and (
+                    self._times[drop + 1] <= horizon
+                    or n - drop > self.max_samples):
+                drop += 1
+            if drop:
+                del self._samples[:drop]
+                del self._times[:drop]
+
+    @property
+    def samples(self) -> int:
+        return len(self._samples)
+
+    def window(self, seconds: float, *, fresh: bool = True) -> WindowView:
+        """The last ``seconds`` seconds, ending at a fresh snapshot of
+        now. Baseline is the newest sample at or before the window
+        start (a bisect); while the ring is younger than the window the
+        oldest sample serves (``view.span`` tells the actual coverage).
+        ``fresh=False`` ends the window at the newest *ticked* sample
+        instead of taking a new snapshot — the SLO monitor runs right
+        after ``tick()`` every round, where the newest sample IS now and
+        re-snapshotting the whole registry per query would quintuple the
+        per-round cost."""
+        if not fresh:
+            with self._lock:
+                if self._samples:
+                    cur = self._samples[-1]
+                    now = cur.t
+                else:
+                    cur = None
+            if cur is None:
+                return self.window(seconds)
+        else:
+            now = self.clock()
+            cur = self._snap(now)
+        start_t = now - float(seconds)
+        with self._lock:
+            i = bisect.bisect_right(self._times, start_t) - 1
+            base = self._samples[max(i, 0)] if self._samples else None
+        if base is None:
+            # never ticked: treat the fresh snapshot as both ends so
+            # deltas are zero rather than all-of-history
+            base = _Sample(now, cur.counters, cur.gauges, cur.hists)
+        return WindowView(base, cur, buckets=self._buckets,
+                          requested=seconds)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._samples.clear()
+            self._times.clear()
+
+
+class NullWindowedAggregator:
+    """``obs=False`` twin: no samples, empty windows, free ``tick``."""
+
+    enabled = False
+
+    def __init__(self, *_, **__):
+        pass
+
+    def tick(self) -> None:
+        pass
+
+    @property
+    def samples(self) -> int:
+        return 0
+
+    def window(self, seconds: float, *, fresh: bool = True) -> WindowView:
+        return WindowView(_EMPTY, _EMPTY, buckets={}, requested=seconds)
+
+    def reset(self) -> None:
+        pass

@@ -196,6 +196,11 @@ class DeviceBlackout(FaultInjector):
             return
         if scheduler._device_active(self.device) < self.min_active:
             return
+        # black-box note BEFORE the strike: a flight capture of the
+        # resulting quarantine shows the injection that caused it
+        scheduler.obs.flight.note(
+            "fault", device=self.device, tag=self.tag,
+            step=scheduler._steps)
         scheduler.inject_device_fault(self.device)
         self.fired = True
 

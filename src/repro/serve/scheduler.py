@@ -379,7 +379,8 @@ class UOTScheduler:
                  sliced_n_proj: int = 32, sliced_seed: int = 0,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
-                 obs: "obslib.Observability | bool | None" = None):
+                 obs: "obslib.Observability | bool | None" = None,
+                 slos=None, op_interval: int = 4):
         if lanes_per_pool < 1:
             raise ValueError("lanes_per_pool must be >= 1")
         if chunk_iters < 1:
@@ -472,6 +473,27 @@ class UOTScheduler:
             obs = obslib.Observability(enabled=False, clock=clock,
                                        chain=False)
         self.obs = obs
+        # Operational plane (repro.obs "Operational telemetry"): rolling
+        # windows over this registry, burn-rate SLO alerting (``slos=``,
+        # a list of obslib.SLO — empty by default so nothing pages
+        # unless objectives were declared), and the black-box flight
+        # recorder, all on THIS scheduler's clock. A firing alert
+        # freezes the flight ring (_on_alert). Null twins under
+        # obs=False — the per-round hook costs three no-op calls. A
+        # bundle that already carries a plane (caller attached their
+        # own) is kept unless this scheduler declares objectives.
+        if not obs.windows.enabled or slos:
+            obs.attach_operational(slos=slos or (), clock=clock,
+                                   on_alert=(self._on_alert,))
+        self.flight = obs.flight
+        self.exporter = obs.exporter
+        # window tick + SLO evaluation run every ``op_interval`` rounds
+        # (and whenever the scheduler drains): the full-registry
+        # snapshot is the plane's only per-round O(metrics) cost, and
+        # decimating it keeps the whole plane inside bench_obs's <= 5%
+        # bar without losing alerting resolution (burn-rate windows are
+        # many rounds wide by construction)
+        self.op_interval = max(1, int(op_interval))
         reg = obs.registry
         self._c = {k: reg.counter("serve." + k) for k in _COUNTER_NAMES}
         self._h_wait = reg.histogram("serve.wait_s")
@@ -535,6 +557,14 @@ class UOTScheduler:
         while len(self._dispositions) > self.max_log:
             self._dispositions.pop(next(iter(self._dispositions)))
             self._c["window_dropped_dispositions"].inc()
+        fl = self.obs.flight
+        if fl.enabled:
+            fl.note("failure", rid=failure.rid, status=failure.status)
+            if failure.status == "failed":
+                # dump_on RequestFailure: an unrecovered fault is an
+                # incident — freeze the rounds that led up to it
+                fl.dump("request_failure",
+                        reason=f"rid {failure.rid}: {failure.reason}")
 
     def _log_request(self, rec: RequestTelemetry) -> None:
         """THE append path for request telemetry: append, then trim to
@@ -678,6 +708,7 @@ class UOTScheduler:
             self._c["shed_degraded"].inc()
         self._c_degrade[level].inc()
         self.obs.tracer.emit(req.rid, "degrade", level=level)
+        self.obs.flight.note("degrade", rid=req.rid, level=level)
         if level == 1:
             req.max_iters = min(self.cfg.num_iters, self.degrade_iters)
             req.est_error = estimate_truncation_error(
@@ -713,6 +744,8 @@ class UOTScheduler:
         fault = None
         if self.fault_injector is not None:
             K, a, b, fault = self.fault_injector.on_submit(rid, K, a, b)
+            if fault is not None:
+                self.obs.flight.note("fault", rid=rid, tag=fault)
         M, N = K.shape
         bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
         now = self.clock()
@@ -766,6 +799,8 @@ class UOTScheduler:
         fault = None
         if self.fault_injector is not None:
             _, a, b, fault = self.fault_injector.on_submit(rid, None, a, b)
+            if fault is not None:
+                self.obs.flight.note("fault", rid=rid, tag=fault)
         bucket = ops.bucket_shape(M, N, self.m_bucket, self.n_bucket)
         now = self.clock()
         self._c["submitted"].inc()
@@ -874,7 +909,35 @@ class UOTScheduler:
                         del self._pools[bucket]
         self._steps += 1
         self._snapshot_occupancy()
+        self._operational_round()
         return completed
+
+    def _on_alert(self, alert) -> None:
+        """SLO alert routing beyond the monitor's own (registry +
+        tracer): note the transition in the black box and freeze it the
+        moment an alert fires — the capture holds the rounds that led
+        up to the breach."""
+        fl = self.obs.flight
+        fl.note("alert", slo=alert.name, state=alert.state,
+                burn=alert.burn_fast)
+        if alert.state == "firing":
+            fl.dump(f"alert:{alert.name}", reason=alert.describe())
+
+    def _operational_round(self) -> None:
+        """Per-round operational-plane upkeep: close the flight
+        recorder's round, tick the rolling windows, evaluate SLO burn
+        rates. All three are null twins under obs=False."""
+        obs = self.obs
+        if obs.flight.enabled:
+            obs.flight.record_round(
+                self._steps, queued=len(self._queue),
+                in_flight=self.in_flight,
+                occupancy=self._g_occupancy.value,
+                deadline_misses=self._c["deadline_misses"].value)
+        if (self._steps % self.op_interval == 0
+                or (not self.in_flight and not self.pending)):
+            obs.windows.tick()
+            obs.slo.evaluate()
 
     def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
         """Step until queue and lanes drain (or ``max_steps`` *additional*
@@ -1014,6 +1077,8 @@ class UOTScheduler:
                     self._c["timed_out"].inc(int(timed_out))
                 else:
                     self._c["unhealthy_evictions"].inc()
+                    self.obs.flight.note("unhealthy", rid=req.rid,
+                                         lane=lane)
                     tr.emit(req.rid, "escalate", retries=req.retries + 1)
                     P, n_iters = self._escalate(req)
                     status = "retried_ok" if P is not None else "failed"
@@ -1121,6 +1186,7 @@ class UOTScheduler:
                 iters=0, converged=False, deadline=req.deadline,
                 shed="dropped", status="rejected"))
             self.obs.tracer.emit(req.rid, "shed", policy="drop")
+            self.obs.flight.note("shed", rid=req.rid, policy="drop")
             self.obs.tracer.emit(req.rid, "complete", status="rejected",
                                  reason="deadline passed at admission "
                                         "(shed_policy='drop')")
@@ -1213,6 +1279,7 @@ class UOTScheduler:
             placements.setdefault(req.bucket, []).append((lane, req))
             pool.requests[lane] = req
             pool.admitted_at[lane] = now
+            self.obs.flight.note("place", rid=req.rid, lane=lane)
             self.obs.tracer.emit(req.rid, "place", lane=lane, device=-1,
                                  bucket=list(req.bucket), route="lane")
         for bucket, placed in placements.items():
